@@ -1,0 +1,28 @@
+//! Decode-latency micro-probe used by the §Perf L3 pass (EXPERIMENTS.md):
+//! measures the per-step decode wall-clock across batch sizes on the fp
+//! graphs. `SQ_KV_HOST_PATH=1` forces the pre-optimization KV host path
+//! for A/B comparison.
+use std::sync::Arc;
+use singlequant::model::Weights;
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::util::sqt::SqtFile;
+fn main() {
+    let dir = "artifacts";
+    let engine = Arc::new(Engine::new(dir).unwrap());
+    let cfg = engine.config("sq-m").unwrap();
+    let w = Weights::load(&format!("{dir}/ckpt/sq-m.sqt")).unwrap();
+    let toks = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt")).unwrap()
+        .get("tokens").unwrap().as_u16().unwrap().to_vec();
+    let qm = quantize(&cfg, &w, &toks, &PipelineOptions{method: Method::Fp16, ..Default::default()}).unwrap();
+    let runner = ModelRunner::new(engine, &qm).unwrap();
+    for b in [1usize, 4, 16, 32] {
+        let ptoks = vec![0i32; b*96];
+        let (_l, mut kv) = runner.prefill(b, &ptoks).unwrap();
+        let step = vec![0i32; b]; let pos = vec![5i32; b];
+        runner.decode(&mut kv, &step, &pos).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..10 { runner.decode(&mut kv, &step, &pos).unwrap(); }
+        println!("decode b{b}: {:.2}ms", t0.elapsed().as_secs_f64()/10.0*1e3);
+    }
+}

@@ -1,0 +1,69 @@
+//! Method bake-off on one model: run every pre-quantization transform the
+//! paper evaluates through the full pipeline and print quantization time,
+//! rotated-activation quantization error, and end-to-end perplexity.
+//!
+//!     cargo run --release --example quantize_model [artifacts_dir] [model]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use singlequant::eval::ppl::perplexity;
+use singlequant::model::Weights;
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::util::bench::Table;
+use singlequant::util::sqt::SqtFile;
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let dir = args.next().unwrap_or_else(|| "artifacts".into());
+    let model = args.next().unwrap_or_else(|| "sq-m".into());
+
+    let engine = Arc::new(Engine::new(&dir)?);
+    let cfg = engine.config(&model)?;
+    let weights = Weights::load(&format!("{dir}/ckpt/{model}.sqt"))?;
+    let calib = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))?
+        .get("tokens")?.as_u16()?.to_vec();
+    let eval = SqtFile::load(&format!("{dir}/data/corpus_wiki_eval.sqt"))?
+        .get("tokens")?.as_u16()?.to_vec();
+
+    let methods: Vec<Method> = vec![
+        Method::Fp16,
+        Method::Rtn,
+        Method::SmoothQuant { alpha: 0.5 },
+        Method::Awq { grid: 10 },
+        Method::QuaRot,
+        Method::DuQuant { steps: 16 },
+        Method::SpinQuant { steps: 100 },
+        Method::FlatQuant { steps: 60 },
+        Method::singlequant(),
+    ];
+
+    let mut table = Table::new(
+        &format!("W4A4 method bake-off on {model}"),
+        &["method", "quant time (s)", "wiki ppl↓", "mean rot defect"],
+    );
+    for method in methods {
+        let label = method.label();
+        let opts = PipelineOptions { method, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let qm = quantize(&cfg, &weights, &calib, &opts)?;
+        let qt = t0.elapsed().as_secs_f64();
+        let runner = ModelRunner::new(engine.clone(), &qm)?;
+        let ppl = perplexity(&runner, &eval, cfg.score_seq, 8)?;
+        let defect = if qm.rots.is_empty() {
+            0.0
+        } else {
+            qm.rots.values().map(|r| r.defect()).sum::<f32>() / qm.rots.len() as f32
+        };
+        println!("  {label}: {qt:.2}s, ppl {ppl:.3}");
+        table.row(vec![
+            label,
+            format!("{qt:.3}"),
+            format!("{ppl:.3}"),
+            format!("{defect:.2e}"),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

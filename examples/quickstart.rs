@@ -1,0 +1,70 @@
+//! Quickstart: quantize a trained checkpoint with SingleQuant and compare
+//! W4A4 perplexity against FP16 through the PJRT runtime.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (data generation + pretraining + AOT
+//! lowering) to have been run once.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use singlequant::eval::ppl::perplexity;
+use singlequant::model::Weights;
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::util::sqt::SqtFile;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let model = "sq-m";
+
+    // 1. Load the engine (PJRT CPU client + artifact manifest) and model.
+    let engine = Arc::new(Engine::new(&dir)?);
+    let cfg = engine.config(model)?;
+    let weights = Weights::load(&format!("{dir}/ckpt/{model}.sqt"))?;
+    println!("loaded {model}: {} parameters", weights.n_params());
+
+    // 2. Calibration data: a slice of the training corpus.
+    let calib = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))?
+        .get("tokens")?
+        .as_u16()?
+        .to_vec();
+
+    // 3. Quantize: one calibration pass + closed-form rotations. No
+    //    gradient optimization anywhere — watch the wall-clock.
+    let t0 = std::time::Instant::now();
+    let qm = quantize(&cfg, &weights, &calib, &PipelineOptions {
+        method: Method::singlequant(),
+        ..Default::default()
+    })?;
+    println!(
+        "SingleQuant W4A4 quantization took {:.2}s \
+         (calib {:.2}s, rotations {:.3}s, weights {:.2}s)",
+        t0.elapsed().as_secs_f64(),
+        qm.calib_seconds,
+        qm.transform_seconds,
+        qm.weight_quant_seconds,
+    );
+    println!(
+        "packed weight storage: {:.2} MB (fp32 would be {:.2} MB)",
+        qm.packed_bytes as f64 / 1e6,
+        (weights.n_params() * 4) as f64 / 1e6,
+    );
+
+    // 4. Evaluate both the fp and quantized graphs end to end.
+    let eval = SqtFile::load(&format!("{dir}/data/corpus_wiki_eval.sqt"))?
+        .get("tokens")?
+        .as_u16()?
+        .to_vec();
+    let fp = quantize(&cfg, &weights, &calib, &PipelineOptions {
+        method: Method::Fp16,
+        ..Default::default()
+    })?;
+    let fp_runner = ModelRunner::new(engine.clone(), &fp)?;
+    let q_runner = ModelRunner::new(engine, &qm)?;
+    let ppl_fp = perplexity(&fp_runner, &eval, cfg.score_seq, 8)?;
+    let ppl_q = perplexity(&q_runner, &eval, cfg.score_seq, 8)?;
+    println!("perplexity: fp32 {ppl_fp:.3}  |  W4A4+SingleQuant {ppl_q:.3}");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! End-to-end serving driver (the repo's headline validation): quantize a
+//! real trained model, bring up the continuous-batching coordinator on the
+//! W4A4 PJRT graphs, push a bursty synthetic request trace through it, and
+//! report latency/throughput — then run the same trace against the fp32
+//! graphs for comparison.
+//!
+//!     cargo run --release --example serve_e2e [artifacts_dir]
+//!
+//! Everything on the request path is Rust + PJRT; Python was only involved
+//! at build time.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use singlequant::coordinator::{Request, ServeConfig, ServeEngine};
+use singlequant::model::Weights;
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::util::rng::Rng;
+use singlequant::util::sqt::SqtFile;
+
+const MODEL: &str = "sq-m";
+const BATCH: usize = 4;
+const N_REQUESTS: usize = 24;
+
+fn trace(corpus: &[u16], n: usize) -> Vec<Request> {
+    let mut rng = Rng::new(99);
+    (0..n)
+        .map(|id| {
+            let start = rng.below(corpus.len() - 96);
+            let len = 12 + rng.below(60);
+            Request {
+                id: id as u64,
+                prompt_tokens: corpus[start..start + len].to_vec(),
+                max_new_tokens: 8 + rng.below(24),
+                temperature: if id % 3 == 0 { Some(0.8) } else { None },
+            }
+        })
+        .collect()
+}
+
+fn serve_with(engine: Arc<Engine>, method: Method, corpus: &[u16],
+              calib: &[u16]) -> Result<()> {
+    let cfg = engine.config(MODEL)?;
+    let weights = Weights::load(&format!("{}/ckpt/{MODEL}.sqt", engine.dir))?;
+    let label = method.label();
+    let qm = quantize(&cfg, &weights, calib, &PipelineOptions {
+        method,
+        ..Default::default()
+    })?;
+    let runner = Arc::new(ModelRunner::new(engine, &qm)?);
+    let mut serve = ServeEngine::new(
+        runner,
+        ServeConfig { batch: BATCH, max_new_cap: 32, seed: 7 },
+    );
+    for req in trace(corpus, N_REQUESTS) {
+        serve.submit(req);
+    }
+    let responses = serve.run_to_completion()?;
+    println!("--- {label} ---");
+    println!("{}", serve.metrics.summary());
+    // show a few generations
+    for r in responses.iter().take(3) {
+        let preview: String = r.text.chars().take(60).collect();
+        println!("  req {:>2} ({:>2} prompt tok, {:>2} gen): {preview:?}",
+                 r.id, r.prompt_len, r.tokens.len());
+    }
+    println!();
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let engine = Arc::new(Engine::new(&dir)?);
+    let corpus = SqtFile::load(&format!("{dir}/data/corpus_wiki_eval.sqt"))?
+        .get("tokens")?
+        .as_u16()?
+        .to_vec();
+    let calib = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))?
+        .get("tokens")?
+        .as_u16()?
+        .to_vec();
+
+    println!("serving {N_REQUESTS} requests, continuous batching, batch={BATCH}\n");
+    serve_with(engine.clone(), Method::singlequant(), &corpus, &calib)?;
+    serve_with(engine, Method::Fp16, &corpus, &calib)?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Weight-only quantization walk-through (Table B.3): sweep W4A16 and
+//! W3A16 across weight quantizers, showing where plain RTN collapses and
+//! how GPTQ's error compensation / SingleQuant's rotations recover it.
+//!
+//!     cargo run --release --example weight_only [artifacts_dir]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use singlequant::eval::ppl::perplexity;
+use singlequant::model::Weights;
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::quant::WeightQuantizer;
+use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::util::bench::Table;
+use singlequant::util::sqt::SqtFile;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let model = "sq-m";
+    let engine = Arc::new(Engine::new(&dir)?);
+    let cfg = engine.config(model)?;
+    let weights = Weights::load(&format!("{dir}/ckpt/{model}.sqt"))?;
+    let calib = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))?
+        .get("tokens")?.as_u16()?.to_vec();
+    let eval = SqtFile::load(&format!("{dir}/data/corpus_wiki_eval.sqt"))?
+        .get("tokens")?.as_u16()?.to_vec();
+
+    let rows: Vec<(&str, Method, WeightQuantizer)> = vec![
+        ("RTN", Method::Rtn, WeightQuantizer::Rtn),
+        ("GPTQ", Method::Rtn, WeightQuantizer::Gptq),
+        ("GPTQ-g32", Method::Rtn, WeightQuantizer::GptqGrouped(32)),
+        ("AWQ", Method::Awq { grid: 10 }, WeightQuantizer::Rtn),
+        ("SingleQuant", Method::singlequant(), WeightQuantizer::Rtn),
+    ];
+    let mut table = Table::new(
+        "weight-only perplexity (wiki eval)",
+        &["method", "W4A16↓", "W3A16↓"],
+    );
+    for (label, method, wq) in rows {
+        let mut cells = vec![label.to_string()];
+        for bits in [4u32, 3] {
+            let opts = PipelineOptions {
+                method: method.clone(),
+                weight_quantizer: wq,
+                weight_bits: bits,
+                act_bits: 16,
+                ..Default::default()
+            };
+            let qm = quantize(&cfg, &weights, &calib, &opts)?;
+            let runner = ModelRunner::new(engine.clone(), &qm)?;
+            let ppl = perplexity(&runner, &eval, cfg.score_seq, 8)?;
+            println!("{label} W{bits}A16: ppl {ppl:.3}");
+            cells.push(format!("{ppl:.3}"));
+        }
+        table.row(cells);
+    }
+    table.print();
+    Ok(())
+}

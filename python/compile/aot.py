@@ -1,0 +1,215 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts for the Rust runtime.
+
+HLO **text** (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.
+
+For every artifact we also emit a `.layout.json` describing the exact
+positional input list (data inputs first, then parameters in
+`model.param_layout` order) and the output arity, plus a global
+`manifest.json` the Rust side uses as its single source of truth for model
+configs and artifact paths.
+
+Run once via `make artifacts`; the Rust binary is self-contained afterwards.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import kernels
+from . import model as M
+
+SCORE_B = 4          # fixed batch of the score graph
+SERVE_CFG = "sq-m"   # the serving / Fig-3 model
+SERVE_BATCHES = [1, 4, 16, 32]
+LONG_B, LONG_T = 2, 448  # few-shot (MMLU) scoring graph, sq-m only
+KBENCH_T, KBENCH_N = 128, 256  # kernel micro-bench shape
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants is load-bearing: the default printer elides
+    # constants over ~1k elements as `{...}`, which xla_extension 0.5.1's
+    # text parser accepts SILENTLY and fills with garbage — e.g. the RoPE
+    # cos/sin tables of any model with d_head > 16 came back corrupted.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _param_specs(cfg: M.ModelConfig, mode: str) -> List[jax.ShapeDtypeStruct]:
+    return [_spec(M.param_shape(cfg, n)) for n in M.param_layout(cfg, mode)]
+
+
+def _layout_entry(name: str, spec: jax.ShapeDtypeStruct) -> dict:
+    return {"name": name, "shape": [int(d) for d in spec.shape],
+            "dtype": "i32" if spec.dtype == jnp.int32 else "f32"}
+
+
+def lower_artifact(out_dir: str, fname: str, fn: Callable,
+                   data_specs: List[tuple], cfg: M.ModelConfig, mode: str,
+                   n_outputs: int, meta: dict) -> dict:
+    """Lower `fn(data..., *params)` and write .hlo.txt + .layout.json."""
+    specs = [s for _, s in data_specs] + _param_specs(cfg, mode)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{fname}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    layout = {
+        "inputs": ([_layout_entry(n, s) for n, s in data_specs]
+                   + [_layout_entry(n, s) for n, s in
+                      zip(M.param_layout(cfg, mode), _param_specs(cfg, mode))]),
+        "n_outputs": n_outputs,
+        **meta,
+    }
+    with open(os.path.join(out_dir, f"{fname}.layout.json"), "w") as f:
+        json.dump(layout, f)
+    print(f"  {fname}: {len(text) // 1024} KiB HLO ({time.time() - t0:.1f}s)",
+          flush=True)
+    return {"file": f"{fname}.hlo.txt", "layout": f"{fname}.layout.json", **meta}
+
+
+def lower_config(cfg: M.ModelConfig, out_dir: str, serve: bool) -> List[dict]:
+    arts = []
+    t, tmax = cfg.score_seq, cfg.max_seq
+
+    for mode in ("fp", "w4a4", "w4a16", "w4a4s"):
+        def score_fn(tokens, *flat, _mode=mode):
+            return M.score_graph(cfg, _mode, tokens, *flat)
+
+        arts.append(lower_artifact(
+            out_dir, f"{cfg.name}_score_{mode}_b{SCORE_B}", score_fn,
+            [("in.tokens", _spec((SCORE_B, t), jnp.int32))], cfg, mode, 1,
+            {"config": cfg.name, "graph": "score", "mode": mode,
+             "batch": SCORE_B, "seq": t}))
+        if serve:  # the MMLU (Vicuna) model also gets a long-context scorer
+            arts.append(lower_artifact(
+                out_dir, f"{cfg.name}_scorelong_{mode}_b{LONG_B}", score_fn,
+                [("in.tokens", _spec((LONG_B, LONG_T), jnp.int32))], cfg,
+                mode, 1,
+                {"config": cfg.name, "graph": "scorelong", "mode": mode,
+                 "batch": LONG_B, "seq": LONG_T}))
+
+    if serve:
+        for mode in ("fp", "w4a4"):
+            for b in SERVE_BATCHES:
+                def prefill_fn(tokens, *flat, _mode=mode):
+                    return M.prefill_graph(cfg, _mode, tokens, *flat)
+
+                def decode_fn(token, pos, kc, vc, *flat, _mode=mode):
+                    return M.decode_graph(cfg, _mode, token, pos, kc, vc, *flat)
+
+                kv = _spec((cfg.n_layers, b, cfg.n_heads, tmax, cfg.d_head))
+                arts.append(lower_artifact(
+                    out_dir, f"{cfg.name}_prefill_{mode}_b{b}", prefill_fn,
+                    [("in.tokens", _spec((b, t), jnp.int32))], cfg, mode, 3,
+                    {"config": cfg.name, "graph": "prefill", "mode": mode,
+                     "batch": b, "seq": t}))
+                arts.append(lower_artifact(
+                    out_dir, f"{cfg.name}_decode_{mode}_b{b}", decode_fn,
+                    [("in.token", _spec((b,), jnp.int32)),
+                     ("in.pos", _spec((b,), jnp.int32)),
+                     ("in.kcache", kv), ("in.vcache", kv)],
+                    cfg, mode, 3,
+                    {"config": cfg.name, "graph": "decode", "mode": mode,
+                     "batch": b, "seq": tmax}))
+    return arts
+
+
+def lower_kernel_benches(out_dir: str) -> List[dict]:
+    """Standalone L1 kernel graphs for Rust-side micro-benchmarks."""
+    arts = []
+    t, n = KBENCH_T, KBENCH_N
+    n1, n2 = M.kron_factor(n)
+    cases = [
+        ("kernel_kron", lambda x, r1, r2: (kernels.kron_rotate(x, r1, r2),),
+         [("in.x", _spec((t, n))), ("in.r1", _spec((n1, n1))),
+          ("in.r2", _spec((n2, n2)))]),
+        ("kernel_dense_rotate", lambda x, r: (x @ r,),
+         [("in.x", _spec((t, n))), ("in.r", _spec((n, n)))]),
+        ("kernel_qmm", lambda x, w: (kernels.quant_matmul(x, w, bits=4),),
+         [("in.x", _spec((t, n))), ("in.w", _spec((n, n)))]),
+        ("kernel_mm", lambda x, w: (x @ w,),
+         [("in.x", _spec((t, n))), ("in.w", _spec((n, n)))]),
+        ("kernel_hadamard", lambda x: (kernels.hadamard(x),),
+         [("in.x", _spec((t, n)))]),
+    ]
+    for name, fn, data in cases:
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[s for _, s in data])
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        layout = {"inputs": [_layout_entry(nm, s) for nm, s in data],
+                  "n_outputs": 1, "graph": name}
+        with open(os.path.join(out_dir, f"{name}.layout.json"), "w") as f:
+            json.dump(layout, f)
+        arts.append({"file": f"{name}.hlo.txt", "layout": f"{name}.layout.json",
+                     "graph": name, "config": None, "mode": None,
+                     "batch": t, "seq": None})
+        print(f"  {name}: {len(text) // 1024} KiB ({time.time() - t0:.1f}s)",
+              flush=True)
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = (args.only.split(",") if args.only else
+             ["sq-s", "sq-m", "sq-l", "sq-xl", "sq-moe"])
+    artifacts: List[dict] = []
+    for name in names:
+        cfg = M.CONFIGS[name]
+        print(f"lowering {name} ...", flush=True)
+        artifacts += lower_config(cfg, args.out, serve=(name == SERVE_CFG))
+    print("lowering kernel benches ...", flush=True)
+    artifacts += lower_kernel_benches(args.out)
+
+    configs = {}
+    for name, cfg in M.CONFIGS.items():
+        n1d, n2d = M.kron_factor(cfg.d_model)
+        n1f, n2f = M.kron_factor(cfg.d_ff)
+        configs[name] = {
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+            "vocab_size": cfg.vocab_size, "max_seq": cfg.max_seq,
+            "score_seq": cfg.score_seq, "rope_theta": cfg.rope_theta,
+            "n_experts": cfg.n_experts, "top_k": cfg.top_k,
+            "kron_d": [n1d, n2d], "kron_ff": [n1f, n2f],
+            # chat shares sq-m graphs
+            "artifact_config": "sq-m" if name == "sq-m-chat" else name,
+        }
+    manifest = {
+        "version": 1, "score_batch": SCORE_B, "serve_config": SERVE_CFG,
+        "serve_batches": SERVE_BATCHES, "configs": configs,
+        "long_batch": LONG_B, "long_seq": LONG_T,
+        "artifacts": artifacts,
+        "kbench": {"t": KBENCH_T, "n": KBENCH_N},
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,405 @@
+"""Synthetic-world data generation for the SingleQuant reproduction.
+
+The paper evaluates on WikiText-2 / C4 perplexity, six zero-shot QA tasks,
+MMLU, and instruction-tuned (Vicuna) models. None of those corpora are
+available in this offline environment, so we build a deterministic synthetic
+world that preserves the *measurement structure* of the paper's evaluation
+(see DESIGN.md §Substitutions):
+
+* a knowledge base of entities with attributes (color, city, craft, trait,
+  animal, tool, number, ally),
+* a low-entropy "wiki-like" corpus and a higher-entropy "web-like" corpus
+  rendering those facts through sentence templates (standing in for
+  WikiText-2 and C4),
+* six multiple-choice QA suites mirroring ARC-E/ARC-C/HellaSwag/LAMBADA/
+  PIQA/WinoGrande in format and graded difficulty,
+* a four-domain MMLU-like suite with 0-shot and 5-shot variants,
+* an instruction-formatted corpus for the chat (Vicuna-like) variant.
+
+Everything is produced by `python -m compile.data --out ../artifacts/data`
+at build time; the Rust side only ever reads the emitted token files and
+JSON — the generators never run at inference time.
+
+Tokenization is byte-level: ids 0..255 are raw bytes, 256=BOS, 257=EOS,
+258=PAD. `VOCAB_SIZE` is padded to 260.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from . import sqt
+
+BOS, EOS, PAD = 256, 257, 258
+VOCAB_SIZE = 260
+
+# ---------------------------------------------------------------------------
+# Tokenizer (byte level; the Rust twin is rust/src/coordinator/tokenizer.rs)
+# ---------------------------------------------------------------------------
+
+
+def encode(text: str, bos: bool = False, eos: bool = False) -> List[int]:
+    ids = list(text.encode("utf-8"))
+    if bos:
+        ids = [BOS] + ids
+    if eos:
+        ids = ids + [EOS]
+    return ids
+
+
+def decode(ids) -> str:
+    return bytes(i for i in ids if i < 256).decode("utf-8", errors="replace")
+
+
+# ---------------------------------------------------------------------------
+# Knowledge base
+# ---------------------------------------------------------------------------
+
+_SYL_A = ["zor", "min", "tal", "ver", "bek", "lun", "dra", "pol", "sar", "nim",
+          "kel", "fos", "gri", "hul", "jav", "rud"]
+_SYL_B = ["ba", "ti", "ko", "ma", "re", "su", "vi", "no", "la", "du"]
+_SYL_C = ["l", "n", "k", "r", "s", "x", "m", "t"]
+
+COLORS = ["red", "blue", "green", "amber", "violet", "ivory", "teal", "black",
+          "white", "copper", "silver", "crimson"]
+CITIES = ["varno", "lumis", "ketra", "ostin", "perla", "quom", "rilva",
+          "sunda", "tolme", "ubrik", "velda", "wistra"]
+CRAFTS = ["weaving", "smithing", "carving", "glazing", "brewing", "mapping",
+          "binding", "fletching"]
+TRAITS = ["patient", "stubborn", "curious", "gentle", "bold", "quiet",
+          "clever", "honest"]
+ANIMALS = ["heron", "lynx", "otter", "falcon", "marten", "ibex", "crane",
+           "badger"]
+TOOLS = {  # craft -> tool (the PIQA-like procedural association)
+    "weaving": "loom", "smithing": "anvil", "carving": "chisel",
+    "glazing": "kiln", "brewing": "kettle", "mapping": "compass",
+    "binding": "awl", "fletching": "jig",
+}
+MATERIALS = ["flax", "ore", "oak", "clay", "barley", "vellum", "hide", "cedar"]
+
+N_ENTITIES = 160
+N_COMMON = 48  # high-frequency entities (easy-task pool)
+
+
+class World:
+    """Deterministic entity/attribute knowledge base."""
+
+    def __init__(self, seed: int = 7):
+        rng = np.random.default_rng(seed)
+        self.names: List[str] = []
+        seen = set()
+        while len(self.names) < N_ENTITIES:
+            n = (rng.choice(_SYL_A) + rng.choice(_SYL_B) + rng.choice(_SYL_C))
+            if n not in seen:
+                seen.add(n)
+                self.names.append(n)
+        self.color = {n: COLORS[int(rng.integers(len(COLORS)))] for n in self.names}
+        self.city = {n: CITIES[int(rng.integers(len(CITIES)))] for n in self.names}
+        self.craft = {n: CRAFTS[int(rng.integers(len(CRAFTS)))] for n in self.names}
+        self.trait = {n: TRAITS[int(rng.integers(len(TRAITS)))] for n in self.names}
+        self.animal = {n: ANIMALS[int(rng.integers(len(ANIMALS)))] for n in self.names}
+        self.number = {n: int(rng.integers(2, 60)) for n in self.names}
+        self.material = {n: MATERIALS[int(rng.integers(len(MATERIALS)))] for n in self.names}
+        allies = rng.permutation(N_ENTITIES)
+        self.ally = {self.names[i]: self.names[int(allies[i])] for i in range(N_ENTITIES)}
+        self.common = self.names[:N_COMMON]
+        self.rare = self.names[N_COMMON:]
+
+    # -- sentence renderers --------------------------------------------------
+    def fact_sentences(self, n: str) -> List[str]:
+        c = self
+        return [
+            f"the {c.craft[n]} master {n} of {c.city[n]} kept a {c.color[n]} {c.animal[n]} .",
+            f"{n} was known in {c.city[n]} for being {c.trait[n]} .",
+            f"every morning {n} fed the {c.color[n]} {c.animal[n]} near the gates of {c.city[n]} .",
+            f"to practice {c.craft[n]} , {n} used a {TOOLS[c.craft[n]]} made of {c.material[n]} .",
+            f"{n} measured {c.number[n]} units of {c.material[n]} for the guild .",
+            f"the oldest friend of {n} was {c.ally[n]} , who lived in {c.city[c.ally[n]]} .",
+            f"in {c.city[n]} , {n} studied the art of {c.craft[n]} for many years .",
+            f"people said the {c.animal[n]} of {n} had {c.color[n]} feathers and a {c.trait[n]} keeper .",
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Corpora
+# ---------------------------------------------------------------------------
+
+
+def _pick_entity(world: World, rng) -> str:
+    # 70% of mentions go to common entities -> frequency-graded difficulty.
+    if rng.random() < 0.7:
+        return world.common[int(rng.integers(len(world.common)))]
+    return world.rare[int(rng.integers(len(world.rare)))]
+
+
+def gen_wiki_corpus(world: World, n_sentences: int, seed: int) -> str:
+    """Low-entropy factual corpus (WikiText-2 stand-in)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_sentences):
+        n = _pick_entity(world, rng)
+        sents = world.fact_sentences(n)
+        out.append(sents[int(rng.integers(len(sents)))])
+    return "\n".join(out) + "\n"
+
+
+_WEB_FILLER = [
+    "click here for more about {city} and its markets .",
+    "top {k} facts about {craft} you should know :",
+    "posted on day {k} | tags : {craft} , {city} , {animal}",
+    "price of {material} rose by {k} marks in {city} .",
+    "visit http://{city}.example/{name} for the full story .",
+    "{k} . {name} answered : the {animal} is {color} , obviously .",
+]
+
+
+def gen_web_corpus(world: World, n_sentences: int, seed: int) -> str:
+    """Higher-entropy noisy corpus (C4 stand-in): same facts, messier text."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_sentences):
+        n = _pick_entity(world, rng)
+        if rng.random() < 0.55:
+            sents = world.fact_sentences(n)
+            out.append(sents[int(rng.integers(len(sents)))])
+        else:
+            t = _WEB_FILLER[int(rng.integers(len(_WEB_FILLER)))]
+            out.append(t.format(
+                city=world.city[n], craft=world.craft[n], animal=world.animal[n],
+                color=world.color[n], material=world.material[n], name=n,
+                k=int(rng.integers(2, 99))))
+    return "\n".join(out) + "\n"
+
+
+def gen_chat_corpus(world: World, n_items: int, seed: int) -> str:
+    """Instruction-formatted corpus for the Vicuna-like chat finetune."""
+    rng = np.random.default_rng(seed)
+    out = []
+    qa = [
+        ("what color is the {animal} of {name} ?", "{color}"),
+        ("where does {name} live ?", "{city}"),
+        ("what craft does {name} practice ?", "{craft}"),
+        ("what tool does {name} use ?", "{tool}"),
+        ("who is the oldest friend of {name} ?", "{ally}"),
+        ("how many units of {material} did {name} measure ?", "{number}"),
+    ]
+    for _ in range(n_items):
+        n = _pick_entity(world, rng)
+        q, a = qa[int(rng.integers(len(qa)))]
+        fmt = dict(name=n, color=world.color[n], city=world.city[n],
+                   craft=world.craft[n], tool=TOOLS[world.craft[n]],
+                   ally=world.ally[n], material=world.material[n],
+                   number=world.number[n], animal=world.animal[n])
+        out.append(f"question : {q.format(**fmt)}\nanswer : {a.format(**fmt)}\n")
+    return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Zero-shot QA suites (six tasks; ARC-E/ARC-C/HellaSwag/LAMBADA/PIQA/WinoGrande
+# stand-ins, graded by entity frequency and hop count)
+# ---------------------------------------------------------------------------
+
+
+def _mc_item(context: str, options: List[str], answer: int) -> dict:
+    return {"context": context, "options": options, "answer": answer}
+
+
+def _distract(rng, pool: List[str], correct: str, k: int) -> List[str]:
+    cands = [p for p in pool if p != correct]
+    idx = rng.permutation(len(cands))[: k]
+    return [cands[int(i)] for i in idx]
+
+
+def gen_tasks(world: World, n_per_task: int, seed: int) -> Dict[str, List[dict]]:
+    rng = np.random.default_rng(seed)
+    tasks: Dict[str, List[dict]] = {k: [] for k in
+                                    ["facts_easy", "facts_hard", "continuation",
+                                     "lastword", "procedure", "pronoun"]}
+    for _ in range(n_per_task):
+        # facts_easy (ARC-E-like): common entity, one-hop attribute.
+        n = world.common[int(rng.integers(len(world.common)))]
+        correct = world.color[n]
+        opts = [correct] + _distract(rng, COLORS, correct, 3)
+        perm = rng.permutation(4)
+        tasks["facts_easy"].append(_mc_item(
+            f"the {world.animal[n]} kept by {n} was",
+            [" " + opts[int(i)] for i in perm], int(np.argwhere(perm == 0)[0][0])))
+
+        # facts_hard (ARC-C-like): rare entity, two-hop (city+craft -> animal color).
+        n = world.rare[int(rng.integers(len(world.rare)))]
+        correct = world.animal[n]
+        opts = [correct] + _distract(rng, ANIMALS, correct, 3)
+        perm = rng.permutation(4)
+        tasks["facts_hard"].append(_mc_item(
+            f"the {world.craft[n]} master {n} of {world.city[n]} kept a {world.color[n]}",
+            [" " + opts[int(i)] for i in perm], int(np.argwhere(perm == 0)[0][0])))
+
+        # continuation (HellaSwag-like): pick the right sentence ending.
+        n = _pick_entity(world, rng)
+        good = f" near the gates of {world.city[n]} ."
+        bads = [f" near the gates of {c} ." for c in _distract(rng, CITIES, world.city[n], 3)]
+        opts4 = [good] + bads
+        perm = rng.permutation(4)
+        tasks["continuation"].append(_mc_item(
+            f"every morning {n} fed the {world.color[n]} {world.animal[n]}",
+            [opts4[int(i)] for i in perm], int(np.argwhere(perm == 0)[0][0])))
+
+        # lastword (LAMBADA-like): long context, predict the final word.
+        n = _pick_entity(world, rng)
+        ctx = (f"{n} was known in {world.city[n]} for being {world.trait[n]} . "
+               f"in {world.city[n]} , {n} studied the art of {world.craft[n]} for many years . "
+               f"every morning {n} fed the {world.color[n]}")
+        correct = world.animal[n]
+        opts = [correct] + _distract(rng, ANIMALS, correct, 3)
+        perm = rng.permutation(4)
+        tasks["lastword"].append(_mc_item(
+            ctx, [" " + opts[int(i)] for i in perm], int(np.argwhere(perm == 0)[0][0])))
+
+        # procedure (PIQA-like): craft -> tool.
+        n = _pick_entity(world, rng)
+        correct = TOOLS[world.craft[n]]
+        pool = list(TOOLS.values())
+        opts = [correct] + _distract(rng, pool, correct, 3)
+        perm = rng.permutation(4)
+        tasks["procedure"].append(_mc_item(
+            f"to practice {world.craft[n]} , {n} used a",
+            [" " + opts[int(i)] for i in perm], int(np.argwhere(perm == 0)[0][0])))
+
+        # pronoun (WinoGrande-like): 2 options, trait binding.
+        a = _pick_entity(world, rng)
+        b = world.ally[a]
+        opts2 = [a, b]
+        perm = rng.permutation(2)
+        tasks["pronoun"].append(_mc_item(
+            f"{a} gave the {world.animal[a]} to {b} because the keeper known for being "
+            f"{world.trait[a]} was", [" " + opts2[int(i)] for i in perm],
+            int(np.argwhere(perm == 0)[0][0])))
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# MMLU-like four-domain suite
+# ---------------------------------------------------------------------------
+
+
+def gen_mmlu(world: World, n_per_domain: int, seed: int) -> dict:
+    """Four domains (stem / hums / social / others) with 0- and 5-shot forms.
+
+    Items follow the lm-eval MMLU convention: `question\\nanswer:` contexts
+    with single-token-ish answers, plus 5 exemplar Q/A pairs for few-shot.
+    """
+    rng = np.random.default_rng(seed)
+    domains = {"stem": [], "hums": [], "social": [], "others": []}
+
+    def ent():
+        return _pick_entity(world, rng)
+
+    for _ in range(n_per_domain):
+        n = ent()
+        correct = str(world.number[n])
+        opts = [correct] + [str(x) for x in
+                            rng.choice([k for k in range(2, 60) if str(k) != correct],
+                                       size=3, replace=False)]
+        perm = rng.permutation(4)
+        domains["stem"].append(_mc_item(
+            f"question : how many units of {world.material[n]} did {n} measure ?\nanswer :",
+            [" " + opts[int(i)] for i in perm], int(np.argwhere(perm == 0)[0][0])))
+
+        n = ent()
+        correct = world.craft[n]
+        opts = [correct] + _distract(rng, CRAFTS, correct, 3)
+        perm = rng.permutation(4)
+        domains["hums"].append(_mc_item(
+            f"question : which art did {n} study in {world.city[n]} ?\nanswer :",
+            [" " + opts[int(i)] for i in perm], int(np.argwhere(perm == 0)[0][0])))
+
+        n = ent()
+        correct = world.ally[n]
+        opts = [correct] + _distract(rng, world.names, correct, 3)
+        perm = rng.permutation(4)
+        domains["social"].append(_mc_item(
+            f"question : who is the oldest friend of {n} ?\nanswer :",
+            [" " + opts[int(i)] for i in perm], int(np.argwhere(perm == 0)[0][0])))
+
+        n = ent()
+        correct = world.city[n]
+        opts = [correct] + _distract(rng, CITIES, correct, 3)
+        perm = rng.permutation(4)
+        domains["others"].append(_mc_item(
+            f"question : where did {n} live ?\nanswer :",
+            [" " + opts[int(i)] for i in perm], int(np.argwhere(perm == 0)[0][0])))
+
+    # 5-shot exemplar prefixes (one per domain, fixed across items).
+    shots = {}
+    qa = {
+        "stem": lambda n: (f"question : how many units of {world.material[n]} did {n} measure ?",
+                           f" {world.number[n]}"),
+        "hums": lambda n: (f"question : which art did {n} study in {world.city[n]} ?",
+                           f" {world.craft[n]}"),
+        "social": lambda n: (f"question : who is the oldest friend of {n} ?",
+                             f" {world.ally[n]}"),
+        "others": lambda n: (f"question : where did {n} live ?", f" {world.city[n]}"),
+    }
+    for dom in domains:
+        parts = []
+        for _ in range(5):
+            n = world.common[int(rng.integers(len(world.common)))]
+            q, a = qa[dom](n)
+            parts.append(f"{q}\nanswer :{a}\n")
+        shots[dom] = "\n".join(parts) + "\n"
+    return {"domains": domains, "shots": shots}
+
+
+# ---------------------------------------------------------------------------
+# Emission
+# ---------------------------------------------------------------------------
+
+
+def tokens_u16(text: str) -> np.ndarray:
+    return np.array(encode(text), dtype=np.uint16)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--fast", action="store_true", help="small outputs for CI")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    world = World(seed=7)
+    n_train = 30_000 if not args.fast else 2_000
+    n_eval = 2_600 if not args.fast else 300
+    n_task = 200 if not args.fast else 24
+    n_mmlu = 120 if not args.fast else 16
+
+    corpora = {
+        "wiki_train": gen_wiki_corpus(world, n_train, seed=11),
+        "wiki_eval": gen_wiki_corpus(world, n_eval, seed=12),
+        "web_train": gen_web_corpus(world, n_train, seed=13),
+        "web_eval": gen_web_corpus(world, n_eval, seed=14),
+        "chat_train": gen_chat_corpus(world, n_train // 3, seed=15),
+    }
+    for name, text in corpora.items():
+        toks = tokens_u16(text)
+        sqt.save(os.path.join(args.out, f"corpus_{name}.sqt"),
+                 {"tokens": toks}, {"kind": "corpus", "name": name,
+                                    "n_tokens": int(toks.size)})
+        print(f"corpus {name}: {toks.size} tokens")
+
+    tasks = gen_tasks(world, n_task, seed=21)
+    with open(os.path.join(args.out, "tasks.json"), "w") as f:
+        json.dump({"tasks": tasks}, f)
+    print(f"tasks: {sum(len(v) for v in tasks.values())} items")
+
+    mmlu = gen_mmlu(world, n_mmlu, seed=22)
+    with open(os.path.join(args.out, "mmlu.json"), "w") as f:
+        json.dump(mmlu, f)
+    print(f"mmlu: {sum(len(v) for v in mmlu['domains'].values())} items")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Layer-1 Pallas kernels: the W4A4 inference hot path.
+
+Four kernels implement the paper's compute primitives:
+
+* :func:`quant_matmul`  — fused per-token int-`b` activation fake-quant + GEMM
+  (the W4A4 GEMM of Fig. 3).
+* :func:`kron_rotate`   — the Kronecker rotation ``x (R1 ⊗ R2)`` in the
+  two-sided small-GEMM form of Eq. 31 (the O(n^{3/2}) online transform).
+* :func:`hadamard`      — blocked fast Walsh–Hadamard transform (QuaRot
+  baseline's online rotation).
+* :func:`rtn_quant_weight` — per-output-channel RTN weight fake-quantizer.
+
+All kernels run under ``interpret=True`` (mandatory on the CPU PJRT plugin —
+real TPU lowering emits Mosaic custom-calls the CPU client cannot execute).
+The BlockSpecs are nevertheless written for the TPU memory system: token
+tiles of ≤128 rows stream HBM→VMEM while rotation factors / weight tiles
+stay VMEM-resident; matmuls are shaped for the 128×128 MXU. DESIGN.md
+§Hardware-Adaptation describes the GPU→TPU mapping; EXPERIMENTS.md §Perf
+carries the VMEM/MXU estimates.
+
+Correctness oracles live in :mod:`compile.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+# Ideal TPU tile sizes; shrunk to divisors of the actual dims at trace time.
+MXU_TILE = 128
+
+# Token-axis tile cap. On real TPU this would be 128 (one MXU-height tile,
+# double-buffered HBM->VMEM); on the CPU plugin every grid step lowers to a
+# `while` iteration with dynamic-slice bookkeeping, so small models are
+# fastest with a single tile. 512 keeps the whole token block under ~1 MB
+# of "VMEM" at our widths while collapsing the grid to 1 for every lowered
+# shape in this repo (§Perf L2: -48 while-loops per w4a4 score graph).
+TOKEN_TILE_CAP = 512
+
+
+def pick_tile(dim: int, cap: int = MXU_TILE) -> int:
+    """Largest divisor of `dim` that is <= cap (TPU-aligned when possible)."""
+    best = 1
+    for t in range(1, min(dim, cap) + 1):
+        if dim % t == 0:
+            best = t
+    return best
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul: per-token fake-quant + GEMM
+# ---------------------------------------------------------------------------
+
+
+def _quant_matmul_kernel(x_ref, w_ref, o_ref, *, bits: float, clip: float):
+    x = x_ref[...]
+    qmin, qmax = ref.qlevels(int(bits))
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax * clip / qmax, 1e-8)
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax) * scale
+    o_ref[...] = jnp.dot(q, w_ref[...], preferred_element_type=jnp.float32)
+
+
+def quant_matmul(x: jnp.ndarray, w: jnp.ndarray, bits: int = 4,
+                 clip: float = 1.0) -> jnp.ndarray:
+    """``fake_quant_per_token(x, bits, clip) @ w`` as a fused Pallas kernel.
+
+    x: [T, n] activations; w: [n, C] (already weight-quantized by the Rust
+    pipeline). The token axis is tiled; each tile sees the full reduction
+    dimension so the per-token scale is computed in one pass (on TPU this is
+    the VMEM-resident row-max + MXU GEMM schedule).
+    """
+    t, n = x.shape
+    n2, c = w.shape
+    assert n == n2, f"shape mismatch {x.shape} @ {w.shape}"
+    bt = pick_tile(t, TOKEN_TILE_CAP)
+    bc = pick_tile(c, TOKEN_TILE_CAP)
+    grid = (t // bt, c // bc)
+    return pl.pallas_call(
+        functools.partial(_quant_matmul_kernel, bits=float(bits), clip=float(clip)),
+        out_shape=jax.ShapeDtypeStruct((t, c), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bc), lambda i, j: (i, j)),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# kron_rotate: x (R1 ⊗ R2) via R1^T X_mat R2 per token
+# ---------------------------------------------------------------------------
+
+
+def _kron_rotate_kernel(x_ref, r1_ref, r2_ref, o_ref):
+    bt = x_ref.shape[0]
+    n1 = r1_ref.shape[0]
+    n2 = r2_ref.shape[0]
+    xm = x_ref[...].reshape(bt, n1, n2)
+    r1 = r1_ref[...]
+    r2 = r2_ref[...]
+    # R1^T on the n1 axis, then R2 on the n2 axis; both factors stay resident
+    # in VMEM across the token tile (double-buffered on real hardware).
+    y = jax.lax.dot_general(xm, r1, (((1,), (0,)), ((), ())))  # [bt, n2, n1]
+    y = jnp.swapaxes(y, 1, 2)                                  # [bt, n1, n2]
+    z = jax.lax.dot_general(y, r2, (((2,), (0,)), ((), ())))   # [bt, n1, n2]
+    o_ref[...] = z.reshape(bt, n1 * n2)
+
+
+def kron_rotate(x: jnp.ndarray, r1: jnp.ndarray, r2: jnp.ndarray) -> jnp.ndarray:
+    """Apply the Kronecker-structured rotation (Eq. 31) to token rows.
+
+    Cost O(T·(n1²n2 + n1n2²)) = O(T·n^{3/2}) for balanced factors — the
+    paper's headline transform-efficiency claim.
+    """
+    t, n = x.shape
+    n1, n2 = r1.shape[0], r2.shape[0]
+    assert n1 * n2 == n, f"kron factors {n1}x{n2} != {n}"
+    bt = pick_tile(t, TOKEN_TILE_CAP)
+    return pl.pallas_call(
+        _kron_rotate_kernel,
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((n1, n1), lambda i: (0, 0)),
+            pl.BlockSpec((n2, n2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        interpret=INTERPRET,
+    )(x, r1, r2)
+
+
+# ---------------------------------------------------------------------------
+# hadamard: fast Walsh–Hadamard transform over the feature axis
+# ---------------------------------------------------------------------------
+
+
+def _hadamard_kernel(x_ref, o_ref, *, n: int):
+    x = x_ref[...]
+    bt = x.shape[0]
+    y = x
+    h = 1
+    while h < n:  # log2(n) in-VMEM butterfly stages
+        y = y.reshape(bt, n // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.concatenate([(a + b)[:, :, None, :], (a - b)[:, :, None, :]], axis=2)
+        h *= 2
+    o_ref[...] = y.reshape(bt, n) * (1.0 / jnp.sqrt(float(n)))
+
+
+def hadamard(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized FWHT along the last axis (n must be a power of two)."""
+    t, n = x.shape
+    assert n & (n - 1) == 0, "hadamard dim must be a power of two"
+    bt = pick_tile(t, TOKEN_TILE_CAP)
+    return pl.pallas_call(
+        functools.partial(_hadamard_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        interpret=INTERPRET,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# rtn_quant_weight: per-output-channel RTN fake quantization
+# ---------------------------------------------------------------------------
+
+
+def _rtn_kernel(w_ref, o_ref, *, bits: float, clip: float):
+    w = w_ref[...]
+    qmin, qmax = ref.qlevels(int(bits))
+    absmax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    scale = jnp.maximum(absmax * clip / qmax, 1e-8)
+    o_ref[...] = jnp.clip(jnp.round(w / scale), qmin, qmax) * scale
+
+
+def rtn_quant_weight(w: jnp.ndarray, bits: int = 4, clip: float = 1.0) -> jnp.ndarray:
+    """Per-output-channel symmetric RTN fake quantization of a [in, out] weight."""
+    n, c = w.shape
+    bc = pick_tile(c)
+    return pl.pallas_call(
+        functools.partial(_rtn_kernel, bits=float(bits), clip=float(clip)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        grid=(c // bc,),
+        in_specs=[pl.BlockSpec((n, bc), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, bc), lambda j: (0, j)),
+        interpret=INTERPRET,
+    )(w)

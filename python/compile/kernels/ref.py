@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package must match its oracle here to float tolerance;
+`python/tests/test_kernels.py` enforces it (including hypothesis sweeps over
+shapes). The oracles are also the semantic definition used by the Rust
+reference forward (`rust/src/model/forward.rs`) — keep all three in sync.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qlevels(bits: int) -> tuple[float, float]:
+    """Symmetric signed integer grid for `bits` (e.g. 4 -> [-8, 7])."""
+    qmax = float(2 ** (bits - 1) - 1)
+    qmin = -float(2 ** (bits - 1))
+    return qmin, qmax
+
+
+def fake_quant_per_token(x: jnp.ndarray, bits: int, clip: float = 1.0) -> jnp.ndarray:
+    """Per-token (row-wise) symmetric absmax fake quantization.
+
+    scale_t = clip * max_j |x_tj| / qmax ; q = clamp(round(x/scale)) * scale.
+    Rows that are exactly zero pass through unchanged.
+    """
+    qmin, qmax = qlevels(bits)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax * clip / qmax, 1e-8)
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    return q * scale
+
+
+def fake_quant_per_channel(w: jnp.ndarray, bits: int, clip: float = 1.0) -> jnp.ndarray:
+    """Per-output-channel (column-wise for [in, out] weights) RTN fake quant."""
+    qmin, qmax = qlevels(bits)
+    absmax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    scale = jnp.maximum(absmax * clip / qmax, 1e-8)
+    q = jnp.clip(jnp.round(w / scale), qmin, qmax)
+    return q * scale
+
+
+def quant_matmul(x: jnp.ndarray, w: jnp.ndarray, bits: int, clip: float = 1.0) -> jnp.ndarray:
+    """W4A4-style GEMM oracle: per-token fake-quantize activations, then x_q @ w.
+
+    `w` is expected to be pre-quantized (fake-quant f32) by the Rust pipeline;
+    this op only quantizes the activation side.
+    """
+    return fake_quant_per_token(x, bits, clip) @ w
+
+
+def kron_rotate(x: jnp.ndarray, r1: jnp.ndarray, r2: jnp.ndarray) -> jnp.ndarray:
+    """x[T, n] -> x (R1 (x) R2) via the two-sided small-GEMM form (Eq. 31).
+
+    Row-major reshape of each token row to (n1, n2), then R1^T X_mat R2.
+    """
+    t = x.shape[0]
+    n1, n2 = r1.shape[0], r2.shape[0]
+    xm = x.reshape(t, n1, n2)
+    out = jnp.einsum("tij,ik->tkj", xm, r1)       # R1^T applied on the n1 axis
+    out = jnp.einsum("tkj,jl->tkl", out, r2)      # R2 applied on the n2 axis
+    return out.reshape(t, n1 * n2)
+
+
+def hadamard(x: jnp.ndarray) -> jnp.ndarray:
+    """x[T, n] H_n / sqrt(n) with H the Sylvester-Hadamard matrix, n = 2^k."""
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, "hadamard dim must be a power of two"
+    y = x
+    h = 1
+    while h < n:
+        y = y.reshape(-1, n // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    return (y.reshape(x.shape) / jnp.sqrt(float(n))).astype(x.dtype)

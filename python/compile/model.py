@@ -1,0 +1,472 @@
+"""Layer-2 JAX model: LLaMA-style decoder (+ Mixtral-style MoE variant).
+
+Defines the full-precision and W4A4/W4A16 quantized forward graphs that
+`aot.py` lowers to HLO text for the Rust runtime. Three graph families per
+model configuration:
+
+* ``score``   — tokens[B,T] -> logits[B,T,V] (perplexity / MC scoring /
+  calibration cross-checks).
+* ``prefill`` — tokens[B,T] -> (last-position logits[B,V], K/V caches
+  [L,B,H,Tmax,dh]) for serving.
+* ``decode``  — (token[B], pos, K, V) -> (logits[B,V], K', V') one
+  autoregressive step against the cache.
+
+Quantized graphs replace every linear with
+
+    kron_rotate(x, R1, R2)  ->  per-token int-b fake-quant  ->  GEMM
+
+(the Layer-1 Pallas kernels). The rotation factors, activation-clip scalars,
+and the (already rotated + weight-quantized by the Rust pipeline) weights
+are **runtime parameters**, so one artifact serves every method: identity
+factors = plain RTN; Hadamard factors = QuaRot; learned factors = SpinQuant;
+ART/URT closed-form factors = SingleQuant. Scale/fold-based methods
+(SmoothQuant, AWQ) are folded into the weights Rust-side and fed identity
+rotations. ``w4a16`` lowers the same graph with activation quantization
+disabled (weight-only tables).
+
+Parameter interchange: parameters travel as a flat list ordered by
+``param_layout(cfg, mode)``; `aot.py` writes the layout JSON next to each
+artifact so the Rust side can assemble inputs by name.
+
+Embeddings, the LM head, and norms stay full-precision (paper convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .data import VOCAB_SIZE
+
+EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int = VOCAB_SIZE
+    max_seq: int = 160          # serving cache capacity (prompt + generation)
+    score_seq: int = 96         # fixed T of the score graph
+    rope_theta: float = 10000.0
+    n_experts: int = 0          # 0 = dense; >0 = Mixtral-style MoE
+    top_k: int = 2
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+
+def kron_factor(n: int) -> Tuple[int, int]:
+    """Algorithm 1: n = n1*n2 with n2 the power of two nearest sqrt(n)."""
+    root = math.sqrt(n)
+    n2 = 1
+    k = 0
+    while (1 << k) <= n:
+        a = 1 << k
+        if n % a == 0 and abs(a - root) < abs(n2 - root):
+            n2 = a
+        k += 1
+    return n // n2, n2
+
+
+# The model zoo. Sizes are scaled to this single-core testbed while keeping
+# the paper's model-size *axis* (small -> large -> MoE); see DESIGN.md.
+CONFIGS: Dict[str, ModelConfig] = {c.name: c for c in [
+    ModelConfig("sq-xs", d_model=64, n_layers=2, n_heads=4, d_ff=128),
+    ModelConfig("sq-s", d_model=64, n_layers=3, n_heads=4, d_ff=160),
+    ModelConfig("sq-m", d_model=96, n_layers=4, n_heads=4, d_ff=256),
+    ModelConfig("sq-l", d_model=128, n_layers=5, n_heads=4, d_ff=320),
+    ModelConfig("sq-xl", d_model=160, n_layers=6, n_heads=5, d_ff=416),
+    ModelConfig("sq-moe", d_model=96, n_layers=3, n_heads=4, d_ff=160,
+                n_experts=4, top_k=2),
+]}
+# The chat (Vicuna-like) variant shares the sq-m architecture.
+CONFIGS["sq-m-chat"] = dataclasses.replace(CONFIGS["sq-m"], name="sq-m-chat")
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+
+ROT_SITES = ("qkv", "o", "mlp", "down")  # rotation/quantization sites per layer
+
+
+def _layer_weight_names(cfg: ModelConfig, i: int) -> List[str]:
+    p = f"l{i:02d}"
+    names = [f"{p}.an", f"{p}.wq", f"{p}.wk", f"{p}.wv", f"{p}.wo", f"{p}.mn"]
+    if cfg.is_moe:
+        names.append(f"{p}.router")
+        for e in range(cfg.n_experts):
+            names += [f"{p}.x{e}.wg", f"{p}.x{e}.wu", f"{p}.x{e}.wd"]
+    else:
+        names += [f"{p}.wg", f"{p}.wu", f"{p}.wd"]
+    return names
+
+
+def weight_names(cfg: ModelConfig) -> List[str]:
+    names = ["emb.tok"]
+    for i in range(cfg.n_layers):
+        names += _layer_weight_names(cfg, i)
+    names += ["out.norm", "out.head"]
+    return names
+
+
+def rot_names(cfg: ModelConfig) -> List[str]:
+    names = []
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}"
+        for site in ROT_SITES:
+            names += [f"{p}.rot_{site}.r1", f"{p}.rot_{site}.r2", f"{p}.clip_{site}"]
+    return names
+
+
+def param_layout(cfg: ModelConfig, mode: str) -> List[str]:
+    """Canonical ordered parameter names for a graph family.
+
+    ``fp`` graphs take only weights; quantized graphs take weights followed
+    by rotation factors and activation-clip scalars.
+    """
+    if mode == "fp":
+        return weight_names(cfg)
+    return weight_names(cfg) + rot_names(cfg)
+
+
+def param_shape(cfg: ModelConfig, name: str) -> Tuple[int, ...]:
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    base = name.split(".")[-1]
+    if name == "emb.tok":
+        return (v, d)
+    if name == "out.norm":
+        return (d,)
+    if name == "out.head":
+        return (d, v)
+    if base in ("an", "mn"):
+        return (d,)
+    if base in ("wq", "wk", "wv", "wo"):
+        return (d, d)
+    if base in ("wg", "wu"):
+        return (d, ff)
+    if base == "wd":
+        return (ff, d)
+    if base == "router":
+        return (d, cfg.n_experts)
+    if base == "r1" or base == "r2":
+        site = name.split(".")[-2].removeprefix("rot_")
+        n = ff if site == "down" else d
+        n1, n2 = kron_factor(n)
+        return (n1, n1) if base == "r1" else (n2, n2)
+    if base.startswith("clip_"):
+        return ()
+    raise KeyError(name)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Scaled-normal init for training (norms at 1)."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, jnp.ndarray] = {}
+    for name in weight_names(cfg):
+        shape = param_shape(cfg, name)
+        base = name.split(".")[-1]
+        if base in ("an", "mn") or name == "out.norm":
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0]
+            arr = rng.normal(0.0, 1.0 / math.sqrt(fan_in), size=shape).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def identity_rotations(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Identity rotation factors + unit clips (plain-RTN baseline inputs)."""
+    out: Dict[str, jnp.ndarray] = {}
+    for name in rot_names(cfg):
+        shape = param_shape(cfg, name)
+        if shape == ():
+            out[name] = jnp.float32(1.0)
+        else:
+            out[name] = jnp.eye(shape[0], dtype=jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Core ops
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + EPS) * g
+
+
+def rope_angles(cfg: ModelConfig, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables [**pos-shape**, d_head/2] for rotary embedding."""
+    dh = cfg.d_head
+    inv_freq = 1.0 / (cfg.rope_theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [..., T, H, dh]; cos/sin broadcastable [..., T, 1, dh/2]."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+
+
+class QLinearCtx:
+    """Per-graph quantization context: mode + rotation parameter lookup.
+
+    Modes: ``fp`` (no transform), ``w4a4`` (online rotation + per-token
+    dynamic int4 activations), ``w4a16`` (online rotation only), and
+    ``w4a4s`` (online rotation + **static per-tensor** int4 activations —
+    SmoothQuant's original quantizer form; the ``clip_<site>`` parameter
+    is reinterpreted as the fixed scale Δ calibrated offline)."""
+
+    def __init__(self, mode: str, rots: Optional[Dict[str, jnp.ndarray]]):
+        assert mode in ("fp", "w4a4", "w4a16", "w4a4s")
+        self.mode = mode
+        self.rots = rots or {}
+
+    def linear(self, x2d: jnp.ndarray, ws: List[jnp.ndarray], layer: int,
+               site: str) -> jnp.ndarray:
+        """Rotate-quantize-matmul against the horizontal concat of `ws`.
+
+        x2d: [N, n]. Multiple weights sharing one site (e.g. q,k,v) are
+        concatenated so the activation is rotated and quantized once.
+        """
+        w = ws[0] if len(ws) == 1 else jnp.concatenate(ws, axis=1)
+        if self.mode == "fp":
+            return x2d @ w
+        p = f"l{layer:02d}"
+        r1 = self.rots[f"{p}.rot_{site}.r1"]
+        r2 = self.rots[f"{p}.rot_{site}.r2"]
+        clip = self.rots[f"{p}.clip_{site}"]
+        xr = kernels.kron_rotate(x2d, r1, r2)
+        if self.mode == "w4a4":
+            # clip enters via pre-scaling so the clip scalar can stay a
+            # runtime parameter (kernel bakes only the bit-width).
+            return kernels.quant_matmul(xr * (1.0 / clip), w, bits=4) * clip
+        if self.mode == "w4a4s":
+            # static per-tensor: clip carries the calibrated scale Δ
+            q = jnp.clip(jnp.round(xr / clip), -8.0, 7.0) * clip
+            return q @ w
+        return xr @ w  # w4a16: rotation online, activations full-precision
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+
+def _attention(cfg: ModelConfig, q, k, v, mask):
+    """q,k,v: [B,T,H,dh] (k/v may be [B,S,H,dh]); mask broadcast [T,S]."""
+    dh = cfg.d_head
+    logits = jnp.einsum("bthd,bshd->bhts", q, k) / math.sqrt(dh)
+    logits = jnp.where(mask, logits, -1e9)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", probs, v)
+
+
+def _mlp(ctx: QLinearCtx, p: Dict[str, jnp.ndarray], x2d: jnp.ndarray,
+         layer: int, prefix: str) -> jnp.ndarray:
+    gu = ctx.linear(x2d, [p[f"{prefix}.wg"], p[f"{prefix}.wu"]], layer, "mlp")
+    ff = p[f"{prefix}.wg"].shape[1]
+    g, u = gu[:, :ff], gu[:, ff:]
+    h = jax.nn.silu(g) * u
+    return ctx.linear(h, [p[f"{prefix}.wd"]], layer, "down")
+
+
+def _moe_mlp(cfg: ModelConfig, ctx: QLinearCtx, p: Dict[str, jnp.ndarray],
+             x2d: jnp.ndarray, layer: int) -> jnp.ndarray:
+    """Dense-compute top-k routed MoE (experts are small; routing weights
+    zero out non-selected experts, matching Mixtral semantics)."""
+    pre = f"l{layer:02d}"
+    router_logits = x2d @ p[f"{pre}.router"]              # [N, E]
+    # top-k via iterated argmax: xla_extension 0.5.1's HLO text parser
+    # rejects the `topk(..., largest=true)` op jax.lax.top_k lowers to.
+    remaining = router_logits
+    tops = []   # ([N] values, [N,E] one-hots)
+    for _ in range(cfg.top_k):
+        idx = jnp.argmax(remaining, axis=-1)              # [N]
+        oh = jax.nn.one_hot(idx, cfg.n_experts, dtype=x2d.dtype)
+        val = jnp.sum(remaining * oh, axis=-1)            # [N]
+        tops.append((val, oh))
+        remaining = remaining - oh * 1e9
+    topv = jnp.stack([v for v, _ in tops], axis=-1)       # [N, k]
+    gate = jax.nn.softmax(topv, axis=-1)                  # [N, k]
+    onehot = jnp.stack([oh for _, oh in tops], axis=1)    # [N, k, E]
+    weights = jnp.einsum("nk,nke->ne", gate, onehot)       # [N, E]
+    out = jnp.zeros_like(x2d)
+    for e in range(cfg.n_experts):
+        y = _mlp(ctx, p, x2d, layer, f"{pre}.x{e}")
+        out = out + y * weights[:, e:e + 1]
+    return out
+
+
+def _block_score(cfg: ModelConfig, ctx: QLinearCtx, p, x, layer: int, cos, sin, mask):
+    """Full-sequence block used by score/prefill. x: [B,T,d]."""
+    b, t, d = x.shape
+    pre = f"l{layer:02d}"
+    h = rmsnorm(x, p[f"{pre}.an"]).reshape(b * t, d)
+    qkv = ctx.linear(h, [p[f"{pre}.wq"], p[f"{pre}.wk"], p[f"{pre}.wv"]], layer, "qkv")
+    q, k, v = jnp.split(qkv, 3, axis=1)
+    q = q.reshape(b, t, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, t, cfg.n_heads, cfg.d_head)
+    v = v.reshape(b, t, cfg.n_heads, cfg.d_head)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    att = _attention(cfg, q, k, v, mask).reshape(b * t, d)
+    x = x + ctx.linear(att, [p[f"{pre}.wo"]], layer, "o").reshape(b, t, d)
+    h2 = rmsnorm(x, p[f"{pre}.mn"]).reshape(b * t, d)
+    if cfg.is_moe:
+        y = _moe_mlp(cfg, ctx, p, h2, layer)
+    else:
+        y = _mlp(ctx, p, h2, layer, pre)
+    return x + y.reshape(b, t, d), k, v
+
+
+def _assemble(cfg: ModelConfig, mode: str, flat: List[jnp.ndarray]) -> Tuple[dict, QLinearCtx]:
+    names = param_layout(cfg, mode)
+    assert len(flat) == len(names), f"expected {len(names)} params, got {len(flat)}"
+    p = dict(zip(names, flat))
+    rots = {k: v for k, v in p.items() if ".rot_" in k or ".clip_" in k}
+    return p, QLinearCtx(mode, rots)
+
+
+# ---------------------------------------------------------------------------
+# Graph families
+# ---------------------------------------------------------------------------
+
+
+def score_graph(cfg: ModelConfig, mode: str, tokens: jnp.ndarray,
+                *flat: jnp.ndarray) -> Tuple[jnp.ndarray]:
+    """tokens [B,T] int32 -> logits [B,T,V]."""
+    p, ctx = _assemble(cfg, mode, list(flat))
+    b, t = tokens.shape
+    x = p["emb.tok"][tokens]                              # [B,T,d]
+    positions = jnp.arange(t)
+    cos, sin = rope_angles(cfg, positions)                # [T, dh/2]
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))[None, None]
+    for i in range(cfg.n_layers):
+        x, _, _ = _block_score(cfg, ctx, p, x, i, cos, sin, mask)
+    x = rmsnorm(x, p["out.norm"])
+    logits = x.reshape(b * t, cfg.d_model) @ p["out.head"]
+    return (logits.reshape(b, t, cfg.vocab_size),)
+
+
+def prefill_graph(cfg: ModelConfig, mode: str, tokens: jnp.ndarray,
+                  *flat: jnp.ndarray):
+    """tokens [B,T] -> (logits [B,T,V], K, V) with caches [L,B,H,Tmax,dh].
+
+    Full-sequence logits are returned (not just the last position) so the
+    coordinator can serve mixed prompt lengths inside one padded batch: it
+    reads each request's logits at its true last prompt index.
+    """
+    p, ctx = _assemble(cfg, mode, list(flat))
+    b, t = tokens.shape
+    tmax = cfg.max_seq
+    x = p["emb.tok"][tokens]
+    positions = jnp.arange(t)
+    cos, sin = rope_angles(cfg, positions)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))[None, None]
+    kc = jnp.zeros((cfg.n_layers, b, cfg.n_heads, tmax, cfg.d_head), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    for i in range(cfg.n_layers):
+        x, k, v = _block_score(cfg, ctx, p, x, i, cos, sin, mask)
+        kc = kc.at[i, :, :, :t, :].set(jnp.swapaxes(k, 1, 2))
+        vc = vc.at[i, :, :, :t, :].set(jnp.swapaxes(v, 1, 2))
+    x = rmsnorm(x, p["out.norm"])
+    logits = x.reshape(b * t, cfg.d_model) @ p["out.head"]
+    return logits.reshape(b, t, cfg.vocab_size), kc, vc
+
+
+def decode_graph(cfg: ModelConfig, mode: str, token: jnp.ndarray,
+                 pos: jnp.ndarray, kc: jnp.ndarray, vc: jnp.ndarray,
+                 *flat: jnp.ndarray):
+    """One decode step. token [B] int32, pos [B] int32 (per-slot index of
+    the new token — continuous batching runs ragged sequences), caches
+    [L,B,H,Tmax,dh] -> (logits [B,V], K', V')."""
+    p, ctx = _assemble(cfg, mode, list(flat))
+    b = token.shape[0]
+    tmax = cfg.max_seq
+    x = p["emb.tok"][token]                               # [B,d]
+    cos, sin = rope_angles(cfg, pos)                      # [B, dh/2]
+    cos1 = cos[:, None, None, :]                          # [B,1,1,dh/2]
+    sin1 = sin[:, None, None, :]
+    # per-slot causal mask over cache slots: [B,1,1,Tmax]
+    slot_mask = (jnp.arange(tmax)[None, :] <= pos[:, None])[:, None, None, :]
+    # one-hot cache write position per slot: [B,Tmax]
+    write = jax.nn.one_hot(pos, tmax, dtype=jnp.float32)
+    for i in range(cfg.n_layers):
+        pre = f"l{i:02d}"
+        h = rmsnorm(x, p[f"{pre}.an"])
+        qkv = ctx.linear(h, [p[f"{pre}.wq"], p[f"{pre}.wk"], p[f"{pre}.wv"]], i, "qkv")
+        q, k, v = jnp.split(qkv, 3, axis=1)
+        q = q.reshape(b, 1, cfg.n_heads, cfg.d_head)
+        k = k.reshape(b, 1, cfg.n_heads, cfg.d_head)
+        v = v.reshape(b, 1, cfg.n_heads, cfg.d_head)
+        q = apply_rope(q, cos1, sin1)
+        k = apply_rope(k, cos1, sin1)
+        # write new k/v into each slot's cache row at its own position:
+        # cache[i, b, h, t, d] = old*(1-write[b,t]) + new[b,h,d]*write[b,t]
+        knew = jnp.swapaxes(k, 1, 2)                      # [B,H,1,dh]
+        vnew = jnp.swapaxes(v, 1, 2)
+        wmask = write[None, :, None, :, None]             # [1,B,1,Tmax,1]
+        kc = kc.at[i].set(kc[i] * (1.0 - wmask[0]) + knew * wmask[0])
+        vc = vc.at[i].set(vc[i] * (1.0 - wmask[0]) + vnew * wmask[0])
+        kall = jnp.swapaxes(kc[i], 1, 2)                  # [B,Tmax,H,dh]
+        vall = jnp.swapaxes(vc[i], 1, 2)
+        att = _attention(cfg, q, kall, vall, slot_mask)   # [B,1,H,dh]
+        att = att.reshape(b, cfg.d_model)
+        x = x + ctx.linear(att, [p[f"{pre}.wo"]], i, "o")
+        h2 = rmsnorm(x, p[f"{pre}.mn"])
+        if cfg.is_moe:
+            y = _moe_mlp(cfg, ctx, p, h2, i)
+        else:
+            y = _mlp(ctx, p, h2, i, pre)
+        x = x + y
+    x = rmsnorm(x, p["out.norm"])
+    logits = x @ p["out.head"]
+    return logits, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Training loss (build-time only)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params: Dict[str, jnp.ndarray],
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross-entropy over tokens [B,T] (fp graph)."""
+    flat = [params[n] for n in param_layout(cfg, "fp")]
+    (logits,) = score_graph(cfg, "fp", tokens, *flat)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

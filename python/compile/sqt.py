@@ -1,0 +1,81 @@
+"""SQT: the tiny named-tensor container format shared between the Python
+build path and the Rust runtime.
+
+Layout (all little-endian):
+
+    magic   b"SQT1"
+    u32     n_tensors
+    u32     meta_len        # UTF-8 JSON blob (free-form metadata)
+    bytes   meta
+    n_tensors x:
+        u16   name_len
+        bytes name          # UTF-8
+        u8    dtype         # 0=f32 1=i32 2=u16 3=u8
+        u8    ndim
+        u32   dims[ndim]
+        u64   nbytes
+        bytes data          # raw little-endian
+
+The Rust twin lives in `rust/src/util/sqt.rs`; keep the two in sync.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, Tuple
+
+import numpy as np
+
+MAGIC = b"SQT1"
+
+_DTYPES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.uint16): 2,
+    np.dtype(np.uint8): 3,
+}
+_RDTYPES = {v: k for k, v in _DTYPES.items()}
+
+
+def save(path: str, tensors: Dict[str, np.ndarray], meta: dict | None = None) -> None:
+    """Write `tensors` (+ optional JSON metadata) to `path`."""
+    meta_bytes = json.dumps(meta or {}).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        f.write(struct.pack("<I", len(meta_bytes)))
+        f.write(meta_bytes)
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            if arr.dtype not in _DTYPES:
+                raise ValueError(f"unsupported dtype {arr.dtype} for tensor {name!r}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load(path: str) -> Tuple[Dict[str, np.ndarray], dict]:
+    """Read an SQT file; returns (tensors, metadata)."""
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic (not an SQT file)")
+        (n_tensors,) = struct.unpack("<I", f.read(4))
+        (meta_len,) = struct.unpack("<I", f.read(4))
+        meta = json.loads(f.read(meta_len).decode("utf-8")) if meta_len else {}
+        tensors: Dict[str, np.ndarray] = {}
+        for _ in range(n_tensors):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            dtype_code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nbytes)
+            arr = np.frombuffer(raw, dtype=_RDTYPES[dtype_code]).reshape(dims).copy()
+            tensors[name] = arr
+        return tensors, meta

@@ -1,0 +1,262 @@
+"""Build-time pretraining of the model zoo on the synthetic corpora.
+
+Runs once under `make artifacts`; produces `artifacts/ckpt/<name>.sqt`
+checkpoints the Rust pipeline quantizes and serves. Python never runs at
+inference time.
+
+Two deliberate choices mirror the paper's experimental conditions:
+
+1. **Outlier folding.** Real LLMs exhibit massive (MO) and normal (NO)
+   activation outliers — the paper's entire subject. Models this small do
+   not reliably develop them in a few hundred steps, so after training we
+   apply a *function-preserving* re-parameterization: a long-tailed
+   per-channel scale `s` is folded into each RMSNorm gain (γ ← γ·s) with
+   the inverse folded into the consuming linear's input rows (W ← W/s), and
+   similarly on the MLP hidden axis via the `wu`/`wd` pair (exact because
+   h = silu(g)·u is linear in u). The network function is bit-identical in
+   fp, but the activations seen by every quantized linear now carry a few
+   ~10–30× massive-outlier channels plus a log-normal spread of normal
+   outliers — exactly the structure ART and URT target. See DESIGN.md
+   §Substitutions.
+
+2. **Adam is hand-rolled** (optax is unavailable offline).
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import time
+import zlib
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import sqt
+
+# Per-config training schedule (steps, batch, lr), sized for 1 CPU core.
+SCHEDULE: Dict[str, Tuple[int, int, float]] = {
+    "sq-xs": (120, 8, 3e-3),
+    "sq-s": (420, 8, 3e-3),
+    "sq-m": (420, 8, 2.5e-3),
+    "sq-l": (360, 8, 2e-3),
+    "sq-xl": (300, 8, 2e-3),
+    "sq-moe": (360, 8, 2.5e-3),
+    "sq-m-chat": (160, 8, 1e-3),  # finetune from sq-m
+}
+
+SEQ = 96  # == score_seq
+
+
+# ---------------------------------------------------------------------------
+# Data batching
+# ---------------------------------------------------------------------------
+
+
+def load_corpus(data_dir: str, name: str) -> np.ndarray:
+    tensors, _ = sqt.load(os.path.join(data_dir, f"corpus_{name}.sqt"))
+    return tensors["tokens"].astype(np.int32)
+
+
+class Batcher:
+    """Random fixed-length windows over a 60/40 wiki/web token mix."""
+
+    def __init__(self, streams, weights, seed: int):
+        self.streams = streams
+        self.weights = np.asarray(weights, np.float64) / np.sum(weights)
+        self.rng = np.random.default_rng(seed)
+
+    def batch(self, bsz: int, seq: int) -> np.ndarray:
+        out = np.empty((bsz, seq), np.int32)
+        for i in range(bsz):
+            s = self.streams[self.rng.choice(len(self.streams), p=self.weights)]
+            start = int(self.rng.integers(0, len(s) - seq - 1))
+            out[i] = s[start:start + seq]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.int32(0)}
+
+
+def make_update(cfg: M.ModelConfig, base_lr: float, total_steps: int):
+    warmup = max(10, total_steps // 20)
+
+    def lr_at(t):
+        warm = base_lr * t / warmup
+        prog = jnp.clip((t - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(math.pi * prog))
+        return jnp.where(t < warmup, warm, cos)
+
+    @jax.jit
+    def update(params, opt, tokens):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.lm_loss(cfg, p, tokens))(params)
+        t = opt["t"] + 1
+        lr = lr_at(t.astype(jnp.float32))
+        b1, b2, eps = 0.9, 0.98, 1e-8
+        new_m, new_v, new_p = {}, {}, {}
+        for k in params:
+            g = grads[k]
+            m = b1 * opt["m"][k] + (1 - b1) * g
+            v = b2 * opt["v"][k] + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** t.astype(jnp.float32))
+            vhat = v / (1 - b2 ** t.astype(jnp.float32))
+            new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+            new_m[k] = m
+            new_v[k] = v
+        return new_p, {"m": new_m, "v": new_v, "t": t}, loss
+
+    return update
+
+
+# ---------------------------------------------------------------------------
+# Outlier folding (function-preserving)
+# ---------------------------------------------------------------------------
+
+
+def outlier_scale(rng, n: int, n_massive: int = 3, mo_lo: float = 10.0,
+                  mo_hi: float = 28.0, no_sigma: float = 0.45) -> np.ndarray:
+    """Long-tailed per-channel scale: log-normal body (NO) + a few MO spikes.
+
+    Magnitudes are chosen so that (i) per-token dynamic int4 without any
+    transform is badly outlier-dominated, (ii) orthogonal mixing flattens
+    the spikes into a benign ~(MO/√n)× carpet, and (iii) a static
+    per-tensor activation quantizer (SmoothQuant's original form) is
+    catastrophically range-starved — the Table 1 regime. Note real
+    *massive* activations are also token-sparse, which a function-
+    preserving re-parameterization cannot express; see DESIGN.md
+    §Substitutions for why channel-persistent outliers preserve the
+    relevant method ordering."""
+    s = np.exp(rng.normal(0.0, no_sigma, size=n)).astype(np.float32)
+    idx = rng.choice(n, size=min(n_massive, n), replace=False)
+    s[idx] = rng.uniform(mo_lo, mo_hi, size=len(idx)).astype(np.float32)
+    return s
+
+
+def fold_outliers(cfg: M.ModelConfig, params: Dict[str, jnp.ndarray],
+                  seed: int = 1234) -> Dict[str, jnp.ndarray]:
+    """Fold long-tailed channel scales into norm gains / the wu·wd pair.
+
+    Exactly preserves the network function while making post-norm and
+    MLP-hidden activations carry MO/NO structure.
+    """
+    rng = np.random.default_rng(seed)
+    p = {k: np.asarray(v) for k, v in params.items()}
+    d, ff = cfg.d_model, cfg.d_ff
+    for i in range(cfg.n_layers):
+        pre = f"l{i:02d}"
+        # attention input (qkv site)
+        s = outlier_scale(rng, d)
+        p[f"{pre}.an"] = p[f"{pre}.an"] * s
+        for w in ("wq", "wk", "wv"):
+            p[f"{pre}.{w}"] = p[f"{pre}.{w}"] / s[:, None]
+        # MLP input (mlp site)
+        s2 = outlier_scale(rng, d)
+        p[f"{pre}.mn"] = p[f"{pre}.mn"] * s2
+        if cfg.is_moe:
+            for e in range(cfg.n_experts):
+                for w in ("wg", "wu"):
+                    p[f"{pre}.x{e}.{w}"] = p[f"{pre}.x{e}.{w}"] / s2[:, None]
+            p[f"{pre}.router"] = p[f"{pre}.router"] / s2[:, None]
+            # MLP hidden (down site): h = silu(g) * u is linear in u
+            s3 = outlier_scale(rng, ff, n_massive=3, mo_hi=40.0)
+            for e in range(cfg.n_experts):
+                p[f"{pre}.x{e}.wu"] = p[f"{pre}.x{e}.wu"] * s3[None, :]
+                p[f"{pre}.x{e}.wd"] = p[f"{pre}.x{e}.wd"] / s3[:, None]
+        else:
+            for w in ("wg", "wu"):
+                p[f"{pre}.{w}"] = p[f"{pre}.{w}"] / s2[:, None]
+            s3 = outlier_scale(rng, ff, n_massive=3, mo_hi=40.0)
+            p[f"{pre}.wu"] = p[f"{pre}.wu"] * s3[None, :]
+            p[f"{pre}.wd"] = p[f"{pre}.wd"] / s3[:, None]
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def train_one(name: str, data_dir: str, out_dir: str, fast: bool,
+              init_from: str | None = None) -> None:
+    cfg = M.CONFIGS[name]
+    steps, bsz, lr = SCHEDULE[name]
+    if fast:
+        steps = max(20, steps // 10)
+    if name == "sq-m-chat":
+        streams = [load_corpus(data_dir, "chat_train"),
+                   load_corpus(data_dir, "wiki_train")]
+        weights = [0.8, 0.2]
+    else:
+        streams = [load_corpus(data_dir, "wiki_train"),
+                   load_corpus(data_dir, "web_train")]
+        weights = [0.6, 0.4]
+    batcher = Batcher(streams, weights, seed=zlib.crc32(name.encode()) % (2 ** 31))
+
+    if init_from:
+        tensors, _ = sqt.load(init_from)
+        params = {k: jnp.asarray(v) for k, v in tensors.items()}
+    else:
+        params = M.init_params(cfg, seed=42)
+    opt = adam_init(params)
+    update = make_update(cfg, lr, steps)
+
+    t0 = time.time()
+    loss = float("nan")
+    for step in range(steps):
+        tokens = jnp.asarray(batcher.batch(bsz, SEQ))
+        params, opt, loss = update(params, opt, tokens)
+        if step % 50 == 0 or step == steps - 1:
+            print(f"[{name}] step {step:4d}/{steps} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    if init_from is None:
+        # Checkpoints are folded exactly once; finetuned variants inherit the
+        # (function-preserving) outlier structure from their base model.
+        params = fold_outliers(cfg, params, seed=1234)
+    meta = {
+        "config": name, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "vocab_size": cfg.vocab_size,
+        "max_seq": cfg.max_seq, "score_seq": cfg.score_seq,
+        "rope_theta": cfg.rope_theta, "n_experts": cfg.n_experts,
+        "top_k": cfg.top_k, "train_steps": steps,
+        "final_loss": float(loss),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.sqt")
+    sqt.save(path, {k: np.asarray(v) for k, v in params.items()}, meta)
+    print(f"[{name}] saved {path} (final loss {float(loss):.4f})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--data", default=None)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated config names")
+    args = ap.parse_args()
+    data_dir = args.data or os.path.join(os.path.dirname(args.out), "data")
+
+    names = (args.only.split(",") if args.only else
+             ["sq-s", "sq-m", "sq-l", "sq-xl", "sq-moe", "sq-m-chat"])
+    for name in names:
+        init = None
+        if name == "sq-m-chat":
+            base = os.path.join(args.out, "sq-m.sqt")
+            init = base if os.path.exists(base) else None
+        train_one(name, data_dir, args.out, args.fast, init_from=init)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Data generation determinism + SQT round-trip + outlier folding."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile import model as M
+from compile import sqt
+from compile.train import fold_outliers, outlier_scale
+
+
+class TestTokenizer:
+    def test_roundtrip(self):
+        s = "the weaving master zorbal kept a red heron ."
+        assert D.decode(D.encode(s)) == s
+
+    def test_specials(self):
+        ids = D.encode("ab", bos=True, eos=True)
+        assert ids[0] == D.BOS and ids[-1] == D.EOS
+        assert D.decode(ids) == "ab"
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+                   max_size=60))
+    def test_roundtrip_hypothesis(self, s):
+        assert D.decode(D.encode(s)) == s
+
+
+class TestWorld:
+    def test_deterministic(self):
+        w1, w2 = D.World(7), D.World(7)
+        assert w1.names == w2.names
+        assert w1.color == w2.color
+
+    def test_corpus_deterministic(self):
+        w = D.World(7)
+        assert D.gen_wiki_corpus(w, 50, 1) == D.gen_wiki_corpus(w, 50, 1)
+        assert D.gen_wiki_corpus(w, 50, 1) != D.gen_wiki_corpus(w, 50, 2)
+
+    def test_tasks_answers_valid(self):
+        w = D.World(7)
+        tasks = D.gen_tasks(w, 20, seed=3)
+        assert set(tasks) == {"facts_easy", "facts_hard", "continuation",
+                              "lastword", "procedure", "pronoun"}
+        for name, items in tasks.items():
+            for it in items:
+                assert 0 <= it["answer"] < len(it["options"])
+                assert len(set(it["options"])) == len(it["options"])
+
+    def test_mmlu_structure(self):
+        w = D.World(7)
+        m = D.gen_mmlu(w, 10, seed=4)
+        assert set(m["domains"]) == {"stem", "hums", "social", "others"}
+        for dom, shots in m["shots"].items():
+            assert "question :" in shots and "answer :" in shots
+
+
+class TestSqt:
+    def test_roundtrip(self, tmp_path):
+        path = os.path.join(tmp_path, "t.sqt")
+        tensors = {
+            "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.array([1, 2, 3], dtype=np.int32),
+            "c": np.array([7], dtype=np.uint16),
+            "d": np.frombuffer(b"hello", dtype=np.uint8),
+        }
+        sqt.save(path, tensors, {"k": "v", "n": 3})
+        out, meta = sqt.load(path)
+        assert meta == {"k": "v", "n": 3}
+        for k in tensors:
+            np.testing.assert_array_equal(out[k], tensors[k])
+            assert out[k].dtype == tensors[k].dtype
+
+    def test_scalarless_shapes(self, tmp_path):
+        path = os.path.join(tmp_path, "s.sqt")
+        sqt.save(path, {"x": np.zeros((2, 0, 3), np.float32)})
+        out, _ = sqt.load(path)
+        assert out["x"].shape == (2, 0, 3)
+
+
+class TestOutlierFolding:
+    def test_function_preserving(self):
+        cfg = M.CONFIGS["sq-xs"]
+        p = M.init_params(cfg, 0)
+        folded = fold_outliers(cfg, p, seed=9)
+        t = jnp.asarray(np.random.default_rng(0).integers(0, 260, (2, 12)),
+                        jnp.int32)
+        fp = [p[n] for n in M.param_layout(cfg, "fp")]
+        fd = [folded[n] for n in M.param_layout(cfg, "fp")]
+        (a,) = M.score_graph(cfg, "fp", t, *fp)
+        (b,) = M.score_graph(cfg, "fp", t, *fd)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_creates_outliers(self):
+        """Post-norm activations must show massive-outlier channels."""
+        cfg = M.CONFIGS["sq-xs"]
+        p = M.init_params(cfg, 0)
+        folded = fold_outliers(cfg, p, seed=9)
+        g = np.asarray(folded["l00.an"])
+        assert np.max(np.abs(g)) / np.median(np.abs(g)) > 5.0
+
+    def test_scale_shape(self):
+        s = outlier_scale(np.random.default_rng(0), 64)
+        assert s.shape == (64,)
+        assert np.sum(s > 8.0) >= 2  # massive channels present
+
+    def test_moe_folding(self):
+        cfg = M.CONFIGS["sq-moe"]
+        p = M.init_params(cfg, 0)
+        folded = fold_outliers(cfg, p, seed=9)
+        t = jnp.asarray(np.random.default_rng(1).integers(0, 260, (1, 8)),
+                        jnp.int32)
+        fp = [p[n] for n in M.param_layout(cfg, "fp")]
+        fd = [folded[n] for n in M.param_layout(cfg, "fp")]
+        (a,) = M.score_graph(cfg, "fp", t, *fp)
+        (b,) = M.score_graph(cfg, "fp", t, *fd)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-3)

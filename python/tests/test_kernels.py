@@ -1,0 +1,168 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Includes hypothesis sweeps over shapes (the kernels pick tile sizes from
+divisors, so odd shapes exercise the tiling logic) and algebraic invariants
+(orthogonality preservation, quantization grid membership).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return jnp.asarray(rng.normal(0, scale, size=shape).astype(np.float32))
+
+
+def rand_orth(n, seed=0):
+    q, _ = np.linalg.qr(np.random.default_rng(seed).normal(size=(n, n)))
+    return jnp.asarray(q.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+
+class TestQuantMatmul:
+    def test_matches_ref(self):
+        x, w = rand((24, 96)), rand((96, 64))
+        np.testing.assert_allclose(kernels.quant_matmul(x, w, 4),
+                                   ref.quant_matmul(x, w, 4), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_bit_widths(self, bits):
+        x, w = rand((8, 32)), rand((32, 16))
+        np.testing.assert_allclose(kernels.quant_matmul(x, w, bits),
+                                   ref.quant_matmul(x, w, bits), rtol=1e-5, atol=1e-5)
+
+    def test_clip(self):
+        x, w = rand((8, 32)), rand((32, 16))
+        np.testing.assert_allclose(kernels.quant_matmul(x, w, 4, clip=0.7),
+                                   ref.quant_matmul(x, w, 4, clip=0.7),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_zero_rows_pass_through(self):
+        x = jnp.zeros((4, 16))
+        w = rand((16, 8))
+        out = kernels.quant_matmul(x, w, 4)
+        np.testing.assert_allclose(np.asarray(out), np.zeros((4, 8)), atol=1e-7)
+
+    def test_quantized_values_on_grid(self):
+        """Fake-quantized activations must land on the int grid x scale."""
+        x = rand((6, 20), scale=3.0)
+        q = ref.fake_quant_per_token(x, 4)
+        absmax = np.max(np.abs(np.asarray(x)), axis=1, keepdims=True)
+        scale = absmax / 7.0
+        ints = np.asarray(q) / scale
+        np.testing.assert_allclose(ints, np.round(ints), atol=1e-4)
+        assert ints.min() >= -8 - 1e-4 and ints.max() <= 7 + 1e-4
+
+    @settings(max_examples=15, deadline=None)
+    @given(t=st.integers(1, 40), n=st.integers(2, 48), c=st.integers(1, 40),
+           bits=st.sampled_from([3, 4, 8]))
+    def test_hypothesis_shapes(self, t, n, c, bits):
+        x, w = rand((t, n), seed=t * 1000 + n), rand((n, c), seed=c)
+        np.testing.assert_allclose(kernels.quant_matmul(x, w, bits),
+                                   ref.quant_matmul(x, w, bits),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# kron_rotate
+# ---------------------------------------------------------------------------
+
+
+class TestKronRotate:
+    def test_matches_ref(self):
+        x = rand((16, 96))
+        r1, r2 = rand_orth(12, 1), rand_orth(8, 2)
+        np.testing.assert_allclose(kernels.kron_rotate(x, r1, r2),
+                                   ref.kron_rotate(x, r1, r2), rtol=1e-5, atol=1e-5)
+
+    def test_equals_dense_kronecker(self):
+        """The two-sided form must equal x @ (R1 (x) R2) exactly (Eq. 31)."""
+        x = rand((5, 24))
+        r1, r2 = rand_orth(6, 3), rand_orth(4, 4)
+        dense = np.kron(np.asarray(r1), np.asarray(r2))
+        expect = np.asarray(x) @ dense
+        np.testing.assert_allclose(np.asarray(kernels.kron_rotate(x, r1, r2)),
+                                   expect, rtol=1e-5, atol=1e-5)
+
+    def test_norm_preserving(self):
+        x = rand((7, 64), scale=5.0)
+        r1, r2 = rand_orth(8, 5), rand_orth(8, 6)
+        y = kernels.kron_rotate(x, r1, r2)
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=1),
+                                   np.linalg.norm(np.asarray(x), axis=1),
+                                   rtol=1e-5)
+
+    def test_identity_is_noop(self):
+        x = rand((4, 32))
+        y = kernels.kron_rotate(x, jnp.eye(4), jnp.eye(8))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+    @settings(max_examples=12, deadline=None)
+    @given(t=st.integers(1, 30), n1=st.integers(2, 10), n2=st.integers(2, 10))
+    def test_hypothesis_shapes(self, t, n1, n2):
+        x = rand((t, n1 * n2), seed=t * 100 + n1 * 10 + n2)
+        r1, r2 = rand_orth(n1, n1), rand_orth(n2, n2)
+        np.testing.assert_allclose(kernels.kron_rotate(x, r1, r2),
+                                   ref.kron_rotate(x, r1, r2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# hadamard
+# ---------------------------------------------------------------------------
+
+
+class TestHadamard:
+    @pytest.mark.parametrize("n", [2, 8, 64, 128])
+    def test_matches_ref(self, n):
+        x = rand((6, n))
+        np.testing.assert_allclose(kernels.hadamard(x), ref.hadamard(x),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_orthogonal(self):
+        h = np.asarray(kernels.hadamard(jnp.eye(32)))
+        np.testing.assert_allclose(h @ h.T, np.eye(32), atol=1e-5)
+
+    def test_involution_up_to_transpose(self):
+        """H is symmetric for Sylvester construction: H(Hx) = x."""
+        x = rand((5, 16))
+        y = kernels.hadamard(kernels.hadamard(x))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
+    def test_spreads_spike(self):
+        """A one-hot row maps to constant magnitude — the outlier-smoothing
+        property QuaRot relies on."""
+        x = jnp.zeros((1, 64)).at[0, 17].set(8.0)
+        y = np.asarray(kernels.hadamard(x))
+        np.testing.assert_allclose(np.abs(y), np.full((1, 64), 1.0), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rtn weight quantizer
+# ---------------------------------------------------------------------------
+
+
+class TestRtnWeight:
+    @pytest.mark.parametrize("bits", [3, 4, 8])
+    def test_matches_ref(self, bits):
+        w = rand((48, 36), scale=0.3)
+        np.testing.assert_allclose(kernels.rtn_quant_weight(w, bits),
+                                   ref.fake_quant_per_channel(w, bits),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_error_decreases_with_bits(self):
+        w = rand((64, 32))
+        errs = [float(jnp.mean((kernels.rtn_quant_weight(w, b) - w) ** 2))
+                for b in (2, 4, 8)]
+        assert errs[0] > errs[1] > errs[2]

@@ -1,0 +1,158 @@
+"""L2 correctness: graph families, parameter layout, and quant semantics."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.data import VOCAB_SIZE
+
+CFG = M.CONFIGS["sq-xs"]
+
+
+def params_and_rots(seed=0):
+    p = M.init_params(CFG, seed)
+    allp = dict(p)
+    allp.update(M.identity_rotations(CFG))
+    return p, allp
+
+
+def flat(allp, mode):
+    return [allp[n] for n in M.param_layout(CFG, mode)]
+
+
+def toks(b, t, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(0, VOCAB_SIZE, size=(b, t)),
+        jnp.int32)
+
+
+class TestLayout:
+    def test_fp_layout_covers_all_weights(self):
+        names = M.param_layout(CFG, "fp")
+        assert names[0] == "emb.tok" and names[-1] == "out.head"
+        assert len(names) == len(set(names))
+
+    def test_quant_layout_extends_fp(self):
+        fp = M.param_layout(CFG, "fp")
+        q = M.param_layout(CFG, "w4a4")
+        assert q[: len(fp)] == fp
+        assert all(".rot_" in n or ".clip_" in n for n in q[len(fp):])
+
+    def test_shapes_resolve(self):
+        for mode in ("fp", "w4a4"):
+            for n in M.param_layout(CFG, mode):
+                M.param_shape(CFG, n)  # must not raise
+
+    def test_moe_layout(self):
+        moe = M.CONFIGS["sq-moe"]
+        names = M.param_layout(moe, "fp")
+        assert any(".router" in n for n in names)
+        assert any(".x0.wg" in n for n in names)
+
+    def test_kron_factor_algorithm1(self):
+        """n2 must be the power of two dividing n nearest sqrt(n)."""
+        for n in (64, 96, 128, 160, 256, 320, 416, 12):
+            n1, n2 = M.kron_factor(n)
+            assert n1 * n2 == n
+            assert n2 & (n2 - 1) == 0
+            best = min((a for a in [1 << k for k in range(20)] if n % a == 0),
+                       key=lambda a: abs(a - n ** 0.5))
+            assert n2 == best
+
+
+class TestGraphs:
+    def test_score_shapes(self):
+        _, allp = params_and_rots()
+        (lg,) = M.score_graph(CFG, "fp", toks(2, 12), *flat(allp, "fp"))
+        assert lg.shape == (2, 12, VOCAB_SIZE)
+
+    def test_identity_rotation_w4a16_equals_fp(self):
+        """With identity rotations and no act quant the graph must be fp-exact."""
+        _, allp = params_and_rots()
+        t = toks(2, 10)
+        (fp,) = M.score_graph(CFG, "fp", t, *flat(allp, "fp"))
+        (wa,) = M.score_graph(CFG, "w4a16", t, *flat(allp, "w4a16"))
+        np.testing.assert_allclose(np.asarray(fp), np.asarray(wa),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_rotation_invariance_w4a16(self):
+        """Rotating activations online and weights offline must cancel (Eq. 1)."""
+        p, allp = params_and_rots()
+        t = toks(2, 8, seed=3)
+        (fp,) = M.score_graph(CFG, "fp", t, *flat(allp, "fp"))
+
+        rng = np.random.default_rng(5)
+        rot = dict(allp)
+        d = CFG.d_model
+        n1, n2 = M.kron_factor(d)
+        q1, _ = np.linalg.qr(rng.normal(size=(n1, n1)))
+        q2, _ = np.linalg.qr(rng.normal(size=(n2, n2)))
+        r = np.kron(q1, q2).astype(np.float32)
+        for i in range(CFG.n_layers):
+            pre = f"l{i:02d}"
+            rot[f"{pre}.rot_qkv.r1"] = jnp.asarray(q1.astype(np.float32))
+            rot[f"{pre}.rot_qkv.r2"] = jnp.asarray(q2.astype(np.float32))
+            for w in ("wq", "wk", "wv"):
+                rot[f"{pre}.{w}"] = jnp.asarray(r.T @ np.asarray(allp[f"{pre}.{w}"]))
+        (wa,) = M.score_graph(CFG, "w4a16", t, *flat(rot, "w4a16"))
+        np.testing.assert_allclose(np.asarray(fp), np.asarray(wa),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_w4a4_differs_but_close(self):
+        _, allp = params_and_rots()
+        t = toks(2, 10)
+        (fp,) = M.score_graph(CFG, "fp", t, *flat(allp, "fp"))
+        (q,) = M.score_graph(CFG, "w4a4", t, *flat(allp, "w4a4"))
+        diff = float(jnp.abs(fp - q).mean())
+        assert 0 < diff < 10.0
+
+    def test_decode_matches_score(self):
+        """Autoregressive decode against the KV cache must reproduce the
+        full-sequence score logits position by position."""
+        _, allp = params_and_rots()
+        fl = flat(allp, "fp")
+        t = toks(2, 9, seed=7)
+        (sc,) = M.score_graph(CFG, "fp", t, *fl)
+        lg, kc, vc = M.prefill_graph(CFG, "fp", t[:, :6], *fl)
+        np.testing.assert_allclose(np.asarray(lg[:, :6]), np.asarray(sc[:, :6]),
+                                   rtol=1e-4, atol=1e-4)
+        for pos in range(6, 9):
+            posv = jnp.asarray([pos, pos], jnp.int32)
+            lg, kc, vc = M.decode_graph(CFG, "fp", t[:, pos], posv,
+                                        kc, vc, *fl)
+            np.testing.assert_allclose(np.asarray(lg), np.asarray(sc[:, pos]),
+                                       rtol=1e-4, atol=2e-4)
+
+    def test_decode_ragged_positions(self):
+        """Slots at different positions must decode independently."""
+        _, allp = params_and_rots()
+        fl = flat(allp, "fp")
+        t = toks(2, 8, seed=11)
+        (sc,) = M.score_graph(CFG, "fp", t, *fl)
+        # row 0 prefilled 4 tokens, row 1 prefilled 6
+        lg, kc, vc = M.prefill_graph(CFG, "fp", t[:, :6], *fl)
+        # zero out row 0's cache beyond its true length to mimic ragged fill
+        kc = kc.at[:, 0, :, 4:, :].set(0.0)
+        vc = vc.at[:, 0, :, 4:, :].set(0.0)
+        posv = jnp.asarray([4, 6], jnp.int32)
+        tokv = jnp.asarray([t[0, 4], t[1, 6]], jnp.int32)
+        lg, kc, vc = M.decode_graph(CFG, "fp", tokv, posv, kc, vc, *fl)
+        np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(sc[0, 4]),
+                                   rtol=1e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(lg[1]), np.asarray(sc[1, 6]),
+                                   rtol=1e-4, atol=2e-4)
+
+    def test_moe_forward(self):
+        moe = M.CONFIGS["sq-moe"]
+        p = M.init_params(moe, 1)
+        allp = dict(p)
+        allp.update(M.identity_rotations(moe))
+        fl = [allp[n] for n in M.param_layout(moe, "fp")]
+        (lg,) = M.score_graph(moe, "fp", toks(2, 8), *fl)
+        assert lg.shape == (2, 8, VOCAB_SIZE)
+        assert bool(jnp.all(jnp.isfinite(lg)))
+
+    def test_loss_decreases_direction(self):
+        p, _ = params_and_rots()
+        loss = float(M.lm_loss(CFG, p, toks(4, 24)))
+        assert 4.0 < loss < 8.0  # ~ln(260) at init

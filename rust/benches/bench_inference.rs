@@ -1,0 +1,93 @@
+//! `cargo bench --bench bench_inference` — Fig. 3's measurement core:
+//! prefill / decode-step latency vs batch size for the fp32 and W4A4
+//! (SingleQuant) runtime graphs, plus the serving coordinator's
+//! end-to-end throughput at each batch width.
+
+use std::sync::Arc;
+
+use singlequant::coordinator::{Request, ServeConfig, ServeEngine};
+use singlequant::model::Weights;
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::util::bench::{bench_for, header};
+use singlequant::util::rng::Rng;
+use singlequant::util::sqt::SqtFile;
+
+fn main() {
+    let dir = std::env::var("SQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("bench_inference: run `make artifacts` first");
+        return;
+    }
+    let engine = Arc::new(Engine::new(&dir).expect("engine"));
+    let model = "sq-m";
+    let cfg = engine.config(model).unwrap();
+    let weights = Weights::load(&format!("{dir}/ckpt/{model}.sqt")).unwrap();
+    let corpus = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))
+        .unwrap()
+        .get("tokens")
+        .unwrap()
+        .as_u16()
+        .unwrap()
+        .to_vec();
+
+    println!("{}", header());
+    let batches: Vec<usize> = engine
+        .manifest
+        .get("serve_batches")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|b| b.as_usize().unwrap())
+        .collect();
+
+    for (label, method) in [("fp32", Method::Fp16), ("w4a4", Method::singlequant())] {
+        let qm = quantize(&cfg, &weights, &corpus, &PipelineOptions {
+            method,
+            ..Default::default()
+        })
+        .unwrap();
+        let runner = Arc::new(ModelRunner::new(engine.clone(), &qm).unwrap());
+        let t = cfg.score_seq;
+        let mut rng = Rng::new(5);
+        for &b in &batches {
+            let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(256) as i32).collect();
+            let s = bench_for(&format!("{label}/prefill b={b}"), 0.6, || {
+                std::hint::black_box(runner.prefill(b, &tokens).unwrap().0.len());
+            });
+            println!("{}", s.row());
+            let (_, mut kv) = runner.prefill(b, &tokens).unwrap();
+            let step: Vec<i32> = vec![7; b];
+            let pos: Vec<i32> = vec![t as i32; b];
+            let s = bench_for(&format!("{label}/decode b={b}"), 0.6, || {
+                std::hint::black_box(runner.decode(&mut kv, &step, &pos).unwrap().len());
+            });
+            println!("{}", s.row());
+        }
+
+        // end-to-end coordinator throughput at batch 4
+        let mut serve = ServeEngine::new(
+            runner.clone(),
+            ServeConfig { batch: 4, max_new_cap: 16, seed: 3 },
+        );
+        for id in 0..12u64 {
+            let start = (id as usize * 311) % (corpus.len() - 64);
+            serve.submit(Request {
+                id,
+                prompt_tokens: corpus[start..start + 24 + (id as usize % 32)].to_vec(),
+                max_new_tokens: 12,
+                temperature: None,
+            });
+        }
+        let t0 = std::time::Instant::now();
+        let responses = serve.run_to_completion().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{label}/serve-e2e b=4: {} reqs in {:.2}s -> {:.1} gen tok/s",
+            responses.len(),
+            wall,
+            serve.metrics.generated_tokens as f64 / wall
+        );
+    }
+}

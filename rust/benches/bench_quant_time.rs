@@ -1,0 +1,44 @@
+//! `cargo bench --bench bench_quant_time` — Table 7/B.2: quantization
+//! wall-clock per method per model, on the real trained checkpoints.
+//! (criterion is unavailable offline; util::bench provides the harness.)
+
+use singlequant::model::Weights;
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::runtime::Engine;
+use singlequant::util::bench::{bench, header};
+use singlequant::util::sqt::SqtFile;
+
+fn main() {
+    let dir = std::env::var("SQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("bench_quant_time: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new(&dir).expect("engine");
+    let calib = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))
+        .unwrap()
+        .get("tokens")
+        .unwrap()
+        .as_u16()
+        .unwrap()
+        .to_vec();
+
+    println!("{}", header());
+    for model in ["sq-s", "sq-m", "sq-l", "sq-xl", "sq-moe"] {
+        let cfg = engine.config(model).unwrap();
+        let weights = Weights::load(&format!("{dir}/ckpt/{model}.sqt")).unwrap();
+        for (label, method, iters) in [
+            ("singlequant", Method::singlequant(), 5usize),
+            ("duquant", Method::DuQuant { steps: 16 }, 3),
+            ("spinquant-100", Method::SpinQuant { steps: 100 }, 1),
+            ("flatquant-60", Method::FlatQuant { steps: 60 }, 1),
+        ] {
+            let opts = PipelineOptions { method: method.clone(), ..Default::default() };
+            let stats = bench(&format!("{model}/{label}"), 0, iters, || {
+                let qm = quantize(&cfg, &weights, &calib, &opts).unwrap();
+                std::hint::black_box(qm.rots.len());
+            });
+            println!("{}", stats.row());
+        }
+    }
+}

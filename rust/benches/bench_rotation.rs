@@ -1,0 +1,128 @@
+//! `cargo bench --bench bench_rotation` — Layer-1 kernel and rotation-
+//! construction micro-benchmarks:
+//!
+//! * the AOT Pallas kernels through PJRT (Kronecker rotation vs dense
+//!   rotation vs plain/quantized matmul vs Hadamard) — the O(n^{3/2})
+//!   claim measured end to end;
+//! * Rust-side construction cost of ART / URT / composed rotations and the
+//!   GivensChain-vs-dense application crossover.
+
+use singlequant::rotation::art::art_rotation;
+use singlequant::rotation::givens::map_to_e1;
+use singlequant::rotation::kronecker::{kron_factor, kron_flops, dense_flops, kron_rotate_rows};
+use singlequant::rotation::singlequant::{build_site_rotation, SingleQuantConfig, SiteProfile};
+use singlequant::rotation::urt::urt_rotation;
+use singlequant::runtime::engine::{lit_f32, lit_i32};
+use singlequant::runtime::Engine;
+use singlequant::tensor::Tensor;
+use singlequant::util::bench::{bench_for, header};
+use singlequant::util::rng::Rng;
+
+fn main() {
+    let dir = std::env::var("SQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("{}", header());
+    let mut rng = Rng::new(1);
+
+    // ---- construction costs (pure Rust) ------------------------------------
+    for n in [64usize, 96, 160, 416] {
+        let profile: Vec<f32> = rng.normal_vec(n, 1.0);
+        let s = bench_for(&format!("construct/urt n={n}"), 0.3, || {
+            std::hint::black_box(urt_rotation(&profile));
+        });
+        println!("{}", s.row());
+        let (n1, _) = kron_factor(n);
+        let prof1: Vec<f32> = rng.normal_vec(n1, 1.0);
+        let s = bench_for(&format!("construct/art n1={n1}"), 0.3, || {
+            let mut r = Rng::new(7);
+            std::hint::black_box(art_rotation(&prof1, 20, &mut r));
+        });
+        println!("{}", s.row());
+        let sp = SiteProfile {
+            n,
+            signed_absmax: rng.normal_vec(n, 2.0),
+            median: rng.normal_vec(n, 0.5),
+        };
+        let s = bench_for(&format!("construct/composed n={n}"), 0.3, || {
+            std::hint::black_box(build_site_rotation(&sp, &SingleQuantConfig::default()));
+        });
+        println!("{}", s.row());
+    }
+
+    // ---- GivensChain O(n) vs dense O(n^2) application ----------------------
+    for n in [64usize, 256, 1024] {
+        let v = rng.normal_vec(n, 1.0);
+        let chain = map_to_e1(&v);
+        let dense = chain.to_matrix(n);
+        let x = rng.normal_vec(n, 1.0);
+        let s = bench_for(&format!("apply/chain n={n}"), 0.2, || {
+            let mut w = x.clone();
+            chain.apply_row(&mut w);
+            std::hint::black_box(w[0]);
+        });
+        println!("{}", s.row());
+        let s = bench_for(&format!("apply/dense n={n}"), 0.2, || {
+            let row = Tensor::from_raw(vec![1, n], x.clone());
+            std::hint::black_box(row.matmul(&dense).data()[0]);
+        });
+        println!("{}", s.row());
+    }
+
+    // ---- Kronecker vs dense rotation: Rust path + analytic flops -----------
+    for n in [256usize, 1024, 4096] {
+        let (n1, n2) = kron_factor(n);
+        println!(
+            "flops/kron n={n}: {} vs dense {} ({}x fewer)",
+            kron_flops(n1, n2),
+            dense_flops(n),
+            dense_flops(n) / kron_flops(n1, n2).max(1)
+        );
+    }
+    {
+        let n = 1024;
+        let (n1, n2) = kron_factor(n);
+        let x = Tensor::randn(&[64, n], 1.0, &mut rng);
+        let r1 = singlequant::tensor::decomp::random_orthogonal(n1, &mut rng);
+        let r2 = singlequant::tensor::decomp::random_orthogonal(n2, &mut rng);
+        let rd = singlequant::tensor::decomp::random_orthogonal(n, &mut rng);
+        let s = bench_for("rust/kron_rotate n=1024", 0.4, || {
+            std::hint::black_box(kron_rotate_rows(&x, &r1, &r2).len());
+        });
+        println!("{}", s.row());
+        let s = bench_for("rust/dense_rotate n=1024", 0.4, || {
+            std::hint::black_box(x.matmul(&rd).len());
+        });
+        println!("{}", s.row());
+    }
+
+    // ---- AOT Pallas kernels through PJRT ------------------------------------
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        let engine = Engine::new(&dir).expect("engine");
+        let t = engine.manifest.get("kbench").unwrap().usize_at("t").unwrap();
+        let n = engine.manifest.get("kbench").unwrap().usize_at("n").unwrap();
+        let (n1, n2) = kron_factor(n);
+        let mut rng = Rng::new(3);
+        let x = lit_f32(&Tensor::randn(&[t, n], 1.0, &mut rng)).unwrap();
+        let w = lit_f32(&Tensor::randn(&[n, n], 0.5, &mut rng)).unwrap();
+        let r1 = lit_f32(&Tensor::eye(n1)).unwrap();
+        let r2 = lit_f32(&Tensor::eye(n2)).unwrap();
+        let rfull = lit_f32(&Tensor::eye(n)).unwrap();
+        let _ = lit_i32(&[0], &[1]); // keep helper linked
+        let cases: Vec<(&str, Vec<&xla::Literal>)> = vec![
+            ("kernel_kron", vec![&x, &r1, &r2]),
+            ("kernel_dense_rotate", vec![&x, &rfull]),
+            ("kernel_qmm", vec![&x, &w]),
+            ("kernel_mm", vec![&x, &w]),
+            ("kernel_hadamard", vec![&x]),
+        ];
+        for (name, inputs) in cases {
+            let art = engine.load(name).unwrap();
+            let lits: Vec<xla::Literal> = inputs.iter().map(|l| (*l).clone()).collect();
+            let s = bench_for(&format!("pjrt/{name} t={t} n={n}"), 0.5, || {
+                std::hint::black_box(art.run(&lits).unwrap().len());
+            });
+            println!("{}", s.row());
+        }
+    } else {
+        eprintln!("(skipping PJRT kernel benches: no artifacts)");
+    }
+}

@@ -1,0 +1,29 @@
+//! `cargo bench --bench bench_tables` — regenerate the paper's tables and
+//! figures end to end. By default runs the fast evaluation budget so
+//! `cargo bench` completes in minutes; set `SQ_FULL=1` for the full
+//! budget, or `SQ_TABLES=table1,fig3` to select specific artifacts
+//! (default: a representative subset; `all` runs everything).
+
+use singlequant::experiments::{run_experiment, EvalBudget, ExpContext};
+
+fn main() {
+    let dir = std::env::var("SQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("bench_tables: run `make artifacts` first");
+        return;
+    }
+    let budget = if std::env::var("SQ_FULL").is_ok() {
+        EvalBudget::full()
+    } else {
+        EvalBudget::fast()
+    };
+    let ctx = ExpContext::new(&dir, budget).expect("context");
+    let ids = std::env::var("SQ_TABLES")
+        .unwrap_or_else(|_| "table6,table7,table8,fig1b,fig2".into());
+    for id in ids.split(',') {
+        println!("=== {id} ===");
+        if let Err(e) = run_experiment(&ctx, id.trim()) {
+            eprintln!("{id}: {e:#}");
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Analyses behind the paper's motivating figures: the STE/Cayley
+//! instability study (§3.2, Fig. 2/B.1) and the outlier / quantization-
+//! space-utilization geometry (Fig. 1b).
+
+pub mod outliers;
+pub mod ste;

@@ -1,0 +1,211 @@
+//! Calibration: the **single pass** of SingleQuant's title.
+//!
+//! Runs the Rust reference forward over a handful of calibration sequences
+//! and records, per rotation site:
+//!
+//! * the per-channel signed absmax (ART's massive-outlier profile),
+//! * a token reservoir sample (URT medians, clip search, learned-rotation
+//!   baselines, quant-error analyses),
+//! * the Hessian Xᵀ X (GPTQ).
+//!
+//! One forward pass feeds every method — closed-form and learned alike — so
+//! the Table-7 quantization-time comparison isolates the *transform
+//! construction* cost, exactly the paper's framing.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::forward::{forward_score, Tap};
+use crate::model::{ModelConfig, Weights};
+use crate::tensor::{stats, Tensor};
+use crate::util::rng::Rng;
+
+/// Per-site calibration summary.
+#[derive(Clone, Debug)]
+pub struct SiteCalib {
+    pub n: usize,
+    pub signed_absmax: Vec<f32>,
+    /// Token reservoir, [S, n] with S <= max_sample (materialized from
+    /// `rows` once the pass completes).
+    pub sample: Tensor,
+    rows: Vec<Vec<f32>>,
+    /// Accumulated Xᵀ X (only when the weight quantizer needs it — GPTQ;
+    /// skipping it is a large fraction of the single-pass cost).
+    pub hessian: Tensor,
+    pub token_count: usize,
+}
+
+impl SiteCalib {
+    fn new(n: usize, with_hessian: bool) -> SiteCalib {
+        SiteCalib {
+            n,
+            signed_absmax: vec![0.0; n],
+            sample: Tensor::zeros(&[0, n]),
+            rows: Vec::new(),
+            hessian: if with_hessian {
+                Tensor::zeros(&[n, n])
+            } else {
+                Tensor::zeros(&[0, 0])
+            },
+            token_count: 0,
+        }
+    }
+
+    /// Per-channel median over the reservoir (URT's NO profile).
+    pub fn median(&self) -> Vec<f32> {
+        if self.sample.rows() == 0 {
+            return vec![0.0; self.n];
+        }
+        stats::col_median(&self.sample)
+    }
+
+    pub fn absmax(&self) -> Vec<f32> {
+        self.signed_absmax.iter().map(|x| x.abs()).collect()
+    }
+}
+
+/// Full calibration result keyed by `l{i:02}.{site}`.
+pub struct Calibration {
+    pub sites: BTreeMap<String, SiteCalib>,
+    pub n_sequences: usize,
+    pub n_tokens: usize,
+}
+
+impl Calibration {
+    pub fn site(&self, layer: usize, site: &str) -> &SiteCalib {
+        &self.sites[&format!("l{layer:02}.{site}")]
+    }
+}
+
+/// Reservoir row-sampling cap per site.
+pub const MAX_SAMPLE: usize = 192;
+
+/// Run the calibration pass over `seqs` (token id sequences).
+pub fn run_calibration(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    seqs: &[Vec<u16>],
+    seed: u64,
+) -> Result<Calibration> {
+    run_calibration_opts(cfg, weights, seqs, seed, true)
+}
+
+/// Calibration with explicit control over Hessian accumulation (the
+/// Xᵀ X products are only consumed by GPTQ and dominate the tap cost).
+pub fn run_calibration_opts(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    seqs: &[Vec<u16>],
+    seed: u64,
+    with_hessian: bool,
+) -> Result<Calibration> {
+    let mut sites: BTreeMap<String, SiteCalib> = BTreeMap::new();
+    for layer in 0..cfg.n_layers {
+        for site in crate::model::config::ROT_SITES {
+            let (n, _, _) = cfg.site_dims(site);
+            sites.insert(format!("l{layer:02}.{site}"),
+                         SiteCalib::new(n, with_hessian));
+        }
+    }
+    let mut rng = Rng::new(seed);
+    let mut n_tokens = 0usize;
+    for seq in seqs {
+        n_tokens += seq.len();
+        let mut tap = |layer: usize, site: &str, x: &Tensor| {
+            let sc = sites.get_mut(&format!("l{layer:02}.{site}")).unwrap();
+            // signed absmax
+            for i in 0..x.rows() {
+                for (j, &v) in x.row(i).iter().enumerate() {
+                    if v.abs() > sc.signed_absmax[j].abs() {
+                        sc.signed_absmax[j] = v;
+                    }
+                }
+            }
+            if with_hessian {
+                sc.hessian = sc.hessian.add(&x.matmul_tn(x));
+            }
+            // reservoir sample over row buffers (materialized at the end)
+            for i in 0..x.rows() {
+                sc.token_count += 1;
+                if sc.rows.len() < MAX_SAMPLE {
+                    sc.rows.push(x.row(i).to_vec());
+                } else {
+                    let k = rng.below(sc.token_count);
+                    if k < MAX_SAMPLE {
+                        sc.rows[k] = x.row(i).to_vec();
+                    }
+                }
+            }
+        };
+        forward_score(cfg, weights, seq, None, Some(&mut tap as Tap))?;
+    }
+    for sc in sites.values_mut() {
+        sc.sample = Tensor::from_rows(&sc.rows);
+        sc.rows = Vec::new();
+    }
+    Ok(Calibration { sites, n_sequences: seqs.len(), n_tokens })
+}
+
+/// Load calibration sequences from a corpus token stream: `count` windows
+/// of length `len`, sampled deterministically.
+pub fn calib_sequences(tokens: &[u16], count: usize, len: usize, seed: u64) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let start = rng.below(tokens.len().saturating_sub(len + 1).max(1));
+        out.push(tokens[start..(start + len).min(tokens.len())].to_vec());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+
+    fn toks(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(260) as u16).collect()
+    }
+
+    #[test]
+    fn calibration_covers_all_sites() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let seqs = vec![toks(16, 1), toks(16, 2)];
+        let cal = run_calibration(&cfg, &w, &seqs, 7).unwrap();
+        assert_eq!(cal.sites.len(), cfg.n_layers * 4);
+        assert_eq!(cal.n_tokens, 32);
+        let sc = cal.site(0, "qkv");
+        assert_eq!(sc.n, cfg.d_model);
+        assert!(sc.sample.rows() > 0 && sc.sample.rows() <= MAX_SAMPLE);
+        assert!(sc.hessian.frob_norm() > 0.0);
+        assert!(sc.signed_absmax.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn down_site_has_ff_width() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let cal = run_calibration(&cfg, &w, &[toks(8, 3)], 7).unwrap();
+        assert_eq!(cal.site(1, "down").n, cfg.d_ff);
+    }
+
+    #[test]
+    fn reservoir_caps() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let seqs: Vec<Vec<u16>> = (0..20).map(|i| toks(16, i)).collect();
+        let cal = run_calibration(&cfg, &w, &seqs, 7).unwrap();
+        assert_eq!(cal.site(0, "qkv").sample.rows(), MAX_SAMPLE.min(320));
+    }
+
+    #[test]
+    fn calib_sequences_shape() {
+        let toks: Vec<u16> = (0..1000).map(|i| (i % 260) as u16).collect();
+        let seqs = calib_sequences(&toks, 5, 64, 1);
+        assert_eq!(seqs.len(), 5);
+        assert!(seqs.iter().all(|s| s.len() == 64));
+    }
+}

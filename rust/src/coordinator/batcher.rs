@@ -1,0 +1,261 @@
+//! Continuous batcher: the serving scheduler.
+//!
+//! A fixed-width slot table (the lowered batch size) runs one decode wave
+//! per tick; whenever slots free up and requests wait, the newcomers are
+//! prefilled together as a padded batch and join the wave in place. Mixed
+//! prompt lengths are handled by the per-slot `pos` vector of the decode
+//! graph and by reading each prompt's logits at its true last index from
+//! the full prefill logits.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::metrics::ServeMetrics;
+use super::request::{InFlight, Request, Response};
+use super::tokenizer::{decode as tok_decode, EOS, PAD};
+use crate::runtime::{KvCache, ModelRunner};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Slot count; must be one of the lowered serve batch sizes.
+    pub batch: usize,
+    /// Hard cap on generation length (cache capacity guard applies too).
+    pub max_new_cap: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { batch: 4, max_new_cap: 48, seed: 7 }
+    }
+}
+
+pub struct ServeEngine {
+    runner: Arc<ModelRunner>,
+    cfg: ServeConfig,
+    queue: VecDeque<Request>,
+    slots: Vec<Option<InFlight>>,
+    kv: KvCache,
+    pub metrics: ServeMetrics,
+    rng: Rng,
+    started: Option<Instant>,
+}
+
+impl ServeEngine {
+    pub fn new(runner: Arc<ModelRunner>, cfg: ServeConfig) -> ServeEngine {
+        let kv = runner.empty_kv(cfg.batch);
+        ServeEngine {
+            slots: (0..cfg.batch).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            kv,
+            metrics: ServeMetrics::default(),
+            rng: Rng::new(cfg.seed),
+            runner,
+            cfg,
+            started: None,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn sample(rng: &mut Rng, logits: &[f32], temperature: Option<f32>) -> u16 {
+        match temperature {
+            None => {
+                let mut best = 0usize;
+                for (i, &v) in logits.iter().enumerate() {
+                    if v > logits[best] {
+                        best = i;
+                    }
+                }
+                best as u16
+            }
+            Some(t) => {
+                let t = t.max(1e-3);
+                let maxv = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let probs: Vec<f32> =
+                    logits.iter().map(|&v| ((v - maxv) / t).exp()).collect();
+                let total: f32 = probs.iter().sum();
+                let mut u = rng.f32() * total;
+                for (i, &p) in probs.iter().enumerate() {
+                    u -= p;
+                    if u <= 0.0 {
+                        return i as u16;
+                    }
+                }
+                (probs.len() - 1) as u16
+            }
+        }
+    }
+
+    /// One scheduler tick: admit + prefill newcomers, one decode wave.
+    /// Returns the responses completed during this tick.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        let mut done = Vec::new();
+
+        // ---- admission + prefill -------------------------------------------
+        let free: Vec<usize> = (0..self.cfg.batch)
+            .filter(|&i| self.slots[i].is_none())
+            .collect();
+        if !free.is_empty() && !self.queue.is_empty() {
+            let t = self.runner.cfg.score_seq;
+            let mut tokens = vec![PAD as i32; self.cfg.batch * t];
+            let mut admitted: Vec<usize> = Vec::new();
+            for &slot in &free {
+                let Some(req) = self.queue.pop_front() else { break };
+                if req.prompt_tokens.is_empty() || req.prompt_tokens.len() > t {
+                    bail!("request {}: prompt length {} out of range (1..={t})",
+                          req.id, req.prompt_tokens.len());
+                }
+                for (j, &tok) in req.prompt_tokens.iter().enumerate() {
+                    tokens[slot * t + j] = tok as i32;
+                }
+                self.slots[slot] = Some(InFlight {
+                    req,
+                    admitted: Instant::now(),
+                    first_token: None,
+                    generated: Vec::new(),
+                    pos: 0,
+                    last_token: PAD,
+                });
+                admitted.push(slot);
+            }
+            if !admitted.is_empty() {
+                let t0 = Instant::now();
+                let (logits, mut fresh_kv) = self.runner.prefill(self.cfg.batch, &tokens)?;
+                self.metrics.prefill_call.record(t0.elapsed().as_secs_f64());
+                self.metrics.prefill_calls += 1;
+                let v = self.runner.cfg.vocab_size;
+                for &slot in &admitted {
+                    self.kv.copy_slot_from(&self.runner.cfg, &mut fresh_kv, slot)?;
+                    let inf = self.slots[slot].as_mut().unwrap();
+                    let plen = inf.req.prompt_tokens.len();
+                    self.metrics.prefill_tokens += plen;
+                    let row = row3(&logits, slot, plen - 1, v);
+                    let tok = Self::sample(&mut self.rng, row, inf.req.temperature);
+                    inf.first_token = Some(Instant::now());
+                    inf.generated.push(tok);
+                    inf.last_token = tok;
+                    inf.pos = plen;
+                    self.metrics.generated_tokens += 1;
+                }
+                // retire single-token completions immediately
+                for &slot in &admitted {
+                    if self.slot_finished(slot) {
+                        done.push(self.retire(slot));
+                    }
+                }
+            }
+        }
+
+        // ---- decode wave -----------------------------------------------------
+        if self.active() > 0 {
+            let b = self.cfg.batch;
+            let mut toks = vec![PAD as i32; b];
+            let mut pos = vec![0i32; b];
+            for (i, s) in self.slots.iter().enumerate() {
+                if let Some(inf) = s {
+                    toks[i] = inf.last_token as i32;
+                    pos[i] = inf.pos as i32;
+                }
+            }
+            let t0 = Instant::now();
+            let logits = self.runner.decode(&mut self.kv, &toks, &pos)?;
+            self.metrics.decode_step.record(t0.elapsed().as_secs_f64());
+            self.metrics.decode_steps += 1;
+            let v = self.runner.cfg.vocab_size;
+            for i in 0..b {
+                if let Some(inf) = self.slots[i].as_mut() {
+                    let row = &logits.data()[i * v..(i + 1) * v];
+                    let tok = Self::sample(&mut self.rng, row, inf.req.temperature);
+                    inf.generated.push(tok);
+                    inf.last_token = tok;
+                    inf.pos += 1;
+                    self.metrics.generated_tokens += 1;
+                }
+            }
+            for i in 0..b {
+                if self.slots[i].is_some() && self.slot_finished(i) {
+                    done.push(self.retire(i));
+                }
+            }
+        }
+
+        self.metrics.wall_s = self.started.unwrap().elapsed().as_secs_f64();
+        Ok(done)
+    }
+
+    fn slot_finished(&self, slot: usize) -> bool {
+        let inf = self.slots[slot].as_ref().unwrap();
+        let cap = inf.req.max_new_tokens.min(self.cfg.max_new_cap);
+        inf.last_token == EOS
+            || inf.generated.len() >= cap
+            || inf.pos + 1 >= self.runner.cfg.max_seq
+    }
+
+    fn retire(&mut self, slot: usize) -> Response {
+        let inf = self.slots[slot].take().unwrap();
+        let now = Instant::now();
+        let ttft = inf
+            .first_token
+            .map(|t| t.duration_since(inf.admitted).as_secs_f64())
+            .unwrap_or(0.0);
+        let latency = now.duration_since(inf.admitted).as_secs_f64();
+        self.metrics.ttft.record(ttft);
+        self.metrics.latency.record(latency);
+        self.metrics.completed += 1;
+        let mut tokens = inf.generated;
+        if tokens.last() == Some(&EOS) {
+            tokens.pop();
+        }
+        Response {
+            id: inf.req.id,
+            text: tok_decode(&tokens),
+            tokens,
+            ttft_s: ttft,
+            latency_s: latency,
+            prompt_len: inf.req.prompt_tokens.len(),
+        }
+    }
+
+    /// Drive until queue and slots drain.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while self.pending() > 0 || self.active() > 0 {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// Convenience: one-shot generation.
+    pub fn generate(&mut self, id: u64, prompt: &str, max_new: usize) -> Result<Response> {
+        self.submit(Request::from_text(id, prompt, max_new));
+        let mut responses = self.run_to_completion()?;
+        responses
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("no response produced"))
+    }
+}
+
+fn row3<'a>(t: &'a Tensor, i: usize, j: usize, v: usize) -> &'a [f32] {
+    let rows = t.shape()[1];
+    let base = (i * rows + j) * v;
+    &t.data()[base..base + v]
+}

@@ -1,0 +1,96 @@
+//! Serving metrics: latency histograms + throughput counters (the Fig. 3
+//! measurement surface).
+
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub ttft: Histogram,
+    pub latency: Histogram,
+    pub decode_step: Histogram,
+    pub prefill_call: Histogram,
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub prefill_tokens: usize,
+    pub decode_steps: usize,
+    pub prefill_calls: usize,
+    pub wall_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.wall_s
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
+             ttft p50={:.1}ms p95={:.1}ms latency p50={:.1}ms decode_step p50={:.2}ms",
+            self.completed,
+            self.generated_tokens,
+            self.wall_s,
+            self.decode_tokens_per_s(),
+            self.ttft.percentile(50.0) * 1e3,
+            self.ttft.percentile(95.0) * 1e3,
+            self.latency.percentile(50.0) * 1e3,
+            self.decode_step.percentile(50.0) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile(95.0) - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+    }
+}

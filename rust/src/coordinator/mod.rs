@@ -1,0 +1,17 @@
+//! The serving coordinator (Layer 3): request admission, continuous
+//! batching over the fixed-shape prefill/decode graphs, per-slot KV
+//! management, and serving metrics.
+//!
+//! Architecture follows the vLLM-router shape scaled to this testbed: a
+//! FIFO admission queue feeds a fixed-width slot table; newcomers are
+//! prefilled as a padded batch and join the decode wave in place (per-slot
+//! positions — the decode graph takes `pos: [B]`), finished requests retire
+//! their slot immediately. Python is never on this path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod tokenizer;
+
+pub use batcher::{ServeConfig, ServeEngine};
+pub use request::{Request, Response};

@@ -1,0 +1,49 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+use super::tokenizer;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_tokens: Vec<u16>,
+    pub max_new_tokens: usize,
+    /// Greedy when None; otherwise softmax temperature.
+    pub temperature: Option<f32>,
+}
+
+impl Request {
+    pub fn from_text(id: u64, text: &str, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt_tokens: tokenizer::encode(text),
+            max_new_tokens,
+            temperature: None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    pub text: String,
+    /// Time to first token (prefill completion), seconds.
+    pub ttft_s: f64,
+    /// Total request latency, seconds.
+    pub latency_s: f64,
+    pub prompt_len: usize,
+}
+
+/// Internal per-slot record while a request is in flight.
+#[derive(Debug)]
+pub struct InFlight {
+    pub req: Request,
+    pub admitted: Instant,
+    pub first_token: Option<Instant>,
+    pub generated: Vec<u16>,
+    /// Index at which the *next* token will be written into the KV cache.
+    pub pos: usize,
+    pub last_token: u16,
+}

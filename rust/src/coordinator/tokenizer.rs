@@ -1,0 +1,57 @@
+//! Byte-level tokenizer — the Rust twin of `python/compile/data.py`'s
+//! encode/decode (ids 0..255 = bytes, then BOS/EOS/PAD).
+
+pub const BOS: u16 = 256;
+pub const EOS: u16 = 257;
+pub const PAD: u16 = 258;
+pub const VOCAB_SIZE: usize = 260;
+
+pub fn encode(text: &str) -> Vec<u16> {
+    text.bytes().map(|b| b as u16).collect()
+}
+
+pub fn encode_with(text: &str, bos: bool, eos: bool) -> Vec<u16> {
+    let mut out = Vec::with_capacity(text.len() + 2);
+    if bos {
+        out.push(BOS);
+    }
+    out.extend(text.bytes().map(|b| b as u16));
+    if eos {
+        out.push(EOS);
+    }
+    out
+}
+
+pub fn decode(ids: &[u16]) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .filter(|&&i| i < 256)
+        .map(|&i| i as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let s = "the weaving master zorbal kept a red heron .";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn specials_stripped_on_decode() {
+        let ids = encode_with("ab", true, true);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(decode(&ids), "ab");
+    }
+
+    #[test]
+    fn non_ascii_lossy_safe() {
+        let s = "héllo";
+        assert_eq!(decode(&encode(s)), s);
+    }
+}

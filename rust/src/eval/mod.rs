@@ -1,0 +1,90 @@
+//! Evaluation harness: perplexity, zero-shot multiple-choice tasks, and
+//! the MMLU-style few-shot suite — the measurement surface behind
+//! Tables 1–6 and B.1/B.3. Scoring semantics follow lm-eval-harness:
+//! multiple-choice answers are ranked by summed log-likelihood of the
+//! option continuation given the context.
+
+pub mod ppl;
+pub mod tasks;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub context: String,
+    pub options: Vec<String>,
+    pub answer: usize,
+}
+
+fn parse_items(arr: &Json) -> Result<Vec<McItem>> {
+    arr.as_arr()?
+        .iter()
+        .map(|it| {
+            Ok(McItem {
+                context: it.str_at("context")?.to_string(),
+                options: it
+                    .get("options")?
+                    .as_arr()?
+                    .iter()
+                    .map(|o| Ok(o.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+                answer: it.usize_at("answer")?,
+            })
+        })
+        .collect()
+}
+
+/// The six zero-shot suites from `tasks.json`.
+pub struct TaskSuite {
+    pub tasks: Vec<(String, Vec<McItem>)>,
+}
+
+pub const TASK_ORDER: [&str; 6] = [
+    "facts_hard",   // ARC-C-like
+    "facts_easy",   // ARC-E-like
+    "continuation", // HellaSwag-like
+    "lastword",     // LAMBADA-like
+    "procedure",    // PIQA-like
+    "pronoun",      // WinoGrande-like
+];
+
+impl TaskSuite {
+    pub fn load(path: &str) -> Result<TaskSuite> {
+        let j = Json::parse_file(path)?;
+        let tasks_obj = j.get("tasks")?;
+        let mut tasks = Vec::new();
+        for name in TASK_ORDER {
+            let items = parse_items(tasks_obj.get(name)?)?;
+            tasks.push((name.to_string(), items));
+        }
+        Ok(TaskSuite { tasks })
+    }
+}
+
+/// The MMLU-like suite from `mmlu.json`.
+pub struct MmluSuite {
+    pub domains: Vec<(String, Vec<McItem>)>,
+    pub shots: std::collections::BTreeMap<String, String>,
+}
+
+pub const MMLU_DOMAINS: [&str; 4] = ["stem", "hums", "social", "others"];
+
+impl MmluSuite {
+    pub fn load(path: &str) -> Result<MmluSuite> {
+        let j = Json::parse_file(path)?;
+        let doms = j.get("domains")?;
+        let mut domains = Vec::new();
+        for name in MMLU_DOMAINS {
+            domains.push((name.to_string(), parse_items(doms.get(name)?)?));
+        }
+        let shots_json = j.get("shots")?.as_obj()?;
+        let shots = shots_json
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+            .collect::<Result<_>>()?;
+        Ok(MmluSuite { domains, shots })
+    }
+}

@@ -1,0 +1,66 @@
+//! Perplexity over a token corpus, scored through the PJRT graphs (the
+//! Table 1/4/5/6/B.3 metric).
+
+use anyhow::Result;
+
+use crate::runtime::ModelRunner;
+use crate::tensor::Tensor;
+
+/// exp(mean NLL) over non-overlapping windows of `window` tokens, up to
+/// `max_windows` windows.
+pub fn perplexity(
+    runner: &ModelRunner,
+    corpus: &[u16],
+    window: usize,
+    max_windows: usize,
+) -> Result<f64> {
+    let n_windows = (corpus.len() / window).min(max_windows).max(1);
+    let seqs: Vec<Vec<u16>> = (0..n_windows)
+        .map(|i| corpus[i * window..(i + 1) * window].to_vec())
+        .collect();
+    let logits = runner.score_many(&seqs)?;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (seq, lg) in seqs.iter().zip(&logits) {
+        total += window_nll(lg, seq);
+        count += seq.len() - 1;
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Summed next-token NLL of one window given its logits.
+pub fn window_nll(logits: &Tensor, tokens: &[u16]) -> f64 {
+    let mut total = 0.0f64;
+    for i in 0..tokens.len() - 1 {
+        total += token_nll(logits.row(i), tokens[i + 1] as usize);
+    }
+    total
+}
+
+#[inline]
+pub fn token_nll(row: &[f32], target: usize) -> f64 {
+    let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = maxv as f64
+        + (row.iter().map(|&v| ((v - maxv) as f64).exp()).sum::<f64>()).ln();
+    lse - row[target] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_nll_uniform() {
+        let row = vec![0.0f32; 10];
+        let nll = token_nll(&row, 3);
+        assert!((nll - (10f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn token_nll_confident() {
+        let mut row = vec![0.0f32; 10];
+        row[3] = 20.0;
+        assert!(token_nll(&row, 3) < 1e-3);
+        assert!(token_nll(&row, 4) > 10.0);
+    }
+}

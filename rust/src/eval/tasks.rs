@@ -1,0 +1,113 @@
+//! Multiple-choice accuracy via LM log-likelihood ranking (lm-eval
+//! semantics): each option continuation is appended to the context, the
+//! summed option-token log-likelihood picks the prediction.
+
+use anyhow::Result;
+
+use super::ppl::token_nll;
+use super::{McItem, MmluSuite, TaskSuite};
+use crate::coordinator::tokenizer::encode;
+use crate::runtime::ModelRunner;
+
+/// Accuracy on one item set. `max_items` trims for cheap sweeps.
+pub fn mc_accuracy(
+    runner: &ModelRunner,
+    items: &[McItem],
+    max_items: usize,
+    shot_prefix: Option<&str>,
+) -> Result<f64> {
+    let items = &items[..items.len().min(max_items)];
+    if items.is_empty() {
+        return Ok(0.0);
+    }
+    // Build all (context+option) sequences, remembering option spans.
+    let mut seqs: Vec<Vec<u16>> = Vec::new();
+    let mut spans: Vec<(usize, usize)> = Vec::new(); // (ctx_len, opt_len)
+    let cap = runner.max_score_len();
+    for it in items {
+        let ctx_text = match shot_prefix {
+            Some(p) => format!("{p}{}", it.context),
+            None => it.context.clone(),
+        };
+        let ctx = encode(&ctx_text);
+        for opt in &it.options {
+            let opt_toks = encode(opt);
+            let mut seq = ctx.clone();
+            seq.extend(&opt_toks);
+            // left-truncate (keep the tail: question + option) if too long
+            let (mut ctx_len, opt_len) = (ctx.len(), opt_toks.len());
+            if seq.len() > cap {
+                let drop = seq.len() - cap;
+                seq.drain(..drop);
+                ctx_len = ctx_len.saturating_sub(drop);
+            }
+            spans.push((ctx_len, opt_len));
+            seqs.push(seq);
+        }
+    }
+    let logits = runner.score_many(&seqs)?;
+    let mut correct = 0usize;
+    let mut cursor = 0usize;
+    for it in items {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for (oi, _) in it.options.iter().enumerate() {
+            let lg = &logits[cursor];
+            let (ctx_len, opt_len) = spans[cursor];
+            let seq = &seqs[cursor];
+            // log-likelihood of option tokens given the context: token at
+            // position p is predicted by logits at p-1.
+            let mut ll = 0.0f64;
+            for p in ctx_len..ctx_len + opt_len {
+                ll -= token_nll(lg.row(p - 1), seq[p] as usize);
+            }
+            if ll > best.1 {
+                best = (oi, ll);
+            }
+            cursor += 1;
+        }
+        if best.0 == it.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len() as f64)
+}
+
+/// Per-task and average accuracy on the six zero-shot suites.
+pub fn zero_shot_suite(
+    runner: &ModelRunner,
+    suite: &TaskSuite,
+    max_items: usize,
+) -> Result<(Vec<(String, f64)>, f64)> {
+    let mut per = Vec::new();
+    let mut sum = 0.0;
+    for (name, items) in &suite.tasks {
+        let acc = mc_accuracy(runner, items, max_items, None)?;
+        sum += acc;
+        per.push((name.clone(), acc));
+    }
+    let avg = sum / suite.tasks.len() as f64;
+    Ok((per, avg))
+}
+
+/// Per-domain and average accuracy on the MMLU-like suite.
+pub fn mmlu_suite(
+    runner: &ModelRunner,
+    suite: &MmluSuite,
+    max_items: usize,
+    five_shot: bool,
+) -> Result<(Vec<(String, f64)>, f64)> {
+    let mut per = Vec::new();
+    let mut sum = 0.0;
+    for (name, items) in &suite.domains {
+        let prefix = if five_shot {
+            suite.shots.get(name).map(|s| s.as_str())
+        } else {
+            None
+        };
+        let acc = mc_accuracy(runner, items, max_items, prefix)?;
+        sum += acc;
+        per.push((name.clone(), acc));
+    }
+    let avg = sum / suite.domains.len() as f64;
+    Ok((per, avg))
+}

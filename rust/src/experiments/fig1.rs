@@ -1,0 +1,130 @@
+//! Fig. 1a — the headline trade-off: quantization speed vs task accuracy
+//! vs inference latency for the main methods, summarized in one table.
+//!
+//! Fig. 1b — deterministic outlier smoothing: quantization-space
+//! utilization of real calibrated activations before/after each rotation
+//! construction, plus a 2-D Lemma-1 demo.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::analysis::outliers::{site_outlier_stats, utilization_after};
+use crate::calib::{calib_sequences, run_calibration};
+use crate::eval::tasks::zero_shot_suite;
+use crate::pipeline::{quantize, Method, PipelineOptions};
+use crate::rotation::givens::lemma1_givens;
+use crate::util::bench::{bench_for, Table};
+
+pub const MODEL: &str = "sq-m";
+
+pub fn run_tradeoff(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let suite = ctx.tasks()?;
+    let calib = ctx.corpus("wiki_train")?;
+    let cfg = ctx.config(MODEL)?;
+    let weights = ctx.weights(MODEL)?;
+
+    let methods: Vec<(String, Method)> = vec![
+        ("SpinQuant".into(), Method::SpinQuant { steps: 100 }),
+        ("DuQuant".into(), Method::DuQuant { steps: 16 }),
+        ("FlatQuant-like".into(), Method::FlatQuant { steps: 60 }),
+        ("SingleQuant".into(), Method::singlequant()),
+    ];
+    let mut table = Table::new(
+        "Fig 1a: quantization speed / accuracy / decode latency trade-off",
+        &["method", "quant time (s)", "models/hour", "0-shot avg↑",
+          "decode ms (b4)"],
+    );
+    for (label, method) in &methods {
+        let opts = PipelineOptions { method: method.clone(), ..Default::default() };
+        // quant time (single run here; Table 7 has the repeated-run version)
+        let t0 = std::time::Instant::now();
+        let _ = quantize(&cfg, &weights, &calib, &opts)?;
+        let qt = t0.elapsed().as_secs_f64();
+        let runner = ctx.runner(MODEL, &opts)?;
+        let (_, zs) = zero_shot_suite(&runner, &suite, ctx.budget.task_items)?;
+        // decode latency at batch 4
+        let t = cfg.score_seq;
+        let tokens = vec![3i32; 4 * t];
+        let (_, mut kv) = runner.prefill(4, &tokens)?;
+        let toks_step = vec![7i32; 4];
+        let pos = vec![t as i32; 4];
+        let d = bench_for("decode", 0.4, || {
+            runner.decode(&mut kv, &toks_step, &pos).unwrap();
+        });
+        println!("  [fig1a] {label}: quant {qt:.2}s zs {:.1} decode {:.2}ms",
+                 zs * 100.0, d.mean_s * 1e3);
+        table.row(vec![
+            label.clone(),
+            format!("{qt:.3}"),
+            format!("{:.0}", 3600.0 / qt.max(1e-9)),
+            format!("{:.1}", zs * 100.0),
+            format!("{:.2}", d.mean_s * 1e3),
+        ]);
+    }
+    table.print();
+    ctx.write_report("fig1a", &table.render())?;
+    Ok(vec![table])
+}
+
+pub fn run_utilization(ctx: &ExpContext) -> Result<Vec<Table>> {
+    // 2-D Lemma-1 demo
+    let mut demo = Table::new(
+        "Fig 1b (left): Lemma-1 Givens on a 2-D massive outlier",
+        &["vector", "x", "y", "‖·‖∞"],
+    );
+    let v0 = [28.0f32, 0.4];
+    let g = lemma1_givens(&v0, 0, 1);
+    let mut v1 = v0;
+    g.apply_row(&mut v1);
+    demo.row(vec!["before".into(), format!("{:.2}", v0[0]),
+                  format!("{:.2}", v0[1]),
+                  format!("{:.2}", v0[0].abs().max(v0[1].abs()))]);
+    demo.row(vec!["after θ*".into(), format!("{:.2}", v1[0]),
+                  format!("{:.2}", v1[1]),
+                  format!("{:.2}", v1[0].abs().max(v1[1].abs()))]);
+
+    // real-site utilization before/after each construction
+    let cfg = ctx.config(MODEL)?;
+    let weights = ctx.weights(MODEL)?;
+    let corpus = ctx.corpus("wiki_train")?;
+    let seqs = calib_sequences(&corpus, 6, 64, 5);
+    let cal = run_calibration(&cfg, &weights, &seqs, 5)?;
+
+    let mut util = Table::new(
+        "Fig 1b (right): quantization-space utilization per site",
+        &["site", "MO ratio", "kurtosis", "before", "QuaRot", "DuQuant",
+          "SingleQuant"],
+    );
+    let rot_methods: Vec<(&str, Method)> = vec![
+        ("QuaRot", Method::QuaRot),
+        ("DuQuant", Method::DuQuant { steps: 16 }),
+        ("SingleQuant", Method::singlequant()),
+    ];
+    // build each method's rotations once via the pipeline
+    let mut packages = Vec::new();
+    for (_, m) in &rot_methods {
+        let opts = PipelineOptions { method: m.clone(), ..Default::default() };
+        packages.push(ctx.package(MODEL, &opts)?);
+    }
+    for layer in [0usize, cfg.n_layers - 1] {
+        for site in ["qkv", "mlp", "down"] {
+            let key = format!("l{layer:02}.{site}");
+            let stats = site_outlier_stats(&cal, &key);
+            let sample = &cal.sites[&key].sample;
+            let mut row = vec![
+                key.clone(),
+                format!("{:.1}", stats.mo_ratio),
+                format!("{:.1}", stats.kurtosis),
+                format!("{:.3}", stats.utilization),
+            ];
+            for pkg in &packages {
+                row.push(format!("{:.3}", utilization_after(sample, &pkg.rots[&key])));
+            }
+            util.row(row);
+        }
+    }
+    demo.print();
+    util.print();
+    ctx.write_report("fig1b", &format!("{}\n{}", demo.render(), util.render()))?;
+    Ok(vec![demo, util])
+}

@@ -1,0 +1,61 @@
+//! Fig. 2 / B.1 — SpinQuant's STE-driven oscillation: loss and gradient-
+//! norm traces of Cayley SGD + STE on real calibration activations, at the
+//! prescribed step count and at 10× (Fig. 2's orange curve), across three
+//! models (Fig. B.1). Terminal sparklines replace the plot; the raw traces
+//! land in reports/fig2_traces.json.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::analysis::ste::{sparkline, ste_study};
+use crate::calib::{calib_sequences, run_calibration};
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+pub const MODELS: [&str; 3] = ["sq-s", "sq-m", "sq-l"];
+pub const BASE_STEPS: usize = 100;
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let calib_corpus = ctx.corpus("wiki_train")?;
+    let mut table = Table::new(
+        "Fig 2/B.1: Cayley SGD + STE instability (loss & grad-norm tails)",
+        &["site", "steps", "loss osc.", "grad floor", "step floor",
+          "loss spark", "grad spark"],
+    );
+    let base = if ctx.budget.ppl_windows <= 4 { 30 } else { BASE_STEPS };
+    let mut traces_json = Vec::new();
+    for model in MODELS {
+        let cfg = ctx.config(model)?;
+        let weights = ctx.weights(model)?;
+        let seqs = calib_sequences(&calib_corpus, 6, 48, 3);
+        let cal = run_calibration(&cfg, &weights, &seqs, 3)?;
+        for rep in ste_study(&cfg, &cal, &weights, base)? {
+            table.row(vec![
+                rep.site.clone(),
+                rep.steps.to_string(),
+                format!("{:.3}", rep.loss_oscillation),
+                format!("{:.2e}", rep.grad_floor),
+                format!("{:.2e}", rep.step_floor),
+                sparkline(&rep.trace.loss, 32),
+                sparkline(&rep.trace.grad_norm, 32),
+            ]);
+            println!("  [fig2] {} steps={}: osc {:.3} grad_floor {:.2e}",
+                     rep.site, rep.steps, rep.loss_oscillation, rep.grad_floor);
+            traces_json.push(Json::obj(vec![
+                ("site", Json::str(rep.site.clone())),
+                ("steps", Json::num(rep.steps as f64)),
+                ("loss", Json::arr(rep.trace.loss.iter()
+                                   .map(|&v| Json::num(v as f64)).collect())),
+                ("grad_norm", Json::arr(rep.trace.grad_norm.iter()
+                                        .map(|&v| Json::num(v as f64)).collect())),
+            ]));
+        }
+    }
+    table.print();
+    ctx.write_report("fig2", &table.render())?;
+    let dir = format!("{}/../reports", ctx.dir);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(format!("{dir}/fig2_traces.json"),
+                   Json::arr(traces_json).to_string())?;
+    Ok(vec![table])
+}

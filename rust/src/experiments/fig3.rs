@@ -1,0 +1,93 @@
+//! Fig. 3 — prefill and decode speedup vs batch size through the serving
+//! coordinator: FP16(f32) baseline vs the W4A4 runtime graph (SingleQuant
+//! rotations, the INT4-path stand-in) vs a FlatQuant-style dense online
+//! transform. Expected shape: quantized graphs faster than fp at equal
+//! batch; speedup roughly stable across batch sizes; the Kronecker
+//! transform's overhead small (Single ≈ INT4 > Flat-style).
+//!
+//! Note: on this CPU plugin INT4 GEMMs are fake-quant f32, so the
+//! "speedup" here measures the *runtime-graph overhead* shape rather than
+//! tensor-core gains; the analytic INT4 projection lives in
+//! EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::pipeline::{Method, PipelineOptions};
+use crate::util::bench::{bench_for, Table};
+use crate::util::rng::Rng;
+
+pub const MODEL: &str = "sq-m";
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let batches: Vec<usize> = ctx
+        .engine
+        .manifest
+        .get("serve_batches")?
+        .as_arr()?
+        .iter()
+        .map(|b| b.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    let cfg = ctx.config(MODEL)?;
+    let t = cfg.score_seq;
+
+    let fp_opts = PipelineOptions { method: Method::Fp16, ..Default::default() };
+    let sq_opts = PipelineOptions::default();
+    let flat_opts = PipelineOptions {
+        method: Method::FlatQuant { steps: 20 },
+        ..Default::default()
+    };
+    let fp = ctx.runner(MODEL, &fp_opts)?;
+    let sq = ctx.runner(MODEL, &sq_opts)?;
+    let flat = ctx.runner(MODEL, &flat_opts)?;
+
+    let mut rng = Rng::new(11);
+    let budget = if ctx.budget.ppl_windows <= 4 { 0.4 } else { 1.2 };
+
+    let mut prefill = Table::new(
+        "Fig 3 (top): prefill time per call & speedup vs FP16",
+        &["batch", "fp16 (ms)", "SingleQuant (ms)", "speedup", "Flat-style (ms)",
+          "speedup"],
+    );
+    let mut decode = Table::new(
+        "Fig 3 (bottom): decode step time & speedup vs FP16",
+        &["batch", "fp16 (ms)", "SingleQuant (ms)", "speedup", "Flat-style (ms)",
+          "speedup"],
+    );
+
+    for &b in &batches {
+        let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(256) as i32).collect();
+        let mut row_p = vec![b.to_string()];
+        let mut row_d = vec![b.to_string()];
+        let mut fp_ms = (0.0, 0.0);
+        for (i, runner) in [&fp, &sq, &flat].iter().enumerate() {
+            let s = bench_for(&format!("prefill b{b}"), budget, || {
+                runner.prefill(b, &tokens).unwrap();
+            });
+            let (_, mut kv) = runner.prefill(b, &tokens)?;
+            let toks_step: Vec<i32> = (0..b).map(|_| 7i32).collect();
+            let pos: Vec<i32> = (0..b).map(|_| t as i32).collect();
+            let d = bench_for(&format!("decode b{b}"), budget, || {
+                runner.decode(&mut kv, &toks_step, &pos).unwrap();
+            });
+            let (pm, dm) = (s.mean_s * 1e3, d.mean_s * 1e3);
+            if i == 0 {
+                fp_ms = (pm, dm);
+                row_p.push(format!("{pm:.1}"));
+                row_d.push(format!("{dm:.2}"));
+            } else {
+                row_p.push(format!("{pm:.1}"));
+                row_p.push(format!("{:.2}×", fp_ms.0 / pm));
+                row_d.push(format!("{dm:.2}"));
+                row_d.push(format!("{:.2}×", fp_ms.1 / dm));
+            }
+            println!("  [fig3] b{b} runner{i}: prefill {pm:.1}ms decode {dm:.2}ms");
+        }
+        prefill.row(row_p);
+        decode.row(row_d);
+    }
+    prefill.print();
+    decode.print();
+    ctx.write_report("fig3", &format!("{}\n{}", prefill.render(), decode.render()))?;
+    Ok(vec![prefill, decode])
+}

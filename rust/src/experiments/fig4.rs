@@ -1,0 +1,54 @@
+//! Fig. 4 — ART step sweep: performance vs the number of detect-and-rotate
+//! repetitions. The paper's point: one closed-form rotation already
+//! saturates; more steps add cost without consistent gains.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::eval::ppl::perplexity;
+use crate::eval::tasks::zero_shot_suite;
+use crate::pipeline::{Method, PipelineOptions};
+use crate::rotation::singlequant::SingleQuantConfig;
+use crate::util::bench::Table;
+
+pub const MODELS: [&str; 2] = ["sq-s", "sq-m"];
+pub const STEPS: [usize; 5] = [1, 2, 4, 8, 16];
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let wiki = ctx.corpus("wiki_eval")?;
+    let web = ctx.corpus("web_eval")?;
+    let suite = ctx.tasks()?;
+
+    let mut cols = vec!["ART steps".to_string()];
+    for m in MODELS {
+        cols.push(format!("{m} PPL avg↓"));
+        cols.push(format!("{m} 0-shot↑"));
+    }
+    let mut table = Table::new(
+        "Fig 4: SingleQuant vs ART step count",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for steps in STEPS {
+        let sq = SingleQuantConfig { art_steps: steps, ..Default::default() };
+        let opts = PipelineOptions {
+            method: Method::SingleQuant(sq),
+            ..Default::default()
+        };
+        let mut row = vec![steps.to_string()];
+        for model in MODELS {
+            let cfg = ctx.config(model)?;
+            let runner = ctx.runner(model, &opts)?;
+            let p1 = perplexity(&runner, &wiki, cfg.score_seq, ctx.budget.ppl_windows)?;
+            let p2 = perplexity(&runner, &web, cfg.score_seq, ctx.budget.ppl_windows)?;
+            let (_, zs) = zero_shot_suite(&runner, &suite, ctx.budget.task_items)?;
+            row.push(format!("{:.3}", (p1 + p2) / 2.0));
+            row.push(format!("{:.1}", zs * 100.0));
+            println!("  [fig4] steps={steps} {model}: ppl {:.3} zs {:.1}",
+                     (p1 + p2) / 2.0, zs * 100.0);
+        }
+        table.row(row);
+    }
+    table.print();
+    ctx.write_report("fig4", &table.render())?;
+    Ok(vec![table])
+}

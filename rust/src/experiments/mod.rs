@@ -1,0 +1,216 @@
+//! Experiment drivers: one module per table/figure of the paper.
+//!
+//! Each driver regenerates its artifact's rows through the full stack
+//! (pipeline → PJRT runtime → eval harness) and returns rendered tables;
+//! `singlequant reproduce <id>` is the CLI entry and `cargo bench` wraps
+//! the timing-sensitive ones. Absolute numbers are testbed-bound (CPU
+//! PJRT, ~1M-parameter models); the *shape* of each result — who wins, by
+//! roughly what factor, where the crossovers sit — is the reproduction
+//! target (DESIGN.md §Substitutions).
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+pub mod tableb3;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::{MmluSuite, TaskSuite};
+use crate::model::{ModelConfig, Weights};
+use crate::pipeline::{quantize, Method, PipelineOptions, QuantizedModel};
+use crate::quant::WeightQuantizer;
+use crate::runtime::{Engine, ModelRunner};
+use crate::util::bench::Table;
+use crate::util::sqt::SqtFile;
+
+/// Evaluation budget knobs (trimmed by `--fast`).
+#[derive(Clone, Debug)]
+pub struct EvalBudget {
+    pub ppl_windows: usize,
+    pub task_items: usize,
+    pub mmlu_items: usize,
+    pub serve_requests: usize,
+}
+
+impl EvalBudget {
+    pub fn full() -> EvalBudget {
+        EvalBudget { ppl_windows: 16, task_items: 48, mmlu_items: 32, serve_requests: 24 }
+    }
+
+    pub fn fast() -> EvalBudget {
+        EvalBudget { ppl_windows: 4, task_items: 10, mmlu_items: 8, serve_requests: 6 }
+    }
+}
+
+/// Shared experiment context: engine, corpora, suites, package cache.
+pub struct ExpContext {
+    pub engine: Arc<Engine>,
+    pub dir: String,
+    pub budget: EvalBudget,
+    corpora: HashMap<String, Vec<u16>>,
+    packages: std::sync::Mutex<HashMap<String, Arc<QuantizedModel>>>,
+    runners: std::sync::Mutex<HashMap<String, Arc<ModelRunner>>>,
+}
+
+impl ExpContext {
+    pub fn new(artifacts_dir: &str, budget: EvalBudget) -> Result<ExpContext> {
+        let engine = Arc::new(Engine::new(artifacts_dir)?);
+        Ok(ExpContext {
+            engine,
+            dir: artifacts_dir.to_string(),
+            budget,
+            corpora: HashMap::new(),
+            packages: std::sync::Mutex::new(HashMap::new()),
+            runners: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn corpus(&self, name: &str) -> Result<Vec<u16>> {
+        if let Some(c) = self.corpora.get(name) {
+            return Ok(c.clone());
+        }
+        let f = SqtFile::load(&format!("{}/data/corpus_{name}.sqt", self.dir))?;
+        Ok(f.get("tokens")?.as_u16()?.to_vec())
+    }
+
+    pub fn tasks(&self) -> Result<TaskSuite> {
+        TaskSuite::load(&format!("{}/data/tasks.json", self.dir))
+    }
+
+    pub fn mmlu(&self) -> Result<MmluSuite> {
+        MmluSuite::load(&format!("{}/data/mmlu.json", self.dir))
+    }
+
+    pub fn weights(&self, model: &str) -> Result<Weights> {
+        Weights::load(&format!("{}/ckpt/{model}.sqt", self.dir))
+    }
+
+    pub fn config(&self, model: &str) -> Result<ModelConfig> {
+        self.engine.config(model)
+    }
+
+    /// Quantize (cached) under the given options.
+    pub fn package(&self, model: &str, opts: &PipelineOptions) -> Result<Arc<QuantizedModel>> {
+        let key = format!(
+            "{model}|{}|{}|w{}a{}|lct{}",
+            opts.method.cache_key(),
+            opts.weight_quantizer.label(),
+            opts.weight_bits,
+            opts.act_bits,
+            opts.lct
+        );
+        if let Some(p) = self.packages.lock().unwrap().get(&key) {
+            return Ok(p.clone());
+        }
+        let cfg = self.config(model)?;
+        let weights = self.weights(model)?;
+        let calib = self.corpus("wiki_train")?;
+        let qm = Arc::new(quantize(&cfg, &weights, &calib, opts)?);
+        self.packages.lock().unwrap().insert(key, qm.clone());
+        Ok(qm)
+    }
+
+    /// Runner for a quantized package (cached by the same key).
+    pub fn runner(&self, model: &str, opts: &PipelineOptions) -> Result<Arc<ModelRunner>> {
+        let key = format!(
+            "{model}|{}|{}|w{}a{}|lct{}",
+            opts.method.cache_key(),
+            opts.weight_quantizer.label(),
+            opts.weight_bits,
+            opts.act_bits,
+            opts.lct
+        );
+        if let Some(r) = self.runners.lock().unwrap().get(&key) {
+            return Ok(r.clone());
+        }
+        let qm = self.package(model, opts)?;
+        let runner = Arc::new(ModelRunner::new(self.engine.clone(), &qm)?);
+        self.runners.lock().unwrap().insert(key, runner.clone());
+        Ok(runner)
+    }
+
+    /// Write a rendered report to `<artifacts>/../reports/<name>.txt`.
+    pub fn write_report(&self, name: &str, text: &str) -> Result<()> {
+        let dir = format!("{}/../reports", self.dir);
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(format!("{dir}/{name}.txt"), text)?;
+        Ok(())
+    }
+}
+
+/// The W4A4 method matrix shared by Tables 1 and 2 (label, options).
+pub fn w4a4_method_matrix(full: bool) -> Vec<(String, PipelineOptions)> {
+    let mut rows: Vec<(String, PipelineOptions)> = Vec::new();
+    let base = PipelineOptions::default();
+    let mk = |label: &str, method: Method, wq: WeightQuantizer| {
+        (
+            label.to_string(),
+            PipelineOptions { method, weight_quantizer: wq, ..base.clone() },
+        )
+    };
+    rows.push(mk("FP16", Method::Fp16, WeightQuantizer::Rtn));
+    rows.push(mk("SmoothQuant (RTN)", Method::SmoothQuant { alpha: 0.5 },
+                 WeightQuantizer::Rtn));
+    rows.push(mk("RTN-only", Method::Rtn, WeightQuantizer::Rtn));
+    rows.push(mk("QuaRot (RTN)", Method::QuaRot, WeightQuantizer::Rtn));
+    if full {
+        rows.push(mk("QuaRot (GPTQ)", Method::QuaRot, WeightQuantizer::Gptq));
+    }
+    rows.push(mk("SpinQuant (RTN)", Method::SpinQuant { steps: 100 },
+                 WeightQuantizer::Rtn));
+    if full {
+        rows.push(mk("SpinQuant (GPTQ)", Method::SpinQuant { steps: 100 },
+                     WeightQuantizer::Gptq));
+    }
+    rows.push(mk("DuQuant (RTN)", Method::DuQuant { steps: 16 },
+                 WeightQuantizer::Rtn));
+    rows.push(mk("SingleQuant (RTN)", Method::singlequant(), WeightQuantizer::Rtn));
+    rows
+}
+
+/// Run one driver by id.
+pub fn run_experiment(ctx: &ExpContext, id: &str) -> Result<Vec<Table>> {
+    match id {
+        "table1" => table1::run(ctx),
+        "table2" => table2::run(ctx),
+        "table3" => table3::run(ctx),
+        "table4" => table4::run(ctx),
+        "table5" => table5::run(ctx),
+        "table6" => table6::run(ctx),
+        "table7" => table7::run(ctx),
+        "table8" => table8::run(ctx),
+        "tableb3" => tableb3::run(ctx),
+        "fig1a" => fig1::run_tradeoff(ctx),
+        "fig1b" => fig1::run_utilization(ctx),
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "all" => {
+            let mut out = Vec::new();
+            for id in [
+                "table1", "table2", "table3", "table4", "table5", "table6",
+                "table7", "table8", "tableb3", "fig1a", "fig1b", "fig2",
+                "fig3", "fig4",
+            ] {
+                println!(">>> {id}");
+                out.extend(run_experiment(ctx, id)?);
+            }
+            Ok(out)
+        }
+        other => Err(anyhow!(
+            "unknown experiment {other:?} (try table1..table8, tableb3, fig1a, fig1b, fig2, fig3, fig4, all)"
+        )),
+    }
+}

@@ -1,0 +1,48 @@
+//! Table 1 — W4A4 perplexity on the wiki-like (WikiText-2 stand-in) and
+//! web-like (C4 stand-in) corpora across model scales and methods.
+//!
+//! Expected shape (paper): rotation methods ≪ SmoothQuant; SingleQuant
+//! (RTN) competitive with or better than the optimized baselines, closest
+//! to FP16.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::eval::ppl::perplexity;
+use crate::util::bench::Table;
+
+pub const MODELS: [&str; 4] = ["sq-s", "sq-m", "sq-l", "sq-xl"];
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let wiki = ctx.corpus("wiki_eval")?;
+    let web = ctx.corpus("web_eval")?;
+    let methods = super::w4a4_method_matrix(true);
+
+    let mut cols = vec!["method".to_string()];
+    for m in MODELS {
+        cols.push(format!("{m} wiki↓"));
+        cols.push(format!("{m} web↓"));
+    }
+    let mut table = Table::new(
+        "Table 1: W4A4 perplexity (wiki-like / web-like)",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    for (label, opts) in &methods {
+        let mut row = vec![label.clone()];
+        for model in MODELS {
+            let cfg = ctx.config(model)?;
+            let runner = ctx.runner(model, opts)?;
+            let w = cfg.score_seq;
+            let p1 = perplexity(&runner, &wiki, w, ctx.budget.ppl_windows)?;
+            let p2 = perplexity(&runner, &web, w, ctx.budget.ppl_windows)?;
+            row.push(format!("{p1:.3}"));
+            row.push(format!("{p2:.3}"));
+            println!("  [table1] {label} {model}: wiki {p1:.3} web {p2:.3}");
+        }
+        table.row(row);
+    }
+    table.print();
+    ctx.write_report("table1", &table.render())?;
+    Ok(vec![table])
+}

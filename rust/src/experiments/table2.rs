@@ -1,0 +1,50 @@
+//! Table 2 + Appendix B.1 — zero-shot QA accuracy (six suites) of W4A4
+//! models. Emits both the average table (Table 2) and the per-task detail
+//! (Table B.1).
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::eval::tasks::zero_shot_suite;
+use crate::util::bench::Table;
+
+pub const MODELS: [&str; 3] = ["sq-s", "sq-m", "sq-l"];
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let suite = ctx.tasks()?;
+    let methods = super::w4a4_method_matrix(true);
+
+    let mut avg_cols = vec!["method".to_string()];
+    avg_cols.extend(MODELS.iter().map(|m| format!("{m} avg↑")));
+    let mut avg_table = Table::new(
+        "Table 2: zero-shot 6-task average accuracy (W4A4)",
+        &avg_cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let mut detail_cols = vec!["model".to_string(), "method".to_string()];
+    detail_cols.extend(suite.tasks.iter().map(|(n, _)| format!("{n}↑")));
+    detail_cols.push("avg↑".to_string());
+    let mut detail = Table::new(
+        "Table B.1: per-task zero-shot accuracy (W4A4)",
+        &detail_cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    for (label, opts) in &methods {
+        let mut row = vec![label.clone()];
+        for model in MODELS {
+            let runner = ctx.runner(model, opts)?;
+            let (per, avg) = zero_shot_suite(&runner, &suite, ctx.budget.task_items)?;
+            row.push(format!("{:.1}", avg * 100.0));
+            let mut drow = vec![model.to_string(), label.clone()];
+            drow.extend(per.iter().map(|(_, a)| format!("{:.1}", a * 100.0)));
+            drow.push(format!("{:.1}", avg * 100.0));
+            detail.row(drow);
+            println!("  [table2] {label} {model}: avg {:.1}", avg * 100.0);
+        }
+        avg_table.row(row);
+    }
+    avg_table.print();
+    detail.print();
+    ctx.write_report("table2", &format!("{}\n{}", avg_table.render(), detail.render()))?;
+    Ok(vec![avg_table, detail])
+}

@@ -1,0 +1,62 @@
+//! Table 3 — the instruction-tuned (Vicuna stand-in) model on the
+//! four-domain MMLU-like suite, 0-shot and 5-shot, W4A4.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::eval::tasks::mmlu_suite;
+use crate::pipeline::{Method, PipelineOptions};
+use crate::quant::WeightQuantizer;
+use crate::util::bench::Table;
+
+pub const MODEL: &str = "sq-m-chat";
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let suite = ctx.mmlu()?;
+    let methods: Vec<(String, PipelineOptions)> = vec![
+        ("FP16".into(),
+         PipelineOptions { method: Method::Fp16, ..Default::default() }),
+        ("SmoothQuant".into(),
+         PipelineOptions { method: Method::SmoothQuant { alpha: 0.5 },
+                           ..Default::default() }),
+        ("Atom-like (RTN-g)".into(),
+         PipelineOptions { method: Method::Rtn,
+                           weight_quantizer: WeightQuantizer::RtnGrouped(32),
+                           ..Default::default() }),
+        ("DuQuant".into(),
+         PipelineOptions { method: Method::DuQuant { steps: 16 },
+                           ..Default::default() }),
+        ("SingleQuant".into(),
+         PipelineOptions { method: Method::singlequant(), ..Default::default() }),
+    ];
+
+    let mut cols = vec!["method".to_string()];
+    for shot in ["0shot", "5shot"] {
+        for d in crate::eval::MMLU_DOMAINS {
+            cols.push(format!("{shot} {d}"));
+        }
+        cols.push(format!("{shot} avg↑"));
+    }
+    let mut table = Table::new(
+        "Table 3: MMLU-like accuracy, chat model (W4A4)",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    for (label, opts) in &methods {
+        let runner = ctx.runner(MODEL, opts)?;
+        let mut row = vec![label.clone()];
+        for five in [false, true] {
+            let (per, avg) = mmlu_suite(&runner, &suite, ctx.budget.mmlu_items, five)?;
+            for (_, acc) in &per {
+                row.push(format!("{:.1}", acc * 100.0));
+            }
+            row.push(format!("{:.1}", avg * 100.0));
+            println!("  [table3] {label} {}shot: avg {:.1}",
+                     if five { 5 } else { 0 }, avg * 100.0);
+        }
+        table.row(row);
+    }
+    table.print();
+    ctx.write_report("table3", &table.render())?;
+    Ok(vec![table])
+}

@@ -1,0 +1,46 @@
+//! Table 4 — the MoE (Mixtral stand-in) model: W4A4 perplexity on both
+//! corpora across methods. Expected shape: SingleQuant < DuQuant < AWQ <
+//! QuaRot-RTN, all ≪ naive; FP16 best.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::eval::ppl::perplexity;
+use crate::pipeline::{Method, PipelineOptions};
+use crate::util::bench::Table;
+
+pub const MODEL: &str = "sq-moe";
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let wiki = ctx.corpus("wiki_eval")?;
+    let web = ctx.corpus("web_eval")?;
+    let methods: Vec<(String, PipelineOptions)> = vec![
+        ("FP16".into(),
+         PipelineOptions { method: Method::Fp16, ..Default::default() }),
+        ("QuaRot".into(),
+         PipelineOptions { method: Method::QuaRot, ..Default::default() }),
+        ("AWQ".into(),
+         PipelineOptions { method: Method::Awq { grid: 10 }, ..Default::default() }),
+        ("DuQuant".into(),
+         PipelineOptions { method: Method::DuQuant { steps: 16 },
+                           ..Default::default() }),
+        ("SingleQuant".into(),
+         PipelineOptions { method: Method::singlequant(), ..Default::default() }),
+    ];
+
+    let mut table = Table::new(
+        "Table 4: MoE (Mixtral-style) W4A4 perplexity",
+        &["method", "wiki↓", "web↓"],
+    );
+    let cfg = ctx.config(MODEL)?;
+    for (label, opts) in &methods {
+        let runner = ctx.runner(MODEL, opts)?;
+        let p1 = perplexity(&runner, &wiki, cfg.score_seq, ctx.budget.ppl_windows)?;
+        let p2 = perplexity(&runner, &web, cfg.score_seq, ctx.budget.ppl_windows)?;
+        println!("  [table4] {label}: wiki {p1:.3} web {p2:.3}");
+        table.row(vec![label.clone(), format!("{p1:.3}"), format!("{p2:.3}")]);
+    }
+    table.print();
+    ctx.write_report("table4", &table.render())?;
+    Ok(vec![table])
+}

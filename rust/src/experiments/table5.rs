@@ -1,0 +1,57 @@
+//! Table 5 — SingleQuant vs FlatQuant (both Kronecker-structured), with
+//! and without the learnable clipping threshold (LCT). PPL AVG is the mean
+//! of the two corpora; 0-shot is the 6-task average.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::eval::ppl::perplexity;
+use crate::eval::tasks::zero_shot_suite;
+use crate::pipeline::{Method, PipelineOptions};
+use crate::util::bench::Table;
+
+pub const MODELS: [&str; 2] = ["sq-m", "sq-l"];
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let wiki = ctx.corpus("wiki_eval")?;
+    let web = ctx.corpus("web_eval")?;
+    let suite = ctx.tasks()?;
+
+    let mut cols = vec!["config".to_string(), "method".to_string()];
+    for m in MODELS {
+        cols.push(format!("{m} PPL avg↓"));
+        cols.push(format!("{m} 0-shot↑"));
+    }
+    let mut table = Table::new(
+        "Table 5: SingleQuant vs FlatQuant, with/without LCT (W4A4)",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    for lct in [true, false] {
+        for (label, method) in [
+            ("FlatQuant", Method::FlatQuant { steps: 60 }),
+            ("SingleQuant", Method::singlequant()),
+        ] {
+            let opts = PipelineOptions { method, lct, ..Default::default() };
+            let mut row = vec![
+                if lct { "w/ LCT" } else { "w/o LCT" }.to_string(),
+                label.to_string(),
+            ];
+            for model in MODELS {
+                let cfg = ctx.config(model)?;
+                let runner = ctx.runner(model, &opts)?;
+                let p1 = perplexity(&runner, &wiki, cfg.score_seq, ctx.budget.ppl_windows)?;
+                let p2 = perplexity(&runner, &web, cfg.score_seq, ctx.budget.ppl_windows)?;
+                let (_, zs) = zero_shot_suite(&runner, &suite, ctx.budget.task_items)?;
+                row.push(format!("{:.3}", (p1 + p2) / 2.0));
+                row.push(format!("{:.1}", zs * 100.0));
+                println!("  [table5] lct={lct} {label} {model}: ppl {:.3} zs {:.1}",
+                         (p1 + p2) / 2.0, zs * 100.0);
+            }
+            table.row(row);
+        }
+    }
+    table.print();
+    ctx.write_report("table5", &table.render())?;
+    Ok(vec![table])
+}

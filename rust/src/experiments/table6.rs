@@ -1,0 +1,54 @@
+//! Table 6 — component ablation: ART and URT on/off in all four
+//! combinations. Expected shape: ART alone > URT alone; ART+URT best.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::eval::ppl::perplexity;
+use crate::eval::tasks::zero_shot_suite;
+use crate::pipeline::{Method, PipelineOptions};
+use crate::rotation::singlequant::SingleQuantConfig;
+use crate::util::bench::Table;
+
+pub const MODELS: [&str; 2] = ["sq-m", "sq-l"];
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let wiki = ctx.corpus("wiki_eval")?;
+    let web = ctx.corpus("web_eval")?;
+    let suite = ctx.tasks()?;
+
+    let mut cols = vec!["ART".to_string(), "URT".to_string()];
+    for m in MODELS {
+        cols.push(format!("{m} PPL avg↓"));
+        cols.push(format!("{m} 0-shot↑"));
+    }
+    let mut table = Table::new(
+        "Table 6: ART/URT ablation (W4A4, RTN weights)",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    for (art, urt) in [(false, false), (true, false), (false, true), (true, true)] {
+        let sq = SingleQuantConfig { use_art: art, use_urt: urt, ..Default::default() };
+        let opts = PipelineOptions {
+            method: Method::SingleQuant(sq),
+            ..Default::default()
+        };
+        let mark = |b: bool| if b { "✓" } else { "–" }.to_string();
+        let mut row = vec![mark(art), mark(urt)];
+        for model in MODELS {
+            let cfg = ctx.config(model)?;
+            let runner = ctx.runner(model, &opts)?;
+            let p1 = perplexity(&runner, &wiki, cfg.score_seq, ctx.budget.ppl_windows)?;
+            let p2 = perplexity(&runner, &web, cfg.score_seq, ctx.budget.ppl_windows)?;
+            let (_, zs) = zero_shot_suite(&runner, &suite, ctx.budget.task_items)?;
+            row.push(format!("{:.3}", (p1 + p2) / 2.0));
+            row.push(format!("{:.1}", zs * 100.0));
+            println!("  [table6] art={art} urt={urt} {model}: ppl {:.3} zs {:.1}",
+                     (p1 + p2) / 2.0, zs * 100.0);
+        }
+        table.row(row);
+    }
+    table.print();
+    ctx.write_report("table6", &table.render())?;
+    Ok(vec![table])
+}

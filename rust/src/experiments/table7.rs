@@ -1,0 +1,73 @@
+//! Table 7 / B.2 — quantization wall-clock: SingleQuant's closed-form
+//! construction vs the optimization-based baselines (OSTQuant-like =
+//! FlatQuant-optimizer, SpinQuant). The paper's headline: SingleQuant is
+//! 2–4 orders of magnitude faster (37 s vs 14 h on LLaMA-2-13B).
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::pipeline::{quantize, Method, PipelineOptions};
+use crate::util::bench::Table;
+
+pub const MODELS: [&str; 5] = ["sq-s", "sq-m", "sq-l", "sq-xl", "sq-moe"];
+/// Repetitions per cell (the paper uses 10; trimmed under --fast).
+pub fn reps(ctx: &ExpContext) -> usize {
+    if ctx.budget.ppl_windows <= 4 { 2 } else { 5 }
+}
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let methods: Vec<(String, Method)> = vec![
+        ("OSTQuant-like".into(), Method::FlatQuant { steps: 60 }),
+        ("SpinQuant".into(), Method::SpinQuant { steps: 100 }),
+        ("SingleQuant".into(), Method::singlequant()),
+    ];
+    let mut cols = vec!["method".to_string()];
+    cols.extend(MODELS.iter().map(|m| format!("{m} (s)")));
+    cols.push("speedup vs Spin".to_string());
+    let mut table = Table::new(
+        "Table 7/B.2: quantization wall-clock (mean of repeated runs)",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let calib = ctx.corpus("wiki_train")?;
+    let n = reps(ctx);
+    let mut spin_times = vec![0.0f64; MODELS.len()];
+    let mut rows_raw: Vec<(String, Vec<f64>)> = Vec::new();
+    for (label, method) in &methods {
+        let mut times = Vec::new();
+        for (mi, model) in MODELS.iter().enumerate() {
+            let cfg = ctx.config(model)?;
+            let weights = ctx.weights(model)?;
+            let opts = PipelineOptions { method: method.clone(), ..Default::default() };
+            let mut total = 0.0f64;
+            for _ in 0..n {
+                let t0 = std::time::Instant::now();
+                let qm = quantize(&cfg, &weights, &calib, &opts)?;
+                std::hint::black_box(&qm.rots);
+                total += t0.elapsed().as_secs_f64();
+            }
+            let mean = total / n as f64;
+            if label == "SpinQuant" {
+                spin_times[mi] = mean;
+            }
+            println!("  [table7] {label} {model}: {mean:.2}s");
+            times.push(mean);
+        }
+        rows_raw.push((label.clone(), times));
+    }
+    for (label, times) in &rows_raw {
+        let mut row = vec![label.clone()];
+        row.extend(times.iter().map(|t| format!("{t:.3}")));
+        let speedup: f64 = spin_times
+            .iter()
+            .zip(times)
+            .map(|(s, t)| s / t.max(1e-9))
+            .sum::<f64>()
+            / MODELS.len() as f64;
+        row.push(format!("{speedup:.0}×"));
+        table.row(row);
+    }
+    table.print();
+    ctx.write_report("table7", &table.render())?;
+    Ok(vec![table])
+}

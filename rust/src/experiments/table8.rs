@@ -1,0 +1,86 @@
+//! Table 8 — peak memory at batch 1 for prefill and decode: model storage
+//! (packed-int weights + fp residue) plus activation/KV working set,
+//! FP16(f32 here) vs the W4A4 methods. Expected shape: ~3–4× savings for
+//! all W4A4 methods, SingleQuant marginally smallest (no extra transform
+//! state beyond the Kronecker factors).
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::pipeline::{Method, PipelineOptions};
+use crate::util::bench::Table;
+
+pub const MODEL: &str = "sq-m";
+
+struct MemRow {
+    label: String,
+    prefill_mb: f64,
+    decode_mb: f64,
+}
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let cfg = ctx.config(MODEL)?;
+    let batch = 1usize;
+    let t = cfg.score_seq;
+    // Working-set model (bytes): KV cache + peak activation + logits.
+    let kv = 2 * cfg.n_layers * batch * cfg.n_heads * cfg.max_seq * cfg.d_head() * 4;
+    let act_prefill = batch * t * (cfg.d_model * 6 + cfg.d_ff * 2) * 4
+        + batch * t * cfg.vocab_size * 4;
+    let act_decode = batch * (cfg.d_model * 6 + cfg.d_ff * 2) * 4
+        + batch * cfg.vocab_size * 4;
+
+    let methods: Vec<(String, PipelineOptions)> = vec![
+        ("FP16".into(),
+         PipelineOptions { method: Method::Fp16, ..Default::default() }),
+        ("SmoothQuant".into(),
+         PipelineOptions { method: Method::SmoothQuant { alpha: 0.5 },
+                           ..Default::default() }),
+        ("QuaRot".into(),
+         PipelineOptions { method: Method::QuaRot, ..Default::default() }),
+        ("DuQuant".into(),
+         PipelineOptions { method: Method::DuQuant { steps: 16 },
+                           ..Default::default() }),
+        ("SingleQuant".into(),
+         PipelineOptions { method: Method::singlequant(), ..Default::default() }),
+    ];
+
+    let mut rows = Vec::new();
+    for (label, opts) in &methods {
+        let qm = ctx.package(MODEL, opts)?;
+        // weight storage: packed ints for quantized linears, f32 rest;
+        // plus the per-site rotation factors/clips a method must keep live.
+        let rot_bytes: usize = qm
+            .rots
+            .values()
+            .map(|r| (r.r1.len() + r.r2.len() + 1) * 4)
+            .sum();
+        let weights = if qm.packed_bytes > 0 {
+            qm.packed_bytes + qm.fp_bytes + rot_bytes
+        } else {
+            qm.fp_bytes
+        };
+        rows.push(MemRow {
+            label: label.clone(),
+            prefill_mb: (weights + kv + act_prefill) as f64 / 1e6,
+            decode_mb: (weights + kv + act_decode) as f64 / 1e6,
+        });
+    }
+
+    let fp = (rows[0].prefill_mb, rows[0].decode_mb);
+    let mut table = Table::new(
+        "Table 8: peak memory at batch 1 (storage + working set)",
+        &["method", "prefill (MB)", "saving", "decode (MB)", "saving"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.label.clone(),
+            format!("{:.3}", r.prefill_mb),
+            if r.label == "FP16" { "-".into() } else { format!("{:.2}×", fp.0 / r.prefill_mb) },
+            format!("{:.3}", r.decode_mb),
+            if r.label == "FP16" { "-".into() } else { format!("{:.2}×", fp.1 / r.decode_mb) },
+        ]);
+    }
+    table.print();
+    ctx.write_report("table8", &table.render())?;
+    Ok(vec![table])
+}

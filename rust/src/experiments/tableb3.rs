@@ -1,0 +1,67 @@
+//! Table B.3 — weight-only quantization (W4A16 / W3A16) on the sq-m model:
+//! RTN, GPTQ, GPTQ-grouped, AWQ, QuIP-style incoherence, SingleQuant.
+//! Expected shape: at W4 everything is close; at W3 plain RTN collapses
+//! while rotation/compensation methods stay usable, SingleQuant
+//! competitive.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::eval::ppl::perplexity;
+use crate::pipeline::{Method, PipelineOptions};
+use crate::quant::WeightQuantizer;
+use crate::util::bench::Table;
+
+pub const MODEL: &str = "sq-m";
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
+    let wiki = ctx.corpus("wiki_eval")?;
+    let web = ctx.corpus("web_eval")?;
+    let cfg = ctx.config(MODEL)?;
+
+    let methods: Vec<(String, Method, WeightQuantizer)> = vec![
+        ("FP16".into(), Method::Fp16, WeightQuantizer::Rtn),
+        ("RTN".into(), Method::Rtn, WeightQuantizer::Rtn),
+        ("GPTQ".into(), Method::Rtn, WeightQuantizer::Gptq),
+        ("GPTQ-g32".into(), Method::Rtn, WeightQuantizer::GptqGrouped(32)),
+        ("AWQ".into(), Method::Awq { grid: 10 }, WeightQuantizer::Rtn),
+        ("QuIP-like".into(), Method::Quip, WeightQuantizer::Rtn),
+        ("SingleQuant".into(), Method::singlequant(), WeightQuantizer::Rtn),
+    ];
+
+    let mut table = Table::new(
+        "Table B.3: weight-only perplexity (sq-m)",
+        &["method", "W4A16 wiki↓", "W3A16 wiki↓", "W4A16 web↓", "W3A16 web↓"],
+    );
+    for (label, method, wq) in &methods {
+        let mut cells = vec![label.clone()];
+        let mut wiki_cells = Vec::new();
+        let mut web_cells = Vec::new();
+        for bits in [4u32, 3] {
+            if matches!(method, Method::Fp16) && bits == 3 {
+                wiki_cells.push("-".to_string());
+                web_cells.push("-".to_string());
+                continue;
+            }
+            let opts = PipelineOptions {
+                method: method.clone(),
+                weight_quantizer: *wq,
+                weight_bits: bits,
+                act_bits: 16,
+                ..Default::default()
+            };
+            let runner = ctx.runner(MODEL, &opts)?;
+            let p1 = perplexity(&runner, &wiki, cfg.score_seq, ctx.budget.ppl_windows)?;
+            let p2 = perplexity(&runner, &web, cfg.score_seq, ctx.budget.ppl_windows)?;
+            println!("  [tableb3] {label} W{bits}A16: wiki {p1:.3} web {p2:.3}");
+            wiki_cells.push(format!("{p1:.3}"));
+            web_cells.push(format!("{p2:.3}"));
+        }
+        cells.extend(wiki_cells);
+        cells.extend(web_cells);
+        table.row(cells);
+    }
+    table.print();
+    ctx.write_report("tableb3", &table.render())?;
+    Ok(vec![table])
+}

@@ -1,0 +1,36 @@
+//! # SingleQuant
+//!
+//! A full-system reproduction of *"Outlier Smoothing with Closed-Form
+//! Rotations for W4A4 Large Language Model Quantization"* (SingleQuant):
+//! optimization-free W4A4 post-training quantization via closed-form Givens
+//! rotations (ART + URT) with Kronecker-structured application, plus every
+//! baseline the paper evaluates (SmoothQuant, QuaRot, SpinQuant, DuQuant,
+//! FlatQuant, GPTQ/AWQ/QuIP weight quantizers).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the W4A4
+//!   GEMM and Kronecker-rotation hot path, AOT-lowered into the HLO.
+//! * **Layer 2** — JAX model (`python/compile/model.py`): LLaMA-style and
+//!   MoE forward graphs, lowered once to HLO text.
+//! * **Layer 3** — this crate: the quantization pipeline (calibration →
+//!   closed-form rotations → weight quantization), the PJRT runtime that
+//!   loads and executes the AOT artifacts, the serving coordinator
+//!   (continuous batching, prefill/decode scheduling), the evaluation
+//!   harness, and the experiment drivers that regenerate every table and
+//!   figure in the paper.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `singlequant` binary is self-contained.
+
+pub mod analysis;
+pub mod calib;
+pub mod coordinator;
+pub mod eval;
+pub mod experiments;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod rotation;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,268 @@
+//! `singlequant` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         — artifacts / configs / checkpoint summary
+//!   quantize                     — run the pipeline, save a package report
+//!   eval                         — PPL + zero-shot eval of one (model, method)
+//!   serve                        — serve a synthetic request trace, print metrics
+//!   generate                     — one-shot text generation
+//!   reproduce --id <id>          — regenerate a paper table/figure (or `all`)
+//!   analyze-ste                  — the Fig. 2 STE instability study
+//!
+//! Common flags: --artifacts DIR (default ./artifacts), --model NAME,
+//! --method NAME, --wq rtn|gptq, --wbits N, --abits N, --lct, --fast.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use singlequant::coordinator::{Request, ServeConfig, ServeEngine};
+use singlequant::eval::ppl::perplexity;
+use singlequant::eval::tasks::zero_shot_suite;
+use singlequant::experiments::{run_experiment, EvalBudget, ExpContext};
+use singlequant::pipeline::{Method, PipelineOptions};
+use singlequant::quant::WeightQuantizer;
+use singlequant::rotation::singlequant::SingleQuantConfig;
+use singlequant::runtime::ModelRunner;
+use singlequant::util::cli::Args;
+use singlequant::util::rng::Rng;
+
+fn method_from_name(name: &str) -> Result<Method> {
+    Ok(match name.to_lowercase().as_str() {
+        "fp16" | "fp" => Method::Fp16,
+        "rtn" => Method::Rtn,
+        "smoothquant" | "smooth" => Method::SmoothQuant { alpha: 0.5 },
+        "awq" => Method::Awq { grid: 10 },
+        "quarot" => Method::QuaRot,
+        "quip" => Method::Quip,
+        "spinquant" | "spin" => Method::SpinQuant { steps: 100 },
+        "duquant" | "duq" => Method::DuQuant { steps: 16 },
+        "flatquant" | "flat" => Method::FlatQuant { steps: 60 },
+        "singlequant" | "single" | "sq" => {
+            Method::SingleQuant(SingleQuantConfig::default())
+        }
+        other => bail!("unknown method {other:?}"),
+    })
+}
+
+/// Apply method-parameter overrides from CLI flags.
+fn tune_method(method: Method, args: &Args) -> Result<Method> {
+    Ok(match method {
+        Method::SingleQuant(mut c) => {
+            c.art_steps = args.usize_or("art-steps", c.art_steps)?;
+            if args.flag("urt-axis2") {
+                c.urt_axis2 = true;
+            }
+            Method::SingleQuant(c)
+        }
+        Method::SpinQuant { .. } => Method::SpinQuant {
+            steps: args.usize_or("opt-steps", 100)?,
+        },
+        Method::FlatQuant { .. } => Method::FlatQuant {
+            steps: args.usize_or("opt-steps", 60)?,
+        },
+        m => m,
+    })
+}
+
+fn wq_from_name(name: &str) -> Result<WeightQuantizer> {
+    Ok(match name.to_lowercase().as_str() {
+        "rtn" => WeightQuantizer::Rtn,
+        "gptq" => WeightQuantizer::Gptq,
+        "gptq-g32" => WeightQuantizer::GptqGrouped(32),
+        "rtn-g32" => WeightQuantizer::RtnGrouped(32),
+        other => bail!("unknown weight quantizer {other:?}"),
+    })
+}
+
+fn opts_from_args(args: &Args) -> Result<PipelineOptions> {
+    let method = tune_method(
+        method_from_name(args.get_or("method", "singlequant"))?,
+        args,
+    )?;
+    Ok(PipelineOptions {
+        method,
+        weight_quantizer: wq_from_name(args.get_or("wq", "rtn"))?,
+        weight_bits: args.usize_or("wbits", 4)? as u32,
+        act_bits: args.usize_or("abits", 4)? as u32,
+        lct: args.flag("lct"),
+        calib_seqs: args.usize_or("calib-seqs", 8)?,
+        calib_len: args.usize_or("calib-len", 96)?,
+        seed: args.usize_or("seed", 0x5142)? as u64,
+    })
+}
+
+fn ctx_from_args(args: &Args) -> Result<ExpContext> {
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let budget = if args.flag("fast") {
+        EvalBudget::fast()
+    } else {
+        EvalBudget::full()
+    };
+    ExpContext::new(&dir, budget)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["fast", "lct", "verbose", "urt-axis2"])?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    match sub.as_str() {
+        "info" => info(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "reproduce" => cmd_reproduce(&args),
+        "analyze-ste" => cmd_ste(&args),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "singlequant — W4A4 LLM quantization via closed-form rotations
+usage: singlequant <info|quantize|eval|serve|generate|reproduce|analyze-ste> [flags]
+  --artifacts DIR   artifact directory (default: artifacts)
+  --model NAME      sq-s | sq-m | sq-l | sq-xl | sq-moe | sq-m-chat
+  --method NAME     fp16|rtn|smoothquant|awq|quarot|quip|spinquant|duquant|flatquant|singlequant
+  --wq NAME         rtn | gptq | gptq-g32 | rtn-g32
+  --wbits N --abits N --lct --fast
+  reproduce --id X  table1..table8 tableb3 fig1a fig1b fig2 fig3 fig4 all
+  generate          --prompt TEXT --max-new N";
+
+fn info(args: &Args) -> Result<()> {
+    let ctx = ctx_from_args(args)?;
+    let configs = ctx.engine.manifest.get("configs")?.as_obj()?;
+    println!("artifacts: {}", ctx.dir);
+    println!("platform: {}", ctx.engine.client.platform_name());
+    for (name, c) in configs {
+        println!(
+            "  {name}: d={} L={} H={} ff={} experts={} kron_d={:?}",
+            c.usize_at("d_model")?,
+            c.usize_at("n_layers")?,
+            c.usize_at("n_heads")?,
+            c.usize_at("d_ff")?,
+            c.usize_at("n_experts")?,
+            c.get("kron_d")?.as_arr()?.iter()
+                .map(|x| x.as_usize().unwrap()).collect::<Vec<_>>(),
+        );
+    }
+    let n_arts = ctx.engine.manifest.get("artifacts")?.as_arr()?.len();
+    println!("{n_arts} HLO artifacts");
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let ctx = ctx_from_args(args)?;
+    let model = args.get_or("model", "sq-m");
+    let opts = opts_from_args(args)?;
+    let qm = ctx.package(model, &opts)?;
+    println!(
+        "quantized {model} with {} (wq {}, W{}A{}):",
+        qm.method_label,
+        args.get_or("wq", "rtn"),
+        opts.weight_bits,
+        opts.act_bits
+    );
+    println!("  calibration : {:.3}s", qm.calib_seconds);
+    println!("  transform   : {:.3}s", qm.transform_seconds);
+    println!("  weight quant: {:.3}s", qm.weight_quant_seconds);
+    println!("  total       : {:.3}s", qm.total_seconds());
+    println!("  packed bytes: {} (+{} fp)", qm.packed_bytes, qm.fp_bytes);
+    for (k, r) in qm.rots.iter().take(2) {
+        println!("  {k}: r1 {:?} r2 {:?} defect {:.2e}",
+                 r.r1.shape(), r.r2.shape(), r.defect());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let ctx = ctx_from_args(args)?;
+    let model = args.get_or("model", "sq-m");
+    let opts = opts_from_args(args)?;
+    let cfg = ctx.config(model)?;
+    let runner = ctx.runner(model, &opts)?;
+    let wiki = ctx.corpus("wiki_eval")?;
+    let web = ctx.corpus("web_eval")?;
+    let p1 = perplexity(&runner, &wiki, cfg.score_seq, ctx.budget.ppl_windows)?;
+    let p2 = perplexity(&runner, &web, cfg.score_seq, ctx.budget.ppl_windows)?;
+    println!("{model} [{}]: wiki ppl {p1:.3}  web ppl {p2:.3}", opts.method.label());
+    let suite = ctx.tasks()?;
+    let (per, avg) = zero_shot_suite(&runner, &suite, ctx.budget.task_items)?;
+    for (name, acc) in per {
+        println!("  {name:<14} {:.1}", acc * 100.0);
+    }
+    println!("  zero-shot avg  {:.1}", avg * 100.0);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ctx = ctx_from_args(args)?;
+    let model = args.get_or("model", "sq-m");
+    let opts = opts_from_args(args)?;
+    let qm = ctx.package(model, &opts)?;
+    let runner = Arc::new(ModelRunner::new(ctx.engine.clone(), &qm)?);
+    let batch = args.usize_or("batch", 4)?;
+    let n_req = args.usize_or("requests", ctx.budget.serve_requests)?;
+    let max_new = args.usize_or("max-new", 24)?;
+    let mut engine = ServeEngine::new(
+        runner,
+        ServeConfig { batch, max_new_cap: max_new, seed: 7 },
+    );
+
+    // synthetic request trace from corpus prompts
+    let corpus = ctx.corpus("wiki_eval")?;
+    let mut rng = Rng::new(13);
+    for id in 0..n_req {
+        let start = rng.below(corpus.len() - 64);
+        let len = 16 + rng.below(48);
+        let prompt = &corpus[start..start + len];
+        engine.submit(Request {
+            id: id as u64,
+            prompt_tokens: prompt.to_vec(),
+            max_new_tokens: max_new,
+            temperature: None,
+        });
+    }
+    let responses = engine.run_to_completion()?;
+    println!("served {} requests [{} | batch {batch}]", responses.len(),
+             opts.method.label());
+    println!("{}", engine.metrics.summary());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let ctx = ctx_from_args(args)?;
+    let model = args.get_or("model", "sq-m");
+    let opts = opts_from_args(args)?;
+    let qm = ctx.package(model, &opts)?;
+    let runner = Arc::new(ModelRunner::new(ctx.engine.clone(), &qm)?);
+    let mut engine = ServeEngine::new(runner, ServeConfig::default());
+    let prompt = args.get_or("prompt", "the weaving master ");
+    let max_new = args.usize_or("max-new", 32)?;
+    let resp = engine.generate(0, prompt, max_new)?;
+    println!("prompt : {prompt}");
+    println!("output : {}", resp.text);
+    println!("ttft {:.1}ms, total {:.1}ms, {} tokens",
+             resp.ttft_s * 1e3, resp.latency_s * 1e3, resp.tokens.len());
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let ctx = ctx_from_args(args)?;
+    let id = args
+        .get("id")
+        .or_else(|| args.get("table"))
+        .ok_or_else(|| anyhow!("reproduce needs --id <table1..fig4|all>"))?
+        .to_string();
+    run_experiment(&ctx, &id)?;
+    println!("reports written under {}/../reports/", ctx.dir);
+    Ok(())
+}
+
+fn cmd_ste(args: &Args) -> Result<()> {
+    let ctx = ctx_from_args(args)?;
+    run_experiment(&ctx, "fig2")?;
+    Ok(())
+}

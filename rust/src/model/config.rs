@@ -1,0 +1,198 @@
+//! Model configuration, sourced from `artifacts/manifest.json` (the single
+//! source of truth written by `python/compile/aot.py`) so the Rust side can
+//! never drift from the lowered graphs.
+
+use anyhow::{anyhow, Result};
+
+use crate::rotation::kronecker::kron_factor;
+use crate::util::json::Json;
+
+/// The rotation/quantization sites of every layer, in layout order.
+pub const ROT_SITES: [&str; 4] = ["qkv", "o", "mlp", "down"];
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub score_seq: usize,
+    pub rope_theta: f32,
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// Name of the config whose HLO artifacts this model executes
+    /// (chat variants share their base architecture's graphs).
+    pub artifact_config: String,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 0
+    }
+
+    /// Kronecker factors for a rotation site's width.
+    pub fn site_dims(&self, site: &str) -> (usize, usize, usize) {
+        let n = if site == "down" { self.d_ff } else { self.d_model };
+        let (n1, n2) = kron_factor(n);
+        (n, n1, n2)
+    }
+
+    pub fn from_manifest(manifest: &Json, name: &str) -> Result<ModelConfig> {
+        let c = manifest
+            .get("configs")?
+            .opt(name)
+            .ok_or_else(|| anyhow!("config {name:?} not in manifest"))?;
+        Ok(ModelConfig {
+            name: name.to_string(),
+            d_model: c.usize_at("d_model")?,
+            n_layers: c.usize_at("n_layers")?,
+            n_heads: c.usize_at("n_heads")?,
+            d_ff: c.usize_at("d_ff")?,
+            vocab_size: c.usize_at("vocab_size")?,
+            max_seq: c.usize_at("max_seq")?,
+            score_seq: c.usize_at("score_seq")?,
+            rope_theta: c.f64_at("rope_theta")? as f32,
+            n_experts: c.usize_at("n_experts")?,
+            top_k: c.usize_at("top_k")?,
+            artifact_config: c.str_at("artifact_config")?.to_string(),
+        })
+    }
+
+    // -- parameter layout (must mirror python/compile/model.py exactly) ------
+
+    pub fn weight_names(&self) -> Vec<String> {
+        let mut names = vec!["emb.tok".to_string()];
+        for i in 0..self.n_layers {
+            let p = format!("l{i:02}");
+            names.push(format!("{p}.an"));
+            names.push(format!("{p}.wq"));
+            names.push(format!("{p}.wk"));
+            names.push(format!("{p}.wv"));
+            names.push(format!("{p}.wo"));
+            names.push(format!("{p}.mn"));
+            if self.is_moe() {
+                names.push(format!("{p}.router"));
+                for e in 0..self.n_experts {
+                    names.push(format!("{p}.x{e}.wg"));
+                    names.push(format!("{p}.x{e}.wu"));
+                    names.push(format!("{p}.x{e}.wd"));
+                }
+            } else {
+                names.push(format!("{p}.wg"));
+                names.push(format!("{p}.wu"));
+                names.push(format!("{p}.wd"));
+            }
+        }
+        names.push("out.norm".to_string());
+        names.push("out.head".to_string());
+        names
+    }
+
+    pub fn rot_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for i in 0..self.n_layers {
+            let p = format!("l{i:02}");
+            for site in ROT_SITES {
+                names.push(format!("{p}.rot_{site}.r1"));
+                names.push(format!("{p}.rot_{site}.r2"));
+                names.push(format!("{p}.clip_{site}"));
+            }
+        }
+        names
+    }
+
+    /// Ordered parameter list for a graph mode ("fp" | "w4a4" | "w4a16").
+    pub fn param_layout(&self, mode: &str) -> Vec<String> {
+        let mut names = self.weight_names();
+        if mode != "fp" {
+            names.extend(self.rot_names());
+        }
+        names
+    }
+
+    /// The quantized linear weights of one layer grouped by rotation site.
+    pub fn site_weights(&self, layer: usize, site: &str) -> Vec<String> {
+        let p = format!("l{layer:02}");
+        match site {
+            "qkv" => vec![format!("{p}.wq"), format!("{p}.wk"), format!("{p}.wv")],
+            "o" => vec![format!("{p}.wo")],
+            "mlp" => {
+                if self.is_moe() {
+                    (0..self.n_experts)
+                        .flat_map(|e| {
+                            vec![format!("{p}.x{e}.wg"), format!("{p}.x{e}.wu")]
+                        })
+                        .collect()
+                } else {
+                    vec![format!("{p}.wg"), format!("{p}.wu")]
+                }
+            }
+            "down" => {
+                if self.is_moe() {
+                    (0..self.n_experts).map(|e| format!("{p}.x{e}.wd")).collect()
+                } else {
+                    vec![format!("{p}.wd")]
+                }
+            }
+            _ => panic!("unknown site {site}"),
+        }
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    pub fn test_config() -> ModelConfig {
+        ModelConfig {
+            name: "sq-test".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 128,
+            vocab_size: 260,
+            max_seq: 160,
+            score_seq: 96,
+            rope_theta: 10000.0,
+            n_experts: 0,
+            top_k: 2,
+            artifact_config: "sq-test".into(),
+        }
+    }
+
+    #[test]
+    fn layout_shape() {
+        let c = test_config();
+        let fp = c.param_layout("fp");
+        assert_eq!(fp[0], "emb.tok");
+        assert_eq!(fp.last().unwrap(), "out.head");
+        let q = c.param_layout("w4a4");
+        assert_eq!(&q[..fp.len()], &fp[..]);
+        assert_eq!(q.len(), fp.len() + c.n_layers * 4 * 3);
+    }
+
+    #[test]
+    fn site_weights_dense() {
+        let c = test_config();
+        assert_eq!(c.site_weights(0, "qkv"),
+                   vec!["l00.wq", "l00.wk", "l00.wv"]);
+        assert_eq!(c.site_weights(1, "down"), vec!["l01.wd"]);
+    }
+
+    #[test]
+    fn site_dims_factor() {
+        let c = test_config();
+        let (n, n1, n2) = c.site_dims("qkv");
+        assert_eq!(n, 64);
+        assert_eq!(n1 * n2, 64);
+        let (nf, _, _) = c.site_dims("down");
+        assert_eq!(nf, 128);
+    }
+}

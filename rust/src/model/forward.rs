@@ -1,0 +1,465 @@
+//! Pure-Rust reference forward of the Layer-2 model.
+//!
+//! Matches `python/compile/model.py` op-for-op (RMSNorm, RoPE, causal
+//! attention, SwiGLU, Mixtral-style top-k MoE). Three uses:
+//!
+//! 1. **Calibration** — the single pass that records per-site activation
+//!    profiles and GPTQ Hessians (`calib::run_calibration`), with a tap
+//!    invoked at every rotation site.
+//! 2. **Quantized emulation** — with a [`QuantCtx`] the forward applies the
+//!    site rotations and per-token activation fake-quant exactly like the
+//!    w4a4 graphs, letting the pipeline evaluate candidate transforms
+//!    without a PJRT round-trip.
+//! 3. **Cross-checking** — integration tests compare these logits against
+//!    the lowered HLO executed through PJRT.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::config::ModelConfig;
+use super::weights::Weights;
+use crate::quant::fake_quant_per_token;
+use crate::rotation::kronecker::kron_rotate_rows;
+use crate::rotation::singlequant::SiteRotation;
+use crate::tensor::Tensor;
+
+const EPS: f32 = 1e-5;
+
+/// Quantized-forward context: per-site rotations + clips, activation bits.
+#[derive(Clone, Debug)]
+pub struct QuantCtx {
+    /// Keyed `l{i:02}.{site}`.
+    pub rots: BTreeMap<String, SiteRotation>,
+    pub clips: BTreeMap<String, f32>,
+    /// 4 for W4A4; 16 disables activation quantization (weight-only).
+    pub act_bits: u32,
+    /// Static per-tensor activation quantization: `clips` carry per-site
+    /// scales Δ instead of clip ratios (SmoothQuant's original form).
+    pub static_act: bool,
+}
+
+impl QuantCtx {
+    pub fn identity(cfg: &ModelConfig, act_bits: u32) -> QuantCtx {
+        let mut rots = BTreeMap::new();
+        let mut clips = BTreeMap::new();
+        for i in 0..cfg.n_layers {
+            for site in super::config::ROT_SITES {
+                let (n, _, _) = cfg.site_dims(site);
+                rots.insert(format!("l{i:02}.{site}"), SiteRotation::identity(n));
+                clips.insert(format!("l{i:02}.{site}"), 1.0);
+            }
+        }
+        QuantCtx { rots, clips, act_bits, static_act: false }
+    }
+}
+
+/// Observation tap: called with (layer, site, pre-rotation site input).
+pub type Tap<'a> = &'a mut dyn FnMut(usize, &str, &Tensor);
+
+fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
+    let (t, d) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(&[t, d]);
+    for i in 0..t {
+        let row = x.row(i);
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for (j, &v) in row.iter().enumerate() {
+            out.row_mut(i)[j] = v * inv * g.data()[j];
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Activation quantization matching the graphs: dynamic per-token (clip =
+/// ratio) or static per-tensor (clip = scale Δ) — see `QLinearCtx` on the
+/// Python side.
+fn apply_act_quant(xr: &Tensor, q: &QuantCtx, clip: f32) -> Tensor {
+    if q.act_bits >= 16 {
+        return xr.clone();
+    }
+    if q.static_act {
+        let delta = clip.max(1e-8);
+        return xr.map(|v| (v / delta).round().clamp(-8.0, 7.0) * delta);
+    }
+    fake_quant_per_token(&xr.scale(1.0 / clip), q.act_bits, 1.0).scale(clip)
+}
+
+/// Apply the site transform (rotate -> fake-quant) then multiply by each
+/// weight; returns per-weight outputs. `x` is the raw site input.
+fn site_linear(
+    x: &Tensor,
+    ws: &[&Tensor],
+    key: &str,
+    quant: Option<&QuantCtx>,
+    layer: usize,
+    site: &str,
+    tap: &mut Option<Tap>,
+) -> Vec<Tensor> {
+    if let Some(t) = tap.as_mut() {
+        t(layer, site, x);
+    }
+    let _ = key;
+    match quant {
+        None => ws.iter().map(|w| x.matmul(w)).collect(),
+        Some(q) => {
+            let skey = format!("l{layer:02}.{site}");
+            let rot = &q.rots[&skey];
+            let clip = q.clips[&skey];
+            let xr = kron_rotate_rows(x, &rot.r1, &rot.r2);
+            let xq = apply_act_quant(&xr, q, clip);
+            ws.iter().map(|w| xq.matmul(w)).collect()
+        }
+    }
+}
+
+struct Rope {
+    cos: Vec<Vec<f32>>, // [T][dh/2]
+    sin: Vec<Vec<f32>>,
+}
+
+impl Rope {
+    fn new(cfg: &ModelConfig, t: usize) -> Rope {
+        let dh = cfg.d_head();
+        let half = dh / 2;
+        let mut cos = Vec::with_capacity(t);
+        let mut sin = Vec::with_capacity(t);
+        for pos in 0..t {
+            let mut c = Vec::with_capacity(half);
+            let mut s = Vec::with_capacity(half);
+            for i in 0..half {
+                let inv_freq =
+                    1.0 / cfg.rope_theta.powf(2.0 * i as f32 / dh as f32);
+                let ang = pos as f32 * inv_freq;
+                c.push(ang.cos());
+                s.push(ang.sin());
+            }
+            cos.push(c);
+            sin.push(s);
+        }
+        Rope { cos, sin }
+    }
+
+    /// Apply in place to one head vector at position `pos`.
+    fn apply(&self, v: &mut [f32], pos: usize) {
+        let half = v.len() / 2;
+        for i in 0..half {
+            let (x1, x2) = (v[2 * i], v[2 * i + 1]);
+            let (c, s) = (self.cos[pos][i], self.sin[pos][i]);
+            v[2 * i] = x1 * c - x2 * s;
+            v[2 * i + 1] = x2 * c + x1 * s;
+        }
+    }
+}
+
+/// Causal multi-head attention over full sequences.
+/// q,k,v: [T, d] with head-major packing [H, dh] per row.
+fn attention(cfg: &ModelConfig, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let t = q.rows();
+    let (h, dh) = (cfg.n_heads, cfg.d_head());
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = Tensor::zeros(&[t, cfg.d_model]);
+    let mut logits = vec![0.0f32; t];
+    for head in 0..h {
+        let off = head * dh;
+        for ti in 0..t {
+            let qrow = &q.row(ti)[off..off + dh];
+            // scores over keys 0..=ti
+            let mut maxv = f32::NEG_INFINITY;
+            for tj in 0..=ti {
+                let krow = &k.row(tj)[off..off + dh];
+                let mut dot = 0.0f32;
+                for x in 0..dh {
+                    dot += qrow[x] * krow[x];
+                }
+                logits[tj] = dot * scale;
+                maxv = maxv.max(logits[tj]);
+            }
+            let mut denom = 0.0f32;
+            for l in logits.iter_mut().take(ti + 1) {
+                *l = (*l - maxv).exp();
+                denom += *l;
+            }
+            let orow = &mut out.row_mut(ti)[off..off + dh];
+            for tj in 0..=ti {
+                let p = logits[tj] / denom;
+                if p == 0.0 {
+                    continue;
+                }
+                let vrow = &v.row(tj)[off..off + dh];
+                for x in 0..dh {
+                    orow[x] += p * vrow[x];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Full-sequence forward: tokens -> logits [T, V].
+pub fn forward_score(
+    cfg: &ModelConfig,
+    w: &Weights,
+    tokens: &[u16],
+    quant: Option<&QuantCtx>,
+    mut tap: Option<Tap>,
+) -> Result<Tensor> {
+    let t = tokens.len();
+    let d = cfg.d_model;
+    let emb = w.get("emb.tok")?;
+    let mut x = Tensor::zeros(&[t, d]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(emb.row(tok as usize));
+    }
+    let rope = Rope::new(cfg, t);
+
+    for layer in 0..cfg.n_layers {
+        let p = format!("l{layer:02}");
+        // -- attention --------------------------------------------------------
+        let h = rmsnorm(&x, w.get(&format!("{p}.an"))?);
+        let qkv = site_linear(
+            &h,
+            &[w.get(&format!("{p}.wq"))?, w.get(&format!("{p}.wk"))?,
+              w.get(&format!("{p}.wv"))?],
+            &p, quant, layer, "qkv", &mut tap,
+        );
+        let (mut q, mut k, v) = (qkv[0].clone(), qkv[1].clone(), qkv[2].clone());
+        for ti in 0..t {
+            for head in 0..cfg.n_heads {
+                let off = head * cfg.d_head();
+                rope.apply(&mut q.row_mut(ti)[off..off + cfg.d_head()], ti);
+                rope.apply(&mut k.row_mut(ti)[off..off + cfg.d_head()], ti);
+            }
+        }
+        let att = attention(cfg, &q, &k, &v);
+        let o = site_linear(&att, &[w.get(&format!("{p}.wo"))?], &p, quant,
+                            layer, "o", &mut tap);
+        x = x.add(&o[0]);
+
+        // -- MLP ----------------------------------------------------------------
+        let h2 = rmsnorm(&x, w.get(&format!("{p}.mn"))?);
+        let y = if cfg.is_moe() {
+            moe_mlp(cfg, w, &h2, layer, quant, &mut tap)?
+        } else {
+            dense_mlp(cfg, w, &h2, layer, &p, quant, &mut tap)?
+        };
+        x = x.add(&y);
+    }
+
+    let xf = rmsnorm(&x, w.get("out.norm")?);
+    Ok(xf.matmul(w.get("out.head")?))
+}
+
+fn dense_mlp(
+    _cfg: &ModelConfig,
+    w: &Weights,
+    h2: &Tensor,
+    layer: usize,
+    prefix: &str,
+    quant: Option<&QuantCtx>,
+    tap: &mut Option<Tap>,
+) -> Result<Tensor> {
+    let gu = site_linear(
+        h2,
+        &[w.get(&format!("{prefix}.wg"))?, w.get(&format!("{prefix}.wu"))?],
+        prefix, quant, layer, "mlp", tap,
+    );
+    let mut hidden = gu[0].clone();
+    for (i, u) in gu[1].data().iter().enumerate() {
+        hidden.data_mut()[i] = silu(hidden.data()[i]) * u;
+    }
+    let out = site_linear(&hidden, &[w.get(&format!("{prefix}.wd"))?], prefix,
+                          quant, layer, "down", tap);
+    Ok(out[0].clone())
+}
+
+fn moe_mlp(
+    cfg: &ModelConfig,
+    w: &Weights,
+    h2: &Tensor,
+    layer: usize,
+    quant: Option<&QuantCtx>,
+    tap: &mut Option<Tap>,
+) -> Result<Tensor> {
+    let p = format!("l{layer:02}");
+    let t = h2.rows();
+    let router = w.get(&format!("{p}.router"))?;
+    let rl = h2.matmul(router); // [T, E]
+    // top-k softmax weights
+    let mut gate = Tensor::zeros(&[t, cfg.n_experts]);
+    for ti in 0..t {
+        let row = rl.row(ti);
+        let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        let top = &idx[..cfg.top_k];
+        let maxv = row[top[0]];
+        let mut denom = 0.0f32;
+        let mut exps = vec![0.0f32; cfg.top_k];
+        for (j, &e) in top.iter().enumerate() {
+            exps[j] = (row[e] - maxv).exp();
+            denom += exps[j];
+        }
+        for (j, &e) in top.iter().enumerate() {
+            gate.set(ti, e, exps[j] / denom);
+        }
+    }
+
+    // The mlp/down site transforms are shared across experts: tap once on
+    // the site input, then compute the quantized input once per site.
+    if let Some(tp) = tap.as_mut() {
+        tp(layer, "mlp", h2);
+    }
+    let skey_mlp = format!("l{layer:02}.mlp");
+    let skey_down = format!("l{layer:02}.down");
+    let xq = match quant {
+        None => h2.clone(),
+        Some(q) => {
+            let rot = &q.rots[&skey_mlp];
+            let clip = q.clips[&skey_mlp];
+            let xr = kron_rotate_rows(h2, &rot.r1, &rot.r2);
+            apply_act_quant(&xr, q, clip)
+        }
+    };
+
+    let mut out = Tensor::zeros(&[t, cfg.d_model]);
+    let mut tapped_down = false;
+    for e in 0..cfg.n_experts {
+        let wg = w.get(&format!("{p}.x{e}.wg"))?;
+        let wu = w.get(&format!("{p}.x{e}.wu"))?;
+        let wd = w.get(&format!("{p}.x{e}.wd"))?;
+        let g = xq.matmul(wg);
+        let u = xq.matmul(wu);
+        let mut hidden = g.clone();
+        for (i, uv) in u.data().iter().enumerate() {
+            hidden.data_mut()[i] = silu(hidden.data()[i]) * uv;
+        }
+        if let Some(tp) = tap.as_mut() {
+            if !tapped_down {
+                tp(layer, "down", &hidden);
+                tapped_down = true;
+            }
+        }
+        let hq = match quant {
+            None => hidden,
+            Some(q) => {
+                let rot = &q.rots[&skey_down];
+                let clip = q.clips[&skey_down];
+                let xr = kron_rotate_rows(&hidden, &rot.r1, &rot.r2);
+                apply_act_quant(&xr, q, clip)
+            }
+        };
+        let y = hq.matmul(wd);
+        for ti in 0..t {
+            let gw = gate.at(ti, e);
+            if gw == 0.0 {
+                continue;
+            }
+            let orow = out.row_mut(ti);
+            for (j, &v) in y.row(ti).iter().enumerate() {
+                orow[j] += gw * v;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Next-token cross-entropy (nats/token) of a full sequence.
+pub fn sequence_nll(logits: &Tensor, tokens: &[u16]) -> f32 {
+    let t = tokens.len();
+    let mut total = 0.0f32;
+    for i in 0..t - 1 {
+        let row = logits.row(i);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = maxv
+            + row.iter().map(|v| (v - maxv).exp()).sum::<f32>().ln();
+        total += lse - row[tokens[i + 1] as usize];
+    }
+    total / (t - 1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+
+    fn toks(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| rng.below(260) as u16).collect()
+    }
+
+    #[test]
+    fn fp_forward_shapes_and_finite() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let lg = forward_score(&cfg, &w, &toks(12, 2), None, None).unwrap();
+        assert_eq!(lg.shape(), &[12, 260]);
+        assert!(lg.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn identity_quant_ctx_w16_matches_fp() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let t = toks(10, 3);
+        let fp = forward_score(&cfg, &w, &t, None, None).unwrap();
+        let ctx = QuantCtx::identity(&cfg, 16);
+        let qf = forward_score(&cfg, &w, &t, Some(&ctx), None).unwrap();
+        assert!(fp.sub(&qf).max_abs() < 1e-3,
+                "diff {}", fp.sub(&qf).max_abs());
+    }
+
+    #[test]
+    fn w4a4_differs_but_finite() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let t = toks(10, 4);
+        let fp = forward_score(&cfg, &w, &t, None, None).unwrap();
+        let ctx = QuantCtx::identity(&cfg, 4);
+        let qf = forward_score(&cfg, &w, &t, Some(&ctx), None).unwrap();
+        let diff = fp.sub(&qf).max_abs();
+        assert!(diff > 1e-4 && qf.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn tap_sees_all_sites() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let mut seen = Vec::new();
+        {
+            let mut tap = |layer: usize, site: &str, x: &Tensor| {
+                seen.push((layer, site.to_string(), x.rows(), x.cols()));
+            };
+            forward_score(&cfg, &w, &toks(8, 5), None, Some(&mut tap)).unwrap();
+        }
+        assert_eq!(seen.len(), cfg.n_layers * 4);
+        assert!(seen.iter().any(|s| s.1 == "down" && s.3 == cfg.d_ff));
+    }
+
+    #[test]
+    fn nll_positive_near_uniform_at_init() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 7);
+        let t = toks(16, 8);
+        let lg = forward_score(&cfg, &w, &t, None, None).unwrap();
+        let nll = sequence_nll(&lg, &t);
+        assert!(nll > 3.0 && nll < 8.0, "nll {nll}");
+    }
+
+    #[test]
+    fn moe_forward_runs() {
+        let mut cfg = test_config();
+        cfg.n_experts = 3;
+        cfg.top_k = 2;
+        let w = Weights::random_init(&cfg, 2);
+        let lg = forward_score(&cfg, &w, &toks(8, 9), None, None).unwrap();
+        assert!(lg.data().iter().all(|v| v.is_finite()));
+        // quantized MoE path too
+        let ctx = QuantCtx::identity(&cfg, 4);
+        let lq = forward_score(&cfg, &w, &toks(8, 9), Some(&ctx), None).unwrap();
+        assert!(lq.data().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,11 @@
+//! Model definitions on the Rust side: configuration (mirroring
+//! `python/compile/model.py` via `artifacts/manifest.json`), checkpoint
+//! weights, parameter layout, and the pure-Rust reference forward used by
+//! calibration and GPTQ.
+
+pub mod config;
+pub mod forward;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use weights::Weights;

@@ -1,0 +1,118 @@
+//! Checkpoint weights: named f32 tensors loaded from the SQT checkpoints
+//! written by `python/compile/train.py`, plus synthetic-init helpers for
+//! tests that should not depend on artifacts.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::sqt::SqtFile;
+
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    pub map: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow!("missing weight {name:?}"))
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn load(path: &str) -> Result<Weights> {
+        let f = SqtFile::load(path)?;
+        let mut map = BTreeMap::new();
+        for (name, t) in f.tensors {
+            map.insert(name, t.as_f32()?.clone());
+        }
+        Ok(Weights { map })
+    }
+
+    /// Expected parameter shape; mirrors python `param_shape`.
+    pub fn param_shape(cfg: &ModelConfig, name: &str) -> Vec<usize> {
+        let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let base = name.rsplit('.').next().unwrap();
+        match name {
+            "emb.tok" => vec![v, d],
+            "out.norm" => vec![d],
+            "out.head" => vec![d, v],
+            _ => match base {
+                "an" | "mn" => vec![d],
+                "wq" | "wk" | "wv" | "wo" => vec![d, d],
+                "wg" | "wu" => vec![d, ff],
+                "wd" => vec![ff, d],
+                "router" => vec![d, cfg.n_experts],
+                _ => panic!("unknown weight {name}"),
+            },
+        }
+    }
+
+    /// Random init with the training-side scaling (tests only).
+    pub fn random_init(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let mut map = BTreeMap::new();
+        for name in cfg.weight_names() {
+            let shape = Self::param_shape(cfg, &name);
+            let base = name.rsplit('.').next().unwrap();
+            let t = if base == "an" || base == "mn" || name == "out.norm" {
+                Tensor::filled(&shape, 1.0)
+            } else {
+                let fan_in = shape[0] as f32;
+                Tensor::randn(&shape, 1.0 / fan_in.sqrt(), &mut rng)
+            };
+            map.insert(name, t);
+        }
+        Weights { map }
+    }
+
+    /// Validate that every expected weight exists with the right shape.
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        for name in cfg.weight_names() {
+            let t = self.get(&name)?;
+            let want = Self::param_shape(cfg, &name);
+            if t.shape() != want.as_slice() {
+                return Err(anyhow!(
+                    "weight {name}: shape {:?}, expected {:?}",
+                    t.shape(),
+                    want
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total f32 parameter count.
+    pub fn n_params(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+
+    #[test]
+    fn random_init_validates() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        w.validate(&cfg).unwrap();
+        assert!(w.n_params() > 10_000);
+    }
+
+    #[test]
+    fn missing_weight_is_error() {
+        let cfg = test_config();
+        let mut w = Weights::random_init(&cfg, 1);
+        w.map.remove("l00.wq");
+        assert!(w.validate(&cfg).is_err());
+    }
+}

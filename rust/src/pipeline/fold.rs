@@ -1,0 +1,261 @@
+//! Scale folding for SmoothQuant / AWQ: rewrite producer parameters so the
+//! site input arrives pre-divided by the per-channel scale `s`, compensate
+//! the consuming weights, and rescale the recorded calibration statistics —
+//! the exact deployment mechanics of those methods (no runtime op).
+//!
+//! Producer per site:
+//! * `qkv`  — attention RMSNorm gain `an` (and consumer rows of wq/wk/wv)
+//! * `mlp`  — MLP RMSNorm gain `mn` (consumers wg/wu, and the MoE router,
+//!   which reads the same normed input and must keep its routing)
+//! * `o`    — `wv` output columns (attention output is linear in v)
+//! * `down` — `wu` output columns (h = silu(g)·u is linear in u)
+
+use anyhow::Result;
+
+use crate::calib::{Calibration, SiteCalib};
+use crate::model::{ModelConfig, Weights};
+use crate::quant::awq::awq_search;
+use crate::rotation::baselines::smoothquant_scales;
+use crate::tensor::Tensor;
+
+/// Rescale a site's calibration statistics after folding x ← x / s.
+fn scale_site_calib(sc: &mut SiteCalib, s: &[f32]) {
+    for (j, &sj) in s.iter().enumerate() {
+        sc.signed_absmax[j] /= sj;
+    }
+    for i in 0..sc.sample.rows() {
+        for (j, v) in sc.sample.row_mut(i).iter_mut().enumerate() {
+            *v /= s[j];
+        }
+    }
+    // H' = diag(1/s) H diag(1/s)
+    let n = sc.hessian.rows();
+    for i in 0..n {
+        for j in 0..n {
+            let v = sc.hessian.at(i, j) / (s[i] * s[j]);
+            sc.hessian.set(i, j, v);
+        }
+    }
+}
+
+/// Scale rows of a [n, C] weight by `s` (consumer compensation).
+fn scale_rows(w: &mut Tensor, s: &[f32]) {
+    for i in 0..w.rows() {
+        let si = s[i];
+        for v in w.row_mut(i) {
+            *v *= si;
+        }
+    }
+}
+
+/// Scale columns of a [n, C] weight by `s` (producer output scaling).
+fn scale_cols(w: &mut Tensor, s: &[f32]) {
+    for i in 0..w.rows() {
+        for (j, v) in w.row_mut(i).iter_mut().enumerate() {
+            *v *= s[j];
+        }
+    }
+}
+
+/// Per-input-channel absmax of the concatenated site weights.
+fn site_weight_absmax(cfg: &ModelConfig, w: &Weights, layer: usize,
+                      site: &str) -> Result<Vec<f32>> {
+    let names = cfg.site_weights(layer, site);
+    let n = w.get(&names[0])?.rows();
+    let mut out = vec![0.0f32; n];
+    for name in &names {
+        let t = w.get(name)?;
+        for i in 0..n {
+            for &v in t.row(i) {
+                out[i] = out[i].max(v.abs());
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Apply one site's fold: producer ÷ s, consumers × s, calibration ÷ s.
+fn apply_site_fold(
+    cfg: &ModelConfig,
+    w: &mut Weights,
+    calibration: &mut Calibration,
+    layer: usize,
+    site: &str,
+    s: &[f32],
+) -> Result<()> {
+    let p = format!("l{layer:02}");
+    match site {
+        "qkv" => {
+            let mut an = w.get(&format!("{p}.an"))?.clone();
+            for (j, v) in an.data_mut().iter_mut().enumerate() {
+                *v /= s[j];
+            }
+            w.insert(&format!("{p}.an"), an);
+        }
+        "mlp" => {
+            let mut mn = w.get(&format!("{p}.mn"))?.clone();
+            for (j, v) in mn.data_mut().iter_mut().enumerate() {
+                *v /= s[j];
+            }
+            w.insert(&format!("{p}.mn"), mn);
+            if cfg.is_moe() {
+                // keep routing decisions identical
+                let mut router = w.get(&format!("{p}.router"))?.clone();
+                scale_rows(&mut router, s);
+                w.insert(&format!("{p}.router"), router);
+            }
+        }
+        "o" => {
+            // producer: v-projection output columns ÷ s
+            let inv: Vec<f32> = s.iter().map(|x| 1.0 / x).collect();
+            let mut wv = w.get(&format!("{p}.wv"))?.clone();
+            scale_cols(&mut wv, &inv);
+            w.insert(&format!("{p}.wv"), wv);
+        }
+        "down" => {
+            let inv: Vec<f32> = s.iter().map(|x| 1.0 / x).collect();
+            if cfg.is_moe() {
+                for e in 0..cfg.n_experts {
+                    let mut wu = w.get(&format!("{p}.x{e}.wu"))?.clone();
+                    scale_cols(&mut wu, &inv);
+                    w.insert(&format!("{p}.x{e}.wu"), wu);
+                }
+            } else {
+                let mut wu = w.get(&format!("{p}.wu"))?.clone();
+                scale_cols(&mut wu, &inv);
+                w.insert(&format!("{p}.wu"), wu);
+            }
+        }
+        _ => unreachable!(),
+    }
+    // consumers × s
+    for name in cfg.site_weights(layer, site) {
+        let mut t = w.get(&name)?.clone();
+        scale_rows(&mut t, s);
+        w.insert(&name, t);
+    }
+    let key = format!("l{layer:02}.{site}");
+    scale_site_calib(calibration.sites.get_mut(&key).unwrap(), s);
+    Ok(())
+}
+
+/// Sites scale-fold methods can actually reach in deployment: SmoothQuant
+/// (and AWQ's fold) smooth the attention and FFN *inputs* by rewriting the
+/// preceding norm gain; the o-proj and down-proj inputs have no preceding
+/// static op to fold into in the published methods — precisely the sites
+/// where rotation methods pull ahead (QuaRot §3, SpinQuant §4).
+const FOLDABLE_SITES: [&str; 2] = ["qkv", "mlp"];
+
+/// SmoothQuant: s = absmax(X)^α / absmax(W)^{1−α} per channel, foldable
+/// sites only.
+pub fn fold_smoothquant(
+    cfg: &ModelConfig,
+    w: &mut Weights,
+    calibration: &mut Calibration,
+    alpha: f32,
+) -> Result<()> {
+    for layer in 0..cfg.n_layers {
+        for site in FOLDABLE_SITES {
+            let key = format!("l{layer:02}.{site}");
+            let act = calibration.sites[&key].absmax();
+            let wmax = site_weight_absmax(cfg, w, layer, site)?;
+            let s = smoothquant_scales(&act, &wmax, alpha);
+            apply_site_fold(cfg, w, calibration, layer, site, &s)?;
+        }
+    }
+    Ok(())
+}
+
+/// AWQ: α grid-searched per site against quantized layer-output error.
+pub fn fold_awq(
+    cfg: &ModelConfig,
+    w: &mut Weights,
+    calibration: &mut Calibration,
+    weight_bits: u32,
+    grid: usize,
+) -> Result<()> {
+    for layer in 0..cfg.n_layers {
+        for site in FOLDABLE_SITES {
+            let key = format!("l{layer:02}.{site}");
+            let sample = calibration.sites[&key].sample.clone();
+            if sample.rows() == 0 {
+                continue;
+            }
+            let names = cfg.site_weights(layer, site);
+            let parts: Vec<&Tensor> = names
+                .iter()
+                .map(|n| w.get(n))
+                .collect::<Result<Vec<_>>>()?;
+            let wcat = Tensor::hcat(&parts)?;
+            let res = awq_search(&sample, &wcat, weight_bits, grid);
+            apply_site_fold(cfg, w, calibration, layer, site, &res.scale)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::run_calibration;
+    use crate::model::config::tests::test_config;
+    use crate::model::forward::forward_score;
+
+    fn toks(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| rng.below(260) as u16).collect()
+    }
+
+    #[test]
+    fn smoothquant_fold_preserves_fp_function() {
+        let cfg = test_config();
+        let w0 = Weights::random_init(&cfg, 1);
+        let seqs = vec![toks(16, 1), toks(16, 2)];
+        let mut cal = run_calibration(&cfg, &w0, &seqs, 3).unwrap();
+        let mut w1 = w0.clone();
+        fold_smoothquant(&cfg, &mut w1, &mut cal, 0.5).unwrap();
+        let t = toks(12, 4);
+        let a = forward_score(&cfg, &w0, &t, None, None).unwrap();
+        let b = forward_score(&cfg, &w1, &t, None, None).unwrap();
+        let scale = a.max_abs().max(1.0);
+        assert!(a.sub(&b).max_abs() / scale < 2e-3,
+                "fold changed function by {}", a.sub(&b).max_abs());
+    }
+
+    #[test]
+    fn fold_rescales_calibration() {
+        let cfg = test_config();
+        let w0 = Weights::random_init(&cfg, 1);
+        let seqs = vec![toks(16, 1)];
+        let mut cal = run_calibration(&cfg, &w0, &seqs, 3).unwrap();
+        let before = cal.site(0, "qkv").absmax();
+        let mut w1 = w0.clone();
+        fold_smoothquant(&cfg, &mut w1, &mut cal, 0.8).unwrap();
+        let after = cal.site(0, "qkv").absmax();
+        // strong alpha strongly flattens the activation absmax profile
+        let spread = |v: &[f32]| {
+            let mx = v.iter().cloned().fold(0f32, f32::max);
+            let mn = v.iter().cloned().fold(f32::INFINITY, f32::min).max(1e-9);
+            mx / mn
+        };
+        assert!(spread(&after) < spread(&before),
+                "{} !< {}", spread(&after), spread(&before));
+    }
+
+    #[test]
+    fn moe_fold_preserves_function() {
+        let mut cfg = test_config();
+        cfg.n_experts = 3;
+        cfg.top_k = 2;
+        let w0 = Weights::random_init(&cfg, 5);
+        let seqs = vec![toks(12, 7)];
+        let mut cal = run_calibration(&cfg, &w0, &seqs, 3).unwrap();
+        let mut w1 = w0.clone();
+        fold_smoothquant(&cfg, &mut w1, &mut cal, 0.5).unwrap();
+        let t = toks(10, 8);
+        let a = forward_score(&cfg, &w0, &t, None, None).unwrap();
+        let b = forward_score(&cfg, &w1, &t, None, None).unwrap();
+        let scale = a.max_abs().max(1.0);
+        assert!(a.sub(&b).max_abs() / scale < 2e-3);
+    }
+}

@@ -1,0 +1,551 @@
+//! The quantization pipeline: checkpoint → calibration → pre-quantization
+//! transform (SingleQuant or a baseline) → weight quantization → packaged
+//! [`QuantizedModel`].
+//!
+//! Every method in the paper's experiment matrix is dispatched through
+//! [`Method`]; all of them emit the same artifact shape (transformed
+//! weights + per-site Kronecker rotation factors + clip scalars) so the
+//! PJRT graphs are method-agnostic. Scale-fold methods (SmoothQuant, AWQ)
+//! rewrite producer parameters and feed identity rotations — exactly how
+//! they deploy in practice.
+
+pub mod fold;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::calib::{calib_sequences, run_calibration_opts};
+use crate::model::forward::QuantCtx;
+use crate::model::{ModelConfig, Weights};
+use crate::quant::clip::search_act_clip;
+use crate::quant::gptq::{gptq_quantize, GptqConfig, Hessian};
+use crate::quant::pack::PackedWeight;
+use crate::quant::{
+    fake_quant_grouped, fake_quant_per_channel, WeightQuantizer,
+};
+use crate::rotation::baselines::{
+    duquant_rotation, learned_kron_rotation, quarot_rotation, quip_rotation,
+};
+use crate::rotation::cayley::{CayleyConfig, CayleyTrace};
+use crate::rotation::kronecker::kron_rotate_weight;
+use crate::rotation::singlequant::{
+    build_site_rotation, SingleQuantConfig, SiteProfile, SiteRotation,
+};
+use crate::tensor::Tensor;
+
+/// Pre-quantization transform selection (the rows of Tables 1–6).
+#[derive(Clone, Debug)]
+pub enum Method {
+    /// No quantization at all (the FP16 rows; f32 on this testbed).
+    Fp16,
+    /// Plain RTN: identity rotations.
+    Rtn,
+    /// SmoothQuant channel scaling (α-balance), identity rotations.
+    SmoothQuant { alpha: f32 },
+    /// AWQ-style searched channel scaling, identity rotations.
+    Awq { grid: usize },
+    /// QuaRot-style incoherence rotation (random-orth ⊗ Hadamard).
+    QuaRot,
+    /// QuIP-style two-sided random orthogonal rotation.
+    Quip,
+    /// SpinQuant: Cayley SGD + STE learned rotation (per site).
+    SpinQuant { steps: usize },
+    /// DuQuant-style greedy Givens + zigzag permutation + Hadamard.
+    DuQuant { steps: usize },
+    /// FlatQuant-style learned Kronecker transform (LCT handled by `lct`).
+    FlatQuant { steps: usize },
+    /// The paper's method: closed-form ART + URT + Hadamard (Eq. 45).
+    SingleQuant(SingleQuantConfig),
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Fp16 => "FP16".into(),
+            Method::Rtn => "RTN-only".into(),
+            Method::SmoothQuant { .. } => "SmoothQuant".into(),
+            Method::Awq { .. } => "AWQ".into(),
+            Method::QuaRot => "QuaRot".into(),
+            Method::Quip => "QuIP".into(),
+            Method::SpinQuant { .. } => "SpinQuant".into(),
+            Method::DuQuant { .. } => "DuQuant".into(),
+            Method::FlatQuant { .. } => "FlatQuant".into(),
+            Method::SingleQuant(_) => "SingleQuant".into(),
+        }
+    }
+
+    pub fn singlequant() -> Method {
+        Method::SingleQuant(SingleQuantConfig::default())
+    }
+
+    /// Unambiguous key for caching quantized packages (label() collapses
+    /// parameter variants; this must not).
+    pub fn cache_key(&self) -> String {
+        match self {
+            Method::SmoothQuant { alpha } => format!("smooth-a{alpha}"),
+            Method::Awq { grid } => format!("awq-g{grid}"),
+            Method::SpinQuant { steps } => format!("spin-s{steps}"),
+            Method::DuQuant { steps } => format!("duq-s{steps}"),
+            Method::FlatQuant { steps } => format!("flat-s{steps}"),
+            Method::SingleQuant(c) => format!(
+                "sq-art{}-urt{}-h{}-steps{}-rc{}-u2{}",
+                c.use_art as u8, c.use_urt as u8, c.use_hadamard as u8,
+                c.art_steps, c.art_random_complement as u8, c.urt_axis2 as u8
+            ),
+            other => other.label(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineOptions {
+    pub method: Method,
+    pub weight_quantizer: WeightQuantizer,
+    pub weight_bits: u32,
+    /// 4 for W4A4, 16 for weight-only.
+    pub act_bits: u32,
+    /// Learnable-clipping-threshold search on activations (Table 5).
+    pub lct: bool,
+    pub calib_seqs: usize,
+    pub calib_len: usize,
+    pub seed: u64,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        PipelineOptions {
+            method: Method::singlequant(),
+            weight_quantizer: WeightQuantizer::Rtn,
+            weight_bits: 4,
+            act_bits: 4,
+            lct: false,
+            calib_seqs: 8,
+            calib_len: 96,
+            seed: 0x5142,
+        }
+    }
+}
+
+/// A quantized, deployable model package.
+pub struct QuantizedModel {
+    pub cfg: ModelConfig,
+    /// Transformed parameters: quantized linears are stored dequantized-f32
+    /// (what the fake-quant graphs consume); norms/embeddings stay fp.
+    pub weights: Weights,
+    pub rots: BTreeMap<String, SiteRotation>,
+    pub clips: BTreeMap<String, f32>,
+    pub act_bits: u32,
+    /// Static per-tensor activation quantization (SmoothQuant's original
+    /// quantizer form): the clip values carry per-site scales Δ.
+    pub static_act: bool,
+    pub method_label: String,
+    /// Exact packed-int weight bytes (quantized linears) + f32 bytes (rest):
+    /// the Table 8 storage model.
+    pub packed_bytes: usize,
+    pub fp_bytes: usize,
+    pub calib_seconds: f64,
+    pub transform_seconds: f64,
+    pub weight_quant_seconds: f64,
+    /// Optimization traces for learned baselines (Fig. 2 inputs).
+    pub traces: BTreeMap<String, CayleyTrace>,
+}
+
+impl QuantizedModel {
+    pub fn total_seconds(&self) -> f64 {
+        self.calib_seconds + self.transform_seconds + self.weight_quant_seconds
+    }
+
+    pub fn graph_mode(&self) -> &'static str {
+        if self.method_label == "FP16" {
+            "fp"
+        } else if self.act_bits >= 16 {
+            "w4a16"
+        } else if self.static_act {
+            "w4a4s"
+        } else {
+            "w4a4"
+        }
+    }
+
+    /// Context for the Rust quantized reference forward.
+    pub fn quant_ctx(&self) -> Option<QuantCtx> {
+        if self.graph_mode() == "fp" {
+            return None;
+        }
+        Some(QuantCtx {
+            rots: self.rots.clone(),
+            clips: self.clips.clone(),
+            act_bits: self.act_bits,
+            static_act: self.static_act,
+        })
+    }
+}
+
+/// Run the full pipeline.
+pub fn quantize(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    calib_tokens: &[u16],
+    opts: &PipelineOptions,
+) -> Result<QuantizedModel> {
+    if matches!(opts.method, Method::Fp16) {
+        return Ok(fp16_package(cfg, weights));
+    }
+
+    // ---- 1. single calibration pass ---------------------------------------
+    let t0 = Instant::now();
+    let seqs = calib_sequences(calib_tokens, opts.calib_seqs, opts.calib_len, opts.seed);
+    let need_hessian = matches!(
+        opts.weight_quantizer,
+        WeightQuantizer::Gptq | WeightQuantizer::GptqGrouped(_)
+    );
+    let mut calibration =
+        run_calibration_opts(cfg, weights, &seqs, opts.seed, need_hessian)?;
+    let calib_seconds = t0.elapsed().as_secs_f64();
+
+    // ---- 2. scale folds (SmoothQuant / AWQ) --------------------------------
+    let t1 = Instant::now();
+    let mut w = weights.clone();
+    match &opts.method {
+        Method::SmoothQuant { alpha } => {
+            fold::fold_smoothquant(cfg, &mut w, &mut calibration, *alpha)?;
+        }
+        Method::Awq { grid } => {
+            fold::fold_awq(cfg, &mut w, &mut calibration, opts.weight_bits, *grid)?;
+        }
+        _ => {}
+    }
+
+    // ---- 3. per-site rotations ----------------------------------------------
+    let mut rots: BTreeMap<String, SiteRotation> = BTreeMap::new();
+    let mut traces: BTreeMap<String, CayleyTrace> = BTreeMap::new();
+    for layer in 0..cfg.n_layers {
+        for site in crate::model::config::ROT_SITES {
+            let key = format!("l{layer:02}.{site}");
+            let sc = &calibration.sites[&key];
+            let (n, _, _) = cfg.site_dims(site);
+            let rot = match &opts.method {
+                Method::Fp16 => unreachable!(),
+                Method::Rtn | Method::SmoothQuant { .. } | Method::Awq { .. } => {
+                    SiteRotation::identity(n)
+                }
+                Method::QuaRot => quarot_rotation(n, opts.seed ^ hash_key(&key)),
+                Method::Quip => quip_rotation(n, opts.seed ^ hash_key(&key)),
+                Method::DuQuant { steps } => {
+                    duquant_rotation(&sc.signed_absmax, *steps, opts.seed)
+                }
+                Method::SpinQuant { steps } | Method::FlatQuant { steps } => {
+                    let wcat = site_weight_concat(cfg, &w, layer, site)?;
+                    let ccfg = CayleyConfig {
+                        steps: *steps,
+                        act_bits: opts.act_bits.min(8),
+                        weight_bits: opts.weight_bits,
+                        ..Default::default()
+                    };
+                    let lr = learned_kron_rotation(&sc.sample, &wcat, &ccfg,
+                                                   opts.seed)?;
+                    traces.insert(key.clone(), lr.trace);
+                    lr.rotation
+                }
+                Method::SingleQuant(sq) => {
+                    let profile = SiteProfile {
+                        n,
+                        signed_absmax: sc.signed_absmax.clone(),
+                        median: sc.median(),
+                    };
+                    build_site_rotation(&profile, sq)
+                }
+            };
+            rots.insert(key, rot);
+        }
+    }
+    let transform_seconds = t1.elapsed().as_secs_f64();
+
+    // ---- 4. rotate + quantize weights; clip search --------------------------
+    let t2 = Instant::now();
+    let mut clips: BTreeMap<String, f32> = BTreeMap::new();
+    let mut packed_bytes = 0usize;
+    for layer in 0..cfg.n_layers {
+        for site in crate::model::config::ROT_SITES {
+            let key = format!("l{layer:02}.{site}");
+            let rot = rots[&key].clone();
+            let sc = &calibration.sites[&key];
+
+            // rotated Hessian for GPTQ: H_r = Rᵀ H R with R = r1 ⊗ r2
+            let rotated_hessian = |h: &Tensor| -> Tensor {
+                let r = rot.r1.kron(&rot.r2);
+                r.matmul_tn(&h.matmul(&r))
+            };
+            let hess_rot = match opts.weight_quantizer {
+                WeightQuantizer::Gptq | WeightQuantizer::GptqGrouped(_) => {
+                    Some(Hessian {
+                        h: rotated_hessian(&sc.hessian),
+                        count: sc.token_count,
+                    })
+                }
+                _ => None,
+            };
+
+            for wname in cfg.site_weights(layer, site) {
+                let orig = w.get(&wname)?.clone();
+                let rotated = kron_rotate_weight(&orig, &rot.r1, &rot.r2);
+                let q = match opts.weight_quantizer {
+                    WeightQuantizer::Rtn => {
+                        fake_quant_per_channel(&rotated, opts.weight_bits, 1.0)
+                    }
+                    WeightQuantizer::RtnGrouped(g) => {
+                        fake_quant_grouped(&rotated, opts.weight_bits, g, 1.0)
+                    }
+                    WeightQuantizer::Gptq => gptq_quantize(
+                        &rotated,
+                        hess_rot.as_ref().unwrap(),
+                        &GptqConfig { bits: opts.weight_bits, ..Default::default() },
+                    )?,
+                    WeightQuantizer::GptqGrouped(g) => gptq_quantize(
+                        &rotated,
+                        hess_rot.as_ref().unwrap(),
+                        &GptqConfig {
+                            bits: opts.weight_bits,
+                            group: Some(g),
+                            ..Default::default()
+                        },
+                    )?,
+                };
+                packed_bytes += PackedWeight::pack(&q, opts.weight_bits)?.nbytes();
+                w.insert(&wname, q);
+            }
+
+            // activation clip (LCT) or SmoothQuant's static scale
+            let clip = if matches!(opts.method, Method::SmoothQuant { .. }) {
+                // static per-tensor scale Delta = absmax/qmax over the
+                // (folded) calibration activations at this site
+                let absmax = sc
+                    .signed_absmax
+                    .iter()
+                    .fold(0.0f32, |m, &v| m.max(v.abs()));
+                (absmax / 7.0).max(1e-8)
+            } else if opts.lct && opts.act_bits < 16 && sc.sample.rows() > 0 {
+                let sample_rot = crate::rotation::kronecker::kron_rotate_rows(
+                    &sc.sample, &rot.r1, &rot.r2);
+                let wcat = site_weight_concat(cfg, &w, layer, site)?;
+                search_act_clip(&sample_rot, &wcat, opts.act_bits, 12, 0.4)
+            } else {
+                1.0
+            };
+            clips.insert(key, clip);
+        }
+    }
+    let weight_quant_seconds = t2.elapsed().as_secs_f64();
+
+    // fp bytes: everything not site-quantized (embeddings, norms, head, router)
+    let quantized: std::collections::BTreeSet<String> = (0..cfg.n_layers)
+        .flat_map(|l| {
+            crate::model::config::ROT_SITES
+                .iter()
+                .flat_map(move |s| cfg.site_weights(l, s))
+        })
+        .collect();
+    let fp_bytes: usize = w
+        .map
+        .iter()
+        .filter(|(k, _)| !quantized.contains(*k))
+        .map(|(_, t)| t.len() * 4)
+        .sum();
+
+    Ok(QuantizedModel {
+        cfg: cfg.clone(),
+        weights: w,
+        rots,
+        clips,
+        act_bits: opts.act_bits,
+        static_act: matches!(opts.method, Method::SmoothQuant { .. })
+            && opts.act_bits < 16,
+        method_label: opts.method.label(),
+        packed_bytes,
+        fp_bytes,
+        calib_seconds,
+        transform_seconds,
+        weight_quant_seconds,
+        traces,
+    })
+}
+
+fn fp16_package(cfg: &ModelConfig, weights: &Weights) -> QuantizedModel {
+    let fp_bytes = weights.n_params() * 4;
+    QuantizedModel {
+        cfg: cfg.clone(),
+        weights: weights.clone(),
+        rots: BTreeMap::new(),
+        clips: BTreeMap::new(),
+        act_bits: 16,
+        static_act: false,
+        method_label: "FP16".into(),
+        packed_bytes: 0,
+        fp_bytes,
+        calib_seconds: 0.0,
+        transform_seconds: 0.0,
+        weight_quant_seconds: 0.0,
+        traces: BTreeMap::new(),
+    }
+}
+
+/// Horizontal concat of all (post-fold) weights at a site.
+fn site_weight_concat(
+    cfg: &ModelConfig,
+    w: &Weights,
+    layer: usize,
+    site: &str,
+) -> Result<Tensor> {
+    let names = cfg.site_weights(layer, site);
+    let parts: Vec<&Tensor> = names
+        .iter()
+        .map(|n| w.get(n))
+        .collect::<Result<Vec<_>>>()?;
+    Tensor::hcat(&parts)
+}
+
+fn hash_key(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+    use crate::model::forward::{forward_score, sequence_nll};
+
+    fn toks(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| rng.below(260) as u16).collect()
+    }
+
+    fn run(method: Method, wq: WeightQuantizer) -> QuantizedModel {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let calib = toks(600, 9);
+        let opts = PipelineOptions {
+            method,
+            weight_quantizer: wq,
+            calib_seqs: 3,
+            calib_len: 32,
+            ..Default::default()
+        };
+        quantize(&cfg, &w, &calib, &opts).unwrap()
+    }
+
+    #[test]
+    fn singlequant_pipeline_end_to_end() {
+        let qm = run(Method::singlequant(), WeightQuantizer::Rtn);
+        assert_eq!(qm.graph_mode(), "w4a4");
+        assert_eq!(qm.rots.len(), 2 * 4);
+        assert!(qm.packed_bytes > 0);
+        // all rotations orthogonal
+        for (k, r) in &qm.rots {
+            assert!(r.defect() < 5e-3, "{k}: {}", r.defect());
+        }
+        // the quantized forward runs and is finite
+        let t = toks(24, 3);
+        let ctx = qm.quant_ctx().unwrap();
+        let lg = forward_score(&qm.cfg, &qm.weights, &t, Some(&ctx), None).unwrap();
+        assert!(lg.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn all_methods_produce_valid_packages() {
+        for m in [
+            Method::Rtn,
+            Method::SmoothQuant { alpha: 0.5 },
+            Method::QuaRot,
+            Method::DuQuant { steps: 4 },
+            Method::SingleQuant(SingleQuantConfig::default()),
+        ] {
+            let qm = run(m.clone(), WeightQuantizer::Rtn);
+            assert_eq!(qm.rots.len(), 8, "{}", m.label());
+            for r in qm.rots.values() {
+                assert!(r.defect() < 5e-3, "{}", m.label());
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_weight_quantizer_works() {
+        let qm = run(Method::QuaRot, WeightQuantizer::Gptq);
+        assert!(qm.weights.get("l00.wq").unwrap().data()
+                .iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn spinquant_records_traces() {
+        let qm = run(Method::SpinQuant { steps: 4 }, WeightQuantizer::Rtn);
+        assert_eq!(qm.traces.len(), 8);
+        assert!(qm.traces.values().all(|t| t.loss.len() == 4));
+    }
+
+    #[test]
+    fn rotation_quality_beats_plain_rtn() {
+        // On a model with injected outliers, SingleQuant's W4A4 NLL should
+        // beat identity-rotation RTN. Random-init weights lack outliers, so
+        // inject one huge norm-gain channel per layer.
+        let cfg = test_config();
+        let mut w = Weights::random_init(&cfg, 1);
+        for l in 0..cfg.n_layers {
+            for gname in [format!("l{l:02}.an"), format!("l{l:02}.mn")] {
+                let mut g = w.get(&gname).unwrap().clone();
+                g.data_mut()[5] = 25.0;
+                g.data_mut()[11] = -18.0;
+                w.insert(&gname, g);
+            }
+        }
+        let calib = toks(600, 9);
+        let eval = toks(48, 33);
+        // Fidelity metric: MSE of quantized logits against the fp logits
+        // (NLL on random-init weights is chance-level noise).
+        let fp = forward_score(&cfg, &w, &eval, None, None).unwrap();
+        let mut errs = BTreeMap::new();
+        for (name, m) in [("rtn", Method::Rtn), ("sq", Method::singlequant())] {
+            let opts = PipelineOptions {
+                method: m,
+                calib_seqs: 4,
+                calib_len: 32,
+                ..Default::default()
+            };
+            let qm = quantize(&cfg, &w, &calib, &opts).unwrap();
+            let ctx = qm.quant_ctx().unwrap();
+            let lg = forward_score(&qm.cfg, &qm.weights, &eval, Some(&ctx), None)
+                .unwrap();
+            errs.insert(name, lg.mse(&fp));
+        }
+        assert!(errs["sq"] < errs["rtn"],
+                "singlequant {} !< rtn {}", errs["sq"], errs["rtn"]);
+    }
+
+    #[test]
+    fn fp16_passthrough() {
+        let qm = run(Method::Fp16, WeightQuantizer::Rtn);
+        assert_eq!(qm.graph_mode(), "fp");
+        assert_eq!(qm.packed_bytes, 0);
+    }
+
+    #[test]
+    fn weight_only_mode() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let opts = PipelineOptions {
+            act_bits: 16,
+            weight_bits: 3,
+            method: Method::singlequant(),
+            calib_seqs: 2,
+            calib_len: 24,
+            ..Default::default()
+        };
+        let qm = quantize(&cfg, &w, &toks(400, 5), &opts).unwrap();
+        assert_eq!(qm.graph_mode(), "w4a16");
+    }
+}

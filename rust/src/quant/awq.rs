@@ -1,0 +1,83 @@
+//! AWQ-style activation-aware weight scaling (Lin et al., 2024).
+//!
+//! Searches a per-channel scale s = absmax(X)^α over a grid of α, picking
+//! the one minimizing the quantized layer-output error; the scale is folded
+//! as W ← diag(s) W with the inverse absorbed by the producer (norm gain /
+//! `wu` columns), exactly like SmoothQuant's fold but optimized against the
+//! weight quantizer instead of a fixed α. Used as the `AWQ` baseline in
+//! Tables 4 and B.3.
+
+use crate::quant::{fake_quant_per_channel, layer_mse_ctx};
+use crate::tensor::Tensor;
+
+pub struct AwqResult {
+    /// Chosen per-input-channel scale (fold x ← x / s, W ← diag(s) W).
+    pub scale: Vec<f32>,
+    pub alpha: f32,
+    pub err: f32,
+}
+
+/// Grid-search α over `steps` points in [0, 1].
+pub fn awq_search(x_sample: &Tensor, w: &Tensor, bits: u32, steps: usize) -> AwqResult {
+    let n = w.rows();
+    assert_eq!(x_sample.cols(), n);
+    let act_absmax = crate::tensor::stats::col_absmax(x_sample);
+
+    let mut best = AwqResult { scale: vec![1.0; n], alpha: 0.0, err: f32::INFINITY };
+    for k in 0..=steps {
+        let alpha = k as f32 / steps as f32;
+        let scale: Vec<f32> = act_absmax
+            .iter()
+            .map(|&a| a.max(1e-5).powf(alpha).max(1e-4))
+            .collect();
+        // scaled weight: diag(s) W ; scaled activations: X / s
+        let mut ws = w.clone();
+        for i in 0..n {
+            let s = scale[i];
+            for v in ws.row_mut(i) {
+                *v *= s;
+            }
+        }
+        let wq = fake_quant_per_channel(&ws, bits, 1.0);
+        // y' = (X/s) (diag(s)W)_q ; compare against X W
+        let mut xs = x_sample.clone();
+        for r in 0..xs.rows() {
+            for (j, v) in xs.row_mut(r).iter_mut().enumerate() {
+                *v /= scale[j];
+            }
+        }
+        let err = layer_mse_ctx(x_sample, w, &xs, &wq);
+        if err < best.err {
+            best = AwqResult { scale, alpha, err };
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn awq_improves_over_alpha0_with_outliers() {
+        let mut rng = Rng::new(1);
+        let mut x = Tensor::randn(&[64, 24], 1.0, &mut rng);
+        for i in 0..64 {
+            x.row_mut(i)[5] *= 30.0; // activation outlier channel
+        }
+        let w = Tensor::randn(&[24, 16], 0.5, &mut rng);
+        let res = awq_search(&x, &w, 4, 10);
+        assert!(res.alpha > 0.0, "expected nonzero alpha, got {}", res.alpha);
+        assert!(res.err.is_finite());
+    }
+
+    #[test]
+    fn scales_positive() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[32, 12], 1.0, &mut rng);
+        let w = Tensor::randn(&[12, 8], 0.5, &mut rng);
+        let res = awq_search(&x, &w, 4, 6);
+        assert!(res.scale.iter().all(|&s| s > 0.0));
+    }
+}

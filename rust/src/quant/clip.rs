@@ -1,0 +1,85 @@
+//! Clipping-threshold search.
+//!
+//! Two searches, both 1-D grid over the clip ratio:
+//!
+//! * [`search_weight_clip`] — minimize weight-quantization MSE (used inside
+//!   the weight pipeline for the harder W3 settings).
+//! * [`search_act_clip`]    — FlatQuant-style Learnable Clipping Threshold
+//!   (LCT): minimize the *layer-output* error of per-token activation
+//!   quantization on a calibration sample. The chosen ratio feeds the
+//!   `clip_<site>` runtime parameter of the quantized graphs (Table 5's
+//!   "w/ LCT" rows).
+
+use crate::quant::{fake_quant_per_channel, fake_quant_per_token};
+use crate::tensor::Tensor;
+
+/// Best weight clip ratio in [lo, 1.0] by quantization MSE.
+pub fn search_weight_clip(w: &Tensor, bits: u32, steps: usize, lo: f32) -> f32 {
+    let mut best = (1.0f32, f32::INFINITY);
+    for k in 0..=steps {
+        let clip = lo + (1.0 - lo) * k as f32 / steps as f32;
+        let q = fake_quant_per_channel(w, bits, clip);
+        let err = q.sub(w).frob_norm();
+        if err < best.1 {
+            best = (clip, err);
+        }
+    }
+    best.0
+}
+
+/// Best activation clip ratio in [lo, 1.0] by layer-output MSE on a sample.
+pub fn search_act_clip(x_sample: &Tensor, w: &Tensor, bits: u32, steps: usize,
+                       lo: f32) -> f32 {
+    let y_ref = x_sample.matmul(w);
+    let mut best = (1.0f32, f32::INFINITY);
+    for k in 0..=steps {
+        let clip = lo + (1.0 - lo) * k as f32 / steps as f32;
+        let xq = fake_quant_per_token(x_sample, bits, clip);
+        let err = xq.matmul(w).mse(&y_ref);
+        if err < best.1 {
+            best = (clip, err);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weight_clip_in_range() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[32, 16], 0.5, &mut rng);
+        let c = search_weight_clip(&w, 3, 10, 0.5);
+        assert!((0.5..=1.0).contains(&c));
+    }
+
+    #[test]
+    fn act_clip_returns_grid_optimum() {
+        // Heavy log-normal tails: the chosen clip must be at least as good
+        // as no clipping under the layer-output objective.
+        let mut rng = Rng::new(2);
+        let mut x = Tensor::randn(&[48, 32], 1.0, &mut rng);
+        for v in x.data_mut() {
+            *v = v.signum() * (v.abs() * 2.0).exp();
+        }
+        let w = Tensor::randn(&[32, 16], 0.5, &mut rng);
+        let c = search_act_clip(&x, &w, 4, 20, 0.05);
+        assert!((0.05..=1.0).contains(&c));
+        let y_ref = x.matmul(&w);
+        let err_c = fake_quant_per_token(&x, 4, c).matmul(&w).mse(&y_ref);
+        let err_1 = fake_quant_per_token(&x, 4, 1.0).matmul(&w).mse(&y_ref);
+        assert!(err_c <= err_1 + 1e-9, "chosen {c}: {err_c} > {err_1}");
+    }
+
+    #[test]
+    fn act_clip_no_outliers_stays_high() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[48, 32], 1.0, &mut rng);
+        let w = Tensor::randn(&[32, 16], 0.5, &mut rng);
+        let c = search_act_clip(&x, &w, 4, 20, 0.05);
+        assert!(c > 0.6, "unexpected aggressive clip {c}");
+    }
+}

@@ -1,0 +1,226 @@
+//! Quantizers: RTN, GPTQ, AWQ-style scaling, clip search, int-packing.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` exactly (symmetric
+//! absmax grids); the integration tests cross-check the two through the
+//! PJRT runtime.
+
+pub mod awq;
+pub mod clip;
+pub mod gptq;
+pub mod pack;
+
+use crate::tensor::Tensor;
+
+/// Symmetric signed grid bounds for a bit-width (4 -> [-8, 7]).
+pub fn qlevels(bits: u32) -> (f32, f32) {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let qmin = -((1i64 << (bits - 1)) as f32);
+    (qmin, qmax)
+}
+
+#[inline]
+fn quantize_val(x: f32, scale: f32, qmin: f32, qmax: f32) -> f32 {
+    (x / scale).round().clamp(qmin, qmax) * scale
+}
+
+/// Per-token (row-wise) symmetric absmax fake quantization — the A4 side.
+pub fn fake_quant_per_token(x: &Tensor, bits: u32, clip: f32) -> Tensor {
+    let (qmin, qmax) = qlevels(bits);
+    let (t, n) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(&[t, n]);
+    for i in 0..t {
+        let row = x.row(i);
+        let absmax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = (absmax * clip / qmax).max(1e-8);
+        for (j, &v) in row.iter().enumerate() {
+            out.row_mut(i)[j] = quantize_val(v, scale, qmin, qmax);
+        }
+    }
+    out
+}
+
+/// Per-output-channel (column-wise for [in, out] weights) RTN fake quant.
+pub fn fake_quant_per_channel(w: &Tensor, bits: u32, clip: f32) -> Tensor {
+    let (n, c) = (w.rows(), w.cols());
+    let (qmin, qmax) = qlevels(bits);
+    let mut scales = vec![0.0f32; c];
+    for i in 0..n {
+        for (j, &v) in w.row(i).iter().enumerate() {
+            scales[j] = scales[j].max(v.abs());
+        }
+    }
+    for s in &mut scales {
+        *s = (*s * clip / qmax).max(1e-8);
+    }
+    let mut out = Tensor::zeros(&[n, c]);
+    for i in 0..n {
+        for j in 0..c {
+            out.row_mut(i)[j] = quantize_val(w.at(i, j), scales[j], qmin, qmax);
+        }
+    }
+    out
+}
+
+/// Per-tensor symmetric fake quant (coarsest scheme; used in ablations).
+pub fn fake_quant_per_tensor(w: &Tensor, bits: u32, clip: f32) -> Tensor {
+    let (qmin, qmax) = qlevels(bits);
+    let scale = (w.max_abs() * clip / qmax).max(1e-8);
+    w.map(|x| quantize_val(x, scale, qmin, qmax))
+}
+
+/// Grouped RTN along the input dimension (GPTQ-g128-style grouping): each
+/// output channel's input dim is split into groups of `group` rows with an
+/// independent scale.
+pub fn fake_quant_grouped(w: &Tensor, bits: u32, group: usize, clip: f32) -> Tensor {
+    let (n, c) = (w.rows(), w.cols());
+    let (qmin, qmax) = qlevels(bits);
+    let mut out = Tensor::zeros(&[n, c]);
+    let mut g0 = 0;
+    while g0 < n {
+        let g1 = (g0 + group).min(n);
+        // per-channel scale within the group
+        let mut scales = vec![0.0f32; c];
+        for i in g0..g1 {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                scales[j] = scales[j].max(v.abs());
+            }
+        }
+        for s in &mut scales {
+            *s = (*s * clip / qmax).max(1e-8);
+        }
+        for i in g0..g1 {
+            for j in 0..c {
+                out.row_mut(i)[j] = quantize_val(w.at(i, j), scales[j], qmin, qmax);
+            }
+        }
+        g0 = g1;
+    }
+    out
+}
+
+/// Relative quantization error ‖q − x‖_F / ‖x‖_F.
+pub fn rel_error(x: &Tensor, q: &Tensor) -> f32 {
+    q.sub(x).frob_norm() / x.frob_norm().max(1e-12)
+}
+
+/// Layer-output MSE between the reference X·W and a transformed pair
+/// X'·W' (used by scale/clip searches where both sides change).
+pub fn layer_mse_ctx(x: &Tensor, w: &Tensor, x_alt: &Tensor, w_alt: &Tensor) -> f32 {
+    x.matmul(w).mse(&x_alt.matmul(w_alt))
+}
+
+/// Weight quantizer selector used across the experiment matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightQuantizer {
+    /// Round-to-nearest, per output channel.
+    Rtn,
+    /// GPTQ with Hessian-ordered error compensation.
+    Gptq,
+    /// GPTQ with input-dim grouping (the `-g128` variants; group scaled to
+    /// our layer sizes).
+    GptqGrouped(usize),
+    /// Grouped RTN (used by the weight-only table).
+    RtnGrouped(usize),
+}
+
+impl WeightQuantizer {
+    pub fn label(&self) -> String {
+        match self {
+            WeightQuantizer::Rtn => "RTN".into(),
+            WeightQuantizer::Gptq => "GPTQ".into(),
+            WeightQuantizer::GptqGrouped(g) => format!("GPTQ-g{g}"),
+            WeightQuantizer::RtnGrouped(g) => format!("RTN-g{g}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qlevels_match_paper() {
+        assert_eq!(qlevels(4), (-8.0, 7.0));
+        assert_eq!(qlevels(3), (-4.0, 3.0));
+        assert_eq!(qlevels(8), (-128.0, 127.0));
+    }
+
+    #[test]
+    fn per_token_on_grid() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[6, 20], 3.0, &mut rng);
+        let q = fake_quant_per_token(&x, 4, 1.0);
+        for i in 0..6 {
+            let absmax = x.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = absmax / 7.0;
+            for &v in q.row(i) {
+                let k = v / scale;
+                assert!((k - k.round()).abs() < 1e-3);
+                assert!((-8.0..=7.0).contains(&k.round()));
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[40, 30], 0.5, &mut rng);
+        let e2 = rel_error(&w, &fake_quant_per_channel(&w, 2, 1.0));
+        let e4 = rel_error(&w, &fake_quant_per_channel(&w, 4, 1.0));
+        let e8 = rel_error(&w, &fake_quant_per_channel(&w, 8, 1.0));
+        assert!(e2 > e4 && e4 > e8);
+    }
+
+    #[test]
+    fn grouped_beats_per_channel_with_outlier_rows() {
+        // A weight whose magnitude varies strongly along the input dim
+        // benefits from input-dim grouping.
+        let mut rng = Rng::new(3);
+        let mut w = Tensor::randn(&[64, 16], 0.1, &mut rng);
+        for j in 0..16 {
+            let v = w.at(0, j);
+            w.set(0, j, v * 50.0);
+        }
+        let eg = rel_error(&w, &fake_quant_grouped(&w, 4, 16, 1.0));
+        let ec = rel_error(&w, &fake_quant_per_channel(&w, 4, 1.0));
+        assert!(eg < ec, "grouped {eg} vs per-channel {ec}");
+    }
+
+    #[test]
+    fn outliers_inflate_per_token_error() {
+        // The paper's core premise: one massive channel wrecks per-token quant.
+        let mut rng = Rng::new(4);
+        let clean = Tensor::randn(&[16, 64], 1.0, &mut rng);
+        let mut spiked = clean.clone();
+        for i in 0..16 {
+            spiked.row_mut(i)[3] = 40.0;
+        }
+        let e_clean = rel_error(&clean, &fake_quant_per_token(&clean, 4, 1.0));
+        let e_spec = {
+            // error on the non-outlier part
+            let q = fake_quant_per_token(&spiked, 4, 1.0);
+            let mut num = 0.0f32;
+            let mut den = 0.0f32;
+            for i in 0..16 {
+                for j in 0..64 {
+                    if j != 3 {
+                        num += (q.at(i, j) - spiked.at(i, j)).powi(2);
+                        den += spiked.at(i, j).powi(2);
+                    }
+                }
+            }
+            (num / den).sqrt()
+        };
+        assert!(e_spec > 2.0 * e_clean, "spiked {e_spec} vs clean {e_clean}");
+    }
+
+    #[test]
+    fn clip_below_one_shrinks_scale() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let q1 = fake_quant_per_token(&x, 4, 1.0);
+        let q2 = fake_quant_per_token(&x, 4, 0.5);
+        assert!(q2.max_abs() <= q1.max_abs() + 1e-6);
+    }
+}

@@ -1,0 +1,143 @@
+//! Bit-packed integer weight storage (the runtime memory format).
+//!
+//! Backs the Table 8 memory measurements: quantized checkpoints store
+//! int4/int3 codes packed into bytes plus per-channel f32 scales, and the
+//! runtime dequantizes once at load. `nbytes()` is the exact serialized
+//! footprint used in the memory accounting.
+
+use anyhow::{bail, Result};
+
+use super::qlevels;
+use crate::tensor::Tensor;
+
+/// A [in, out] weight stored as packed signed ints + per-channel scales.
+#[derive(Clone, Debug)]
+pub struct PackedWeight {
+    pub bits: u32,
+    pub rows: usize,
+    pub cols: usize,
+    /// Per-output-channel scale.
+    pub scales: Vec<f32>,
+    /// Row-major codes, bit-packed little-endian within bytes.
+    pub codes: Vec<u8>,
+}
+
+impl PackedWeight {
+    /// Quantize (per output channel, symmetric) and pack.
+    pub fn pack(w: &Tensor, bits: u32) -> Result<PackedWeight> {
+        if !(2..=8).contains(&bits) {
+            bail!("pack: bits {bits} out of range");
+        }
+        let (n, c) = (w.rows(), w.cols());
+        let (qmin, qmax) = qlevels(bits);
+        let mut scales = vec![0.0f32; c];
+        for i in 0..n {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                scales[j] = scales[j].max(v.abs());
+            }
+        }
+        for s in &mut scales {
+            *s = (*s / qmax).max(1e-8);
+        }
+        let total_bits = n * c * bits as usize;
+        let mut codes = vec![0u8; total_bits.div_ceil(8)];
+        let offset = -qmin as i32; // store unsigned biased codes
+        let mut bitpos = 0usize;
+        for i in 0..n {
+            for j in 0..c {
+                let q = (w.at(i, j) / scales[j]).round().clamp(qmin, qmax) as i32;
+                let u = (q + offset) as u32;
+                write_bits(&mut codes, bitpos, bits, u);
+                bitpos += bits as usize;
+            }
+        }
+        Ok(PackedWeight { bits, rows: n, cols: c, scales, codes })
+    }
+
+    /// Dequantize back to f32 (value-identical to `fake_quant_per_channel`).
+    pub fn unpack(&self) -> Tensor {
+        let (qmin, _) = qlevels(self.bits);
+        let offset = -qmin as i32;
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        let mut bitpos = 0usize;
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let u = read_bits(&self.codes, bitpos, self.bits) as i32;
+                bitpos += self.bits as usize;
+                out.set(i, j, (u - offset) as f32 * self.scales[j]);
+            }
+        }
+        out
+    }
+
+    /// Serialized footprint in bytes (codes + scales + header).
+    pub fn nbytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4 + 16
+    }
+}
+
+fn write_bits(buf: &mut [u8], bitpos: usize, bits: u32, val: u32) {
+    for b in 0..bits as usize {
+        if (val >> b) & 1 == 1 {
+            let p = bitpos + b;
+            buf[p / 8] |= 1 << (p % 8);
+        }
+    }
+}
+
+fn read_bits(buf: &[u8], bitpos: usize, bits: u32) -> u32 {
+    let mut val = 0u32;
+    for b in 0..bits as usize {
+        let p = bitpos + b;
+        if (buf[p / 8] >> (p % 8)) & 1 == 1 {
+            val |= 1 << b;
+        }
+    }
+    val
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fake_quant_per_channel;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_roundtrip_matches_fake_quant() {
+        let mut rng = Rng::new(1);
+        for bits in [3u32, 4, 8] {
+            let w = Tensor::randn(&[17, 9], 0.7, &mut rng);
+            let packed = PackedWeight::pack(&w, bits).unwrap();
+            let deq = packed.unpack();
+            let reference = fake_quant_per_channel(&w, bits, 1.0);
+            assert!(deq.sub(&reference).max_abs() < 1e-5,
+                    "bits {bits}: {}", deq.sub(&reference).max_abs());
+        }
+    }
+
+    #[test]
+    fn int4_is_quarter_of_f32() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[256, 128], 0.5, &mut rng);
+        let packed = PackedWeight::pack(&w, 4).unwrap();
+        let f32_bytes = 256 * 128 * 4;
+        let ratio = f32_bytes as f64 / packed.nbytes() as f64;
+        assert!(ratio > 7.0 && ratio < 8.5, "ratio {ratio}"); // ≈8× minus scales
+    }
+
+    #[test]
+    fn bit_io_roundtrip() {
+        let mut buf = vec![0u8; 8];
+        write_bits(&mut buf, 5, 4, 0b1011);
+        write_bits(&mut buf, 9, 3, 0b101);
+        assert_eq!(read_bits(&buf, 5, 4), 0b1011);
+        assert_eq!(read_bits(&buf, 9, 3), 0b101);
+    }
+
+    #[test]
+    fn rejects_bad_bits() {
+        let w = Tensor::zeros(&[2, 2]);
+        assert!(PackedWeight::pack(&w, 1).is_err());
+        assert!(PackedWeight::pack(&w, 9).is_err());
+    }
+}

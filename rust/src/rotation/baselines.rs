@@ -1,0 +1,296 @@
+//! Baseline pre-quantization transformations the paper compares against.
+//!
+//! All baselines emit the same [`SiteRotation`] Kronecker-factor interface
+//! as SingleQuant so every method runs through the identical W4A4 runtime
+//! graph (DESIGN.md §Substitutions notes where a baseline's original form
+//! was dense and is represented here in Kronecker structure):
+//!
+//! * **SmoothQuant** — channel-wise α-scaling (no rotation; the scale is
+//!   folded into producer weights by the pipeline).
+//! * **QuaRot** — global incoherence rotation: Hadamard on the power-of-two
+//!   axis, seeded random orthogonal on the other.
+//! * **QuIP-style** — two-sided random orthogonal incoherence (weight-only
+//!   table).
+//! * **DuQuant-style** — greedy iterated Givens smoothing + zigzag
+//!   permutation + Hadamard.
+//! * **SpinQuant** — Cayley SGD + STE over the Kronecker factor pair
+//!   (§3.2's optimizer; per-step traces feed Fig. 2, wall-clock feeds
+//!   Table 7).
+//! * **FlatQuant** — the same learned-Kronecker optimizer; its LCT
+//!   (learnable clipping threshold) is handled by the pipeline's clip
+//!   search (Table 5).
+
+use anyhow::Result;
+
+use crate::quant::{fake_quant_per_channel, fake_quant_per_token};
+use crate::rotation::cayley::{CayleyConfig, CayleyTrace};
+use crate::rotation::givens::lemma1_givens;
+use crate::rotation::hadamard::hadamard_matrix;
+use crate::rotation::kronecker::{kron_factor, kron_rotate_rows, kron_rotate_weight};
+use crate::rotation::singlequant::SiteRotation;
+use crate::tensor::{decomp, stats, Tensor};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// SmoothQuant
+// ---------------------------------------------------------------------------
+
+/// SmoothQuant per-channel scale s_j = max|X_j|^α / max|W_j|^{1−α}
+/// (Xiao et al., 2023). Activations are divided by s (folded into the
+/// producer), weights multiplied by s.
+pub fn smoothquant_scales(act_absmax: &[f32], w_absmax_in: &[f32], alpha: f32) -> Vec<f32> {
+    act_absmax
+        .iter()
+        .zip(w_absmax_in)
+        .map(|(&a, &w)| {
+            let s = a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha);
+            s.clamp(1e-4, 1e4)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// QuaRot / QuIP-style incoherence rotations
+// ---------------------------------------------------------------------------
+
+/// QuaRot-style rotation: Hadamard on the n₂ (power-of-two) axis, seeded
+/// random orthogonal on the n₁ axis.
+pub fn quarot_rotation(n: usize, seed: u64) -> SiteRotation {
+    let (n1, n2) = kron_factor(n);
+    let mut rng = Rng::new(seed);
+    let r1 = if n1 >= 2 { decomp::random_orthogonal(n1, &mut rng) } else { Tensor::eye(n1) };
+    let r2 = if n2 >= 2 { hadamard_matrix(n2) } else { Tensor::eye(n2) };
+    SiteRotation { r1, r2 }
+}
+
+/// QuIP-style two-sided random orthogonal incoherence preprocessing.
+pub fn quip_rotation(n: usize, seed: u64) -> SiteRotation {
+    let (n1, n2) = kron_factor(n);
+    let mut rng = Rng::new(seed ^ 0xAB);
+    let r1 = if n1 >= 2 { decomp::random_orthogonal(n1, &mut rng) } else { Tensor::eye(n1) };
+    let r2 = if n2 >= 2 { decomp::random_orthogonal(n2, &mut rng) } else { Tensor::eye(n2) };
+    SiteRotation { r1, r2 }
+}
+
+// ---------------------------------------------------------------------------
+// DuQuant-style greedy rotation
+// ---------------------------------------------------------------------------
+
+/// Greedy smoothing: `steps` iterations of (argmax, argmin) Lemma-1 Givens
+/// on the running profile — DuQuant's greedy outlier redistribution,
+/// followed by a zigzag permutation that interleaves large and small
+/// channels, then Hadamard mixing on the n₂ axis.
+pub fn duquant_rotation(signed_absmax: &[f32], steps: usize, _seed: u64) -> SiteRotation {
+    let n = signed_absmax.len();
+    let (n1, n2) = kron_factor(n);
+    let mo1 = axis_signed_absmax(signed_absmax, n1, n2, true);
+
+    // greedy Givens rounds on the n1 profile
+    let mut profile = mo1;
+    let mut r1 = Tensor::eye(n1);
+    for _ in 0..steps.max(1) {
+        let i = stats::argmax_abs(&profile);
+        let mut j = stats::argmin_abs(&profile);
+        if i == j {
+            j = (i + 1) % n1;
+        }
+        let g = lemma1_givens(&profile, i, j);
+        g.apply_row(&mut profile);
+        r1 = r1.matmul(&g.to_matrix(n1));
+    }
+    // zigzag permutation: sort by |profile| and interleave ends
+    let order = stats::argsort(&profile.iter().map(|x| x.abs()).collect::<Vec<_>>());
+    let mut zig = Vec::with_capacity(n1);
+    let (mut lo, mut hi) = (0usize, n1 - 1);
+    while lo <= hi {
+        zig.push(order[hi]);
+        if lo < hi {
+            zig.push(order[lo]);
+        }
+        if hi == 0 {
+            break;
+        }
+        lo += 1;
+        hi -= 1;
+    }
+    let mut perm = Tensor::zeros(&[n1, n1]);
+    for (dst, &src) in zig.iter().enumerate() {
+        perm.set(src, dst, 1.0);
+    }
+    let r1 = r1.matmul(&perm);
+    let r2 = if n2 >= 2 { hadamard_matrix(n2) } else { Tensor::eye(n2) };
+    SiteRotation { r1, r2 }
+}
+
+fn axis_signed_absmax(v: &[f32], n1: usize, n2: usize, axis1: bool) -> Vec<f32> {
+    let mut out = vec![0.0f32; if axis1 { n1 } else { n2 }];
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let x = v[i * n2 + j];
+            let slot = if axis1 { i } else { j };
+            if x.abs() > out[slot].abs() {
+                out[slot] = x;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// SpinQuant / FlatQuant: learned Kronecker factors (Cayley SGD + STE)
+// ---------------------------------------------------------------------------
+
+/// Learned-rotation result: the factors plus the optimization trace
+/// (Fig. 2's loss / grad-norm panels come from here and from
+/// `cayley::cayley_sgd` on dense site rotations).
+pub struct LearnedRotation {
+    pub rotation: SiteRotation,
+    pub trace: CayleyTrace,
+}
+
+/// Cayley SGD + STE over the Kronecker factor pair (R₁, R₂), minimizing the
+/// Eq. 8 surrogate on a calibration sample. The Kronecker chain rule
+/// contracts the dense Euclidean gradient G ∈ R^{n×n} (viewed as
+/// [n1, n2, n1, n2]) against the other factor.
+pub fn learned_kron_rotation(
+    x: &Tensor,
+    w: &Tensor,
+    cfg: &CayleyConfig,
+    seed: u64,
+) -> Result<LearnedRotation> {
+    let n = x.cols();
+    let (n1, n2) = kron_factor(n);
+    let y_ref = x.matmul(w);
+    // SpinQuant-style initialization: a random-orthogonal ⊗ Hadamard start
+    // (the published method optimizes from a random rotation, not from
+    // identity — starting at identity leaves the STE optimizer stuck at
+    // the unrotated loss plateau).
+    let init = quarot_rotation(n, seed ^ 0x5147);
+    let mut r1 = init.r1;
+    let mut r2 = init.r2;
+    let mut trace = CayleyTrace::default();
+    let eye1 = Tensor::eye(n1);
+    let eye2 = Tensor::eye(n2);
+
+    for t in 0..cfg.steps {
+        let lr = if cfg.decay {
+            cfg.lr * (1.0 - t as f32 / cfg.steps as f32).max(0.02)
+        } else {
+            cfg.lr
+        };
+        // forward with STE quantizers
+        let xr = kron_rotate_rows(x, &r1, &r2);
+        let wr = kron_rotate_weight(w, &r1, &r2);
+        let a = fake_quant_per_token(&xr, cfg.act_bits, 1.0);
+        let bq = fake_quant_per_channel(&wr, cfg.weight_bits, 1.0);
+        let e = a.matmul(&bq).sub(&y_ref);
+        let loss = 0.5 * e.frob_norm().powi(2) / e.len() as f32;
+
+        // dense Euclidean STE gradient wrt R_full = R1 ⊗ R2
+        let g_full = x
+            .matmul_tn(&e.matmul_nt(&bq))
+            .add(&w.matmul(&a.matmul_tn(&e).transpose()))
+            .scale(1.0 / e.len() as f32);
+
+        // contract against the other factor:
+        // G1[i,k] = Σ_{j,l} G[(i,j),(k,l)] R2[j,l] ; G2[j,l] = Σ_{i,k} G[(i,j),(k,l)] R1[i,k]
+        let mut g1 = Tensor::zeros(&[n1, n1]);
+        let mut g2 = Tensor::zeros(&[n2, n2]);
+        for i in 0..n1 {
+            for j in 0..n2 {
+                let grow = g_full.row(i * n2 + j);
+                for k in 0..n1 {
+                    let mut acc1 = 0.0f32;
+                    let r2row = &r2;
+                    for l in 0..n2 {
+                        let gv = grow[k * n2 + l];
+                        acc1 += gv * r2row.at(j, l);
+                        let v = g2.at(j, l) + gv * r1.at(i, k);
+                        g2.set(j, l, v);
+                    }
+                    let v = g1.at(i, k) + acc1;
+                    g1.set(i, k, v);
+                }
+            }
+        }
+
+        // Cayley step on each factor
+        let step = |r: &Tensor, g: &Tensor, eye: &Tensor| -> Result<Tensor> {
+            let grt = g.matmul_nt(r);
+            let omega = grt.sub(&grt.transpose()).scale(0.5);
+            let a_minus = eye.sub(&omega.scale(lr * 0.5));
+            let a_plus = eye.add(&omega.scale(lr * 0.5));
+            Ok(decomp::inverse(&a_minus)?.matmul(&a_plus).matmul(r))
+        };
+        let r1_new = step(&r1, &g1, &eye1)?;
+        let r2_new = step(&r2, &g2, &eye2)?;
+        let gn = (g1.frob_norm().powi(2) + g2.frob_norm().powi(2)).sqrt();
+        let sn = (r1_new.sub(&r1).frob_norm().powi(2)
+            + r2_new.sub(&r2).frob_norm().powi(2))
+        .sqrt();
+        trace.loss.push(loss);
+        trace.grad_norm.push(gn);
+        trace.step_norm.push(sn);
+        r1 = r1_new;
+        r2 = r2_new;
+    }
+    Ok(LearnedRotation { rotation: SiteRotation { r1, r2 }, trace })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rel_error;
+
+    fn spiked_x(t: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut x = Tensor::randn(&[t, n], 1.0, &mut rng);
+        for i in 0..t {
+            x.row_mut(i)[2] *= 25.0;
+        }
+        x
+    }
+
+    #[test]
+    fn smoothquant_scales_balance() {
+        let s = smoothquant_scales(&[100.0, 1.0], &[1.0, 1.0], 0.5);
+        assert!(s[0] > 5.0 && (s[1] - 1.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn quarot_orthogonal_and_smooths() {
+        let rot = quarot_rotation(96, 7);
+        assert!(rot.defect() < 1e-3);
+        let x = spiked_x(32, 96, 1);
+        let xr = kron_rotate_rows(&x, &rot.r1, &rot.r2);
+        let e0 = rel_error(&x, &fake_quant_per_token(&x, 4, 1.0));
+        let e1 = rel_error(&xr, &fake_quant_per_token(&xr, 4, 1.0));
+        assert!(e1 < e0, "{e1} !< {e0}");
+    }
+
+    #[test]
+    fn quip_orthogonal() {
+        assert!(quip_rotation(64, 3).defect() < 1e-3);
+    }
+
+    #[test]
+    fn duquant_orthogonal_and_permutation_valid() {
+        let x = spiked_x(16, 96, 2);
+        let prof = stats::col_signed_absmax(&x);
+        let rot = duquant_rotation(&prof, 8, 5);
+        assert!(rot.defect() < 1e-3, "defect {}", rot.defect());
+    }
+
+    #[test]
+    fn learned_kron_improves_loss_and_stays_orthogonal() {
+        let x = spiked_x(48, 24, 3);
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&[24, 16], 0.5, &mut rng);
+        let cfg = CayleyConfig { steps: 30, lr: 0.5, ..Default::default() };
+        let res = learned_kron_rotation(&x, &w, &cfg, 1).unwrap();
+        assert!(res.rotation.defect() < 1e-2, "defect {}", res.rotation.defect());
+        let first = res.trace.loss[0];
+        let best = res.trace.loss.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(best < first, "no improvement: best {best} first {first}");
+    }
+}

@@ -1,0 +1,226 @@
+//! Givens rotations: the 2-D building block of ART and URT.
+//!
+//! Row-vector convention throughout (matching the paper and the JAX graphs):
+//! applying `G(i, j; θ)` to a row vector `v` rotates the (i, j) coordinate
+//! pair, leaving everything else untouched. A [`GivensChain`] applies k
+//! rotations in O(k) per vector — this is what makes URT's n−1-rotation map
+//! an O(n) construction (§4.2).
+
+use crate::tensor::Tensor;
+
+/// One plane rotation: coordinates (i, j), angle encoded as (cos, sin).
+#[derive(Clone, Copy, Debug)]
+pub struct Givens {
+    pub i: usize,
+    pub j: usize,
+    pub c: f32,
+    pub s: f32,
+}
+
+impl Givens {
+    pub fn new(i: usize, j: usize, theta: f32) -> Givens {
+        assert_ne!(i, j);
+        Givens { i, j, c: theta.cos(), s: theta.sin() }
+    }
+
+    /// Apply to a row vector in place: (vi, vj) ← (vi·c − vj·s, vi·s + vj·c).
+    ///
+    /// This is `v ← v G` with G[i,i]=c, G[i,j]=s, G[j,i]=−s, G[j,j]=c —
+    /// the clockwise rotation of the paper's §4.1.
+    #[inline]
+    pub fn apply_row(&self, v: &mut [f32]) {
+        let (vi, vj) = (v[self.i], v[self.j]);
+        v[self.i] = vi * self.c - vj * self.s;
+        v[self.j] = vi * self.s + vj * self.c;
+    }
+
+    /// Dense n×n matrix form.
+    pub fn to_matrix(&self, n: usize) -> Tensor {
+        let mut m = Tensor::eye(n);
+        m.set(self.i, self.i, self.c);
+        m.set(self.i, self.j, self.s);
+        m.set(self.j, self.i, -self.s);
+        m.set(self.j, self.j, self.c);
+        m
+    }
+}
+
+/// The closed-form optimal angle of Lemma 1: for V = (a, b),
+/// θ* = atan2(b, a) − π/4 rotates V onto (r/√2, r/√2), minimizing ‖VG‖∞
+/// over O(2).
+pub fn lemma1_angle(a: f32, b: f32) -> f32 {
+    b.atan2(a) - std::f32::consts::FRAC_PI_4
+}
+
+/// Apply Lemma 1 to the coordinate pair (i, j) of a profile vector:
+/// returns the Givens rotation that balances the pair's energy.
+pub fn lemma1_givens(v: &[f32], i: usize, j: usize) -> Givens {
+    // The pair (a, b) lives in the (i, j) plane; after rotation both
+    // coordinates carry r/√2.
+    let theta = lemma1_angle(v[i], v[j]);
+    // Rotation within the (i, j) plane: our apply_row treats index order as
+    // the plane's (x, y) axes.
+    Givens::new(i, j, -theta)
+}
+
+/// An ordered product of Givens rotations (applied left-to-right).
+#[derive(Clone, Debug, Default)]
+pub struct GivensChain {
+    pub rotations: Vec<Givens>,
+}
+
+impl GivensChain {
+    pub fn new() -> GivensChain {
+        GivensChain::default()
+    }
+
+    pub fn push(&mut self, g: Givens) {
+        self.rotations.push(g);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rotations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rotations.is_empty()
+    }
+
+    /// v ← v · G₁G₂…G_k (in place, O(k)).
+    pub fn apply_row(&self, v: &mut [f32]) {
+        for g in &self.rotations {
+            g.apply_row(v);
+        }
+    }
+
+    /// Inverse application: v ← v · G_kᵀ…G₁ᵀ.
+    pub fn apply_row_inverse(&self, v: &mut [f32]) {
+        for g in self.rotations.iter().rev() {
+            let ginv = Givens { i: g.i, j: g.j, c: g.c, s: -g.s };
+            ginv.apply_row(v);
+        }
+    }
+
+    /// Dense matrix form (product of the chain).
+    pub fn to_matrix(&self, n: usize) -> Tensor {
+        // Row r of the product = e_r applied through the chain.
+        let mut m = Tensor::eye(n);
+        for r in 0..n {
+            self.apply_row(m.row_mut(r));
+        }
+        m
+    }
+}
+
+/// The n−1-rotation map of Ma et al. (2024a): a chain C with
+/// v·C = (‖v‖, 0, …, 0). Each step folds coordinate k into coordinate 0.
+pub fn map_to_e1(v: &[f32]) -> GivensChain {
+    let n = v.len();
+    let mut chain = GivensChain::new();
+    let mut w = v.to_vec();
+    for k in 1..n {
+        let (a, b) = (w[0], w[k]);
+        let r = (a * a + b * b).sqrt();
+        if r < 1e-12 {
+            continue;
+        }
+        // Choose θ with cos = a/r, sin = −b/r so that apply_row sends
+        // (a, b) -> (r, 0).
+        let g = Givens { i: 0, j: k, c: a / r, s: b / r };
+        // verify orientation: (a,b) -> (a*c - b*s, a*s + b*c)
+        //   = (a²/r + b²/r, ab/r − ab/r) = (r, 0) with s = −b/r.
+        let g = Givens { c: g.c, s: -g.s, ..g };
+        g.apply_row(&mut w);
+        chain.push(g);
+    }
+    chain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lemma1_balances_pair() {
+        // Lemma 1: VG(θ*) = (r/√2, r/√2).
+        for (a, b) in [(3.0f32, 4.0), (-2.0, 0.5), (0.0, 1.0), (5.0, -5.0)] {
+            let r = (a * a + b * b).sqrt();
+            let mut v = vec![a, b];
+            let g = lemma1_givens(&v, 0, 1);
+            g.apply_row(&mut v);
+            let target = r / 2f32.sqrt();
+            assert!((v[0].abs() - target).abs() < 1e-4, "{v:?} vs {target}");
+            assert!((v[1].abs() - target).abs() < 1e-4, "{v:?} vs {target}");
+            // ∞-norm is minimized (Lemma 1's optimum)
+            assert!(v.iter().fold(0f32, |m, x| m.max(x.abs())) <= target + 1e-4);
+        }
+    }
+
+    #[test]
+    fn givens_matrix_is_orthogonal() {
+        let g = Givens::new(1, 4, 0.7);
+        assert!(g.to_matrix(6).orthogonality_defect() < 1e-6);
+    }
+
+    #[test]
+    fn chain_matrix_matches_apply() {
+        let mut rng = Rng::new(1);
+        let mut chain = GivensChain::new();
+        for k in 0..10 {
+            chain.push(Givens::new(k % 5, 5 + (k % 3), rng.f32() * 3.0));
+        }
+        let m = chain.to_matrix(8);
+        let mut v = rng.normal_vec(8, 1.0);
+        let expect = {
+            let row = Tensor::from_raw(vec![1, 8], v.clone());
+            row.matmul(&m)
+        };
+        chain.apply_row(&mut v);
+        for i in 0..8 {
+            assert!((v[i] - expect.data()[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn map_to_e1_works() {
+        let mut rng = Rng::new(2);
+        for n in [2usize, 5, 17, 64] {
+            let v = rng.normal_vec(n, 2.0);
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let chain = map_to_e1(&v);
+            assert!(chain.len() <= n - 1);
+            let mut w = v.clone();
+            chain.apply_row(&mut w);
+            assert!((w[0] - norm).abs() < 1e-3, "n={n}: {} vs {norm}", w[0]);
+            for &x in &w[1..] {
+                assert!(x.abs() < 1e-3, "n={n}: residual {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let mut rng = Rng::new(3);
+        let v = rng.normal_vec(12, 1.0);
+        let chain = map_to_e1(&v);
+        let mut w = v.clone();
+        chain.apply_row(&mut w);
+        chain.apply_row_inverse(&mut w);
+        for i in 0..12 {
+            assert!((w[i] - v[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn chain_preserves_norm() {
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(20, 1.5);
+        let chain = map_to_e1(&rng.normal_vec(20, 1.0));
+        let mut w = v.clone();
+        chain.apply_row(&mut w);
+        let n0 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let n1 = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n0 - n1).abs() < 1e-3);
+    }
+}

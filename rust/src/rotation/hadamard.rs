@@ -1,0 +1,105 @@
+//! Sylvester–Hadamard matrices and the fast Walsh–Hadamard transform.
+//!
+//! The `H` factor in Eq. 45 and the QuaRot baseline's global rotation.
+//! Algorithm 1 guarantees the Kronecker n₂ factor is a power of two, so a
+//! true Hadamard matrix always exists on that axis.
+
+use crate::tensor::Tensor;
+
+/// Normalized Sylvester-Hadamard matrix H_n/√n (n a power of two).
+pub fn hadamard_matrix(n: usize) -> Tensor {
+    assert!(n.is_power_of_two(), "hadamard dim {n} not a power of two");
+    let mut m = Tensor::filled(&[n, n], 1.0);
+    // H[i][j] = (-1)^{popcount(i & j)}
+    for i in 0..n {
+        for j in 0..n {
+            if ((i & j).count_ones() & 1) == 1 {
+                m.set(i, j, -1.0);
+            }
+        }
+    }
+    m.scale(1.0 / (n as f32).sqrt())
+}
+
+/// In-place normalized FWHT of a single row (O(n log n)).
+pub fn fwht_row(v: &mut [f32]) {
+    let n = v.len();
+    assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let (a, b) = (v[j], v[j + h]);
+                v[j] = a + b;
+                v[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    for x in v {
+        *x *= norm;
+    }
+}
+
+/// FWHT every row of a [T, n] matrix.
+pub fn fwht_rows(x: &mut Tensor) {
+    let t = x.rows();
+    for i in 0..t {
+        fwht_row(x.row_mut(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matrix_is_orthogonal_and_symmetric() {
+        for n in [2usize, 4, 16, 64] {
+            let h = hadamard_matrix(n);
+            assert!(h.orthogonality_defect() < 1e-5, "n={n}");
+            assert!(h.sub(&h.transpose()).max_abs() < 1e-7, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fwht_matches_matrix() {
+        let mut rng = Rng::new(1);
+        let n = 32;
+        let h = hadamard_matrix(n);
+        let v = rng.normal_vec(n, 1.0);
+        let expect = Tensor::from_raw(vec![1, n], v.clone()).matmul(&h);
+        let mut w = v;
+        fwht_row(&mut w);
+        for i in 0..n {
+            assert!((w[i] - expect.data()[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fwht_involution() {
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(16, 1.0);
+        let mut w = v.clone();
+        fwht_row(&mut w);
+        fwht_row(&mut w);
+        for i in 0..16 {
+            assert!((w[i] - v[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn spike_spreads_flat() {
+        // The outlier-smoothing property: a one-hot maps to constant |.|.
+        let mut v = vec![0.0f32; 64];
+        v[17] = 8.0;
+        fwht_row(&mut v);
+        for &x in &v {
+            assert!((x.abs() - 1.0).abs() < 1e-5);
+        }
+    }
+}

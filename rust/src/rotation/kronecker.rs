@@ -1,0 +1,156 @@
+//! Kronecker-structured rotations: Algorithm 1 + the two-sided application
+//! form of Eq. 31 — the O(n^{3/2}) mechanism behind Tables 5/7 and Fig. 3.
+
+use crate::tensor::Tensor;
+
+/// Algorithm 1: factor n = n1·n2 with n2 the power of two dividing n that
+/// is nearest √n (ties resolved toward the smaller candidate, matching the
+/// strict `<` update of the paper's pseudocode).
+pub fn kron_factor(n: usize) -> (usize, usize) {
+    assert!(n >= 1);
+    let root = (n as f64).sqrt();
+    let mut n2 = 1usize;
+    let mut k = 0u32;
+    while (1usize << k) <= n {
+        let a = 1usize << k;
+        if n % a == 0 && (a as f64 - root).abs() < (n2 as f64 - root).abs() {
+            n2 = a;
+        }
+        k += 1;
+    }
+    (n / n2, n2)
+}
+
+/// Apply x ← x (R1 ⊗ R2) to every row of x [T, n] via the two-sided form
+/// rvec(R1ᵀ X_mat R2) (Eq. 31). Cost O(T·(n1²n2 + n1n2²)).
+pub fn kron_rotate_rows(x: &Tensor, r1: &Tensor, r2: &Tensor) -> Tensor {
+    let (t, n) = (x.rows(), x.cols());
+    let (n1, n2) = (r1.rows(), r2.rows());
+    assert_eq!(n1 * n2, n, "kron factors {n1}x{n2} != {n}");
+    let mut out = Tensor::zeros(&[t, n]);
+    // scratch for one token's [n1, n2] matrix
+    let mut tmp = vec![0.0f32; n1 * n2];
+    for trow in 0..t {
+        let xr = x.row(trow);
+        // tmp = R1^T @ X_mat  (tmp[k, j] = sum_i r1[i, k] * x[i, j])
+        tmp.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..n1 {
+            let xrow = &xr[i * n2..(i + 1) * n2];
+            let r1row = r1.row(i);
+            for (k, &r) in r1row.iter().enumerate() {
+                if r == 0.0 {
+                    continue;
+                }
+                let trow_ = &mut tmp[k * n2..(k + 1) * n2];
+                for j in 0..n2 {
+                    trow_[j] += r * xrow[j];
+                }
+            }
+        }
+        // out = tmp @ R2  (out[k, l] = sum_j tmp[k, j] * r2[j, l])
+        let orow = out.row_mut(trow);
+        for k in 0..n1 {
+            let trow_ = &tmp[k * n2..(k + 1) * n2];
+            let dst = &mut orow[k * n2..(k + 1) * n2];
+            for (j, &tv) in trow_.iter().enumerate() {
+                if tv == 0.0 {
+                    continue;
+                }
+                let r2row = r2.row(j);
+                for l in 0..n2 {
+                    dst[l] += tv * r2row[l];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Transform a weight W [n, C] to (R1 ⊗ R2)ᵀ W so that
+/// (x(R1⊗R2)) · ((R1⊗R2)ᵀW) = xW (Eq. 1). Implemented by applying the same
+/// row transform to Wᵀ.
+pub fn kron_rotate_weight(w: &Tensor, r1: &Tensor, r2: &Tensor) -> Tensor {
+    kron_rotate_rows(&w.transpose(), r1, r2).transpose()
+}
+
+/// FLOP count of the Kronecker application per token (the O(n^{3/2}) claim).
+pub fn kron_flops(n1: usize, n2: usize) -> usize {
+    2 * (n1 * n1 * n2 + n1 * n2 * n2)
+}
+
+/// FLOP count of a dense n×n rotation per token.
+pub fn dense_flops(n: usize) -> usize {
+    2 * n * n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::decomp::random_orthogonal;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn algorithm1_postconditions() {
+        for n in [1usize, 2, 12, 64, 96, 128, 160, 256, 320, 416, 1000] {
+            let (n1, n2) = kron_factor(n);
+            assert_eq!(n1 * n2, n);
+            assert!(n2.is_power_of_two());
+            // n2 is the closest dividing power of two to sqrt(n)
+            let root = (n as f64).sqrt();
+            for k in 0..20 {
+                let a = 1usize << k;
+                if a <= n && n % a == 0 {
+                    assert!((n2 as f64 - root).abs() <= (a as f64 - root).abs() + 1e-9,
+                            "n={n}: chose {n2}, but {a} is closer to {root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_sided_matches_dense_kron() {
+        let mut rng = Rng::new(1);
+        let (n1, n2) = (6, 4);
+        let r1 = random_orthogonal(n1, &mut rng);
+        let r2 = random_orthogonal(n2, &mut rng);
+        let x = Tensor::randn(&[5, n1 * n2], 1.0, &mut rng);
+        let fast = kron_rotate_rows(&x, &r1, &r2);
+        let dense = x.matmul(&r1.kron(&r2));
+        assert!(fast.sub(&dense).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn weight_transform_preserves_product() {
+        // (xR)(R^T W) == xW — Eq. 1 with Kronecker structure.
+        let mut rng = Rng::new(2);
+        let (n1, n2, c) = (4, 8, 6);
+        let r1 = random_orthogonal(n1, &mut rng);
+        let r2 = random_orthogonal(n2, &mut rng);
+        let x = Tensor::randn(&[7, n1 * n2], 1.0, &mut rng);
+        let w = Tensor::randn(&[n1 * n2, c], 0.5, &mut rng);
+        let y_ref = x.matmul(&w);
+        let xr = kron_rotate_rows(&x, &r1, &r2);
+        let wr = kron_rotate_weight(&w, &r1, &r2);
+        let y = xr.matmul(&wr);
+        assert!(y.sub(&y_ref).max_abs() < 1e-3,
+                "defect {}", y.sub(&y_ref).max_abs());
+    }
+
+    #[test]
+    fn flops_are_subquadratic() {
+        // the O(n^{3/2}) headline: balanced factors beat dense by ~√n/2
+        let n = 4096;
+        let (n1, n2) = kron_factor(n);
+        assert!(kron_flops(n1, n2) * 8 < dense_flops(n));
+    }
+
+    #[test]
+    fn norm_preserved() {
+        let mut rng = Rng::new(3);
+        let r1 = random_orthogonal(3, &mut rng);
+        let r2 = random_orthogonal(8, &mut rng);
+        let x = Tensor::randn(&[4, 24], 2.0, &mut rng);
+        let y = kron_rotate_rows(&x, &r1, &r2);
+        assert!((x.frob_norm() - y.frob_norm()).abs() < 1e-3);
+    }
+}

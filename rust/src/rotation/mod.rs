@@ -1,0 +1,24 @@
+//! Rotation constructions: the paper's contribution and all its baselines.
+//!
+//! * [`givens`]      — Givens rotations, chains, the closed-form Lemma-1
+//!   angle, and the n−1-rotation map of a vector onto ‖v‖e₁.
+//! * [`hadamard`]    — Sylvester–Hadamard matrices + in-place FWHT.
+//! * [`kronecker`]   — Algorithm 1 (balanced power-of-two factorization)
+//!   and the two-sided O(n^{3/2}) application form (Eq. 31).
+//! * [`art`]         — Alignment Rotation Transformation (Eq. 38).
+//! * [`urt`]         — Uniformity Rotation Transformation (Eq. 39–44).
+//! * [`singlequant`] — the Eq. 45 composer producing per-site Kronecker
+//!   factors from calibration profiles.
+//! * [`cayley`]      — Cayley SGD + STE on O(n): the SpinQuant baseline and
+//!   the §3.2 instability experiments (Fig. 2/B.1).
+//! * [`baselines`]   — QuaRot, DuQuant-style greedy, FlatQuant-style
+//!   learned Kronecker, SmoothQuant α-scaling, QuIP-style incoherence.
+
+pub mod art;
+pub mod baselines;
+pub mod cayley;
+pub mod givens;
+pub mod hadamard;
+pub mod kronecker;
+pub mod singlequant;
+pub mod urt;

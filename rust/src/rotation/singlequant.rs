@@ -1,0 +1,240 @@
+//! The SingleQuant composer (§4.2, Eq. 45): closed-form per-site Kronecker
+//! rotation factors from calibration profiles — no optimization, a single
+//! calibration pass, deterministic given the seed.
+//!
+//! For a site of width n = n₁·n₂ (Algorithm 1), the composed rotation is
+//! `R = (Rᴬ R₁ᵁ) ⊗ (H R₂ᵁ)`
+//! in row-vector application order: ART first smooths the massive-outlier
+//! axis profile on the n₁ axis, URT then uniformizes it; the n₂ axis gets
+//! the Hadamard mixing followed by its own URT. (Eq. 45 writes the first
+//! factor transposed; with orthogonal factors this is an equivalent
+//! orientation convention — our graphs apply R₁ᵀ on the left of the
+//! reshaped token, see Eq. 31 / `kernels.kron_rotate`.)
+//!
+//! Profiles:
+//! * ART consumes the **signed channel absmax** (massive outliers are rare
+//!   and extreme, so the max-magnitude representative is the right target
+//!   for Lemma 1).
+//! * URT consumes the **signed channel median** (normal outliers are the
+//!   "consistent median values across feature dimensions" of §4.2).
+
+use crate::rotation::art::{art_rotation, art_rotation_pure};
+use crate::rotation::hadamard::hadamard_matrix;
+use crate::rotation::kronecker::kron_factor;
+use crate::rotation::urt::urt_rotation;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Calibration summary for one rotation site (one quantized-linear input).
+#[derive(Clone, Debug)]
+pub struct SiteProfile {
+    /// Site width n (input dim of the linears at this site).
+    pub n: usize,
+    /// Per-channel signed value of maximum magnitude over calibration.
+    pub signed_absmax: Vec<f32>,
+    /// Per-channel median over calibration tokens.
+    pub median: Vec<f32>,
+}
+
+/// The Kronecker factor pair fed to the runtime graphs (and used to rotate
+/// weights offline via `kron_rotate_weight`).
+#[derive(Clone, Debug)]
+pub struct SiteRotation {
+    pub r1: Tensor,
+    pub r2: Tensor,
+}
+
+impl SiteRotation {
+    pub fn identity(n: usize) -> SiteRotation {
+        let (n1, n2) = kron_factor(n);
+        SiteRotation { r1: Tensor::eye(n1), r2: Tensor::eye(n2) }
+    }
+
+    /// Orthogonality defect of both factors (tests/invariants).
+    pub fn defect(&self) -> f32 {
+        self.r1
+            .orthogonality_defect()
+            .max(self.r2.orthogonality_defect())
+    }
+}
+
+/// Knobs for the composer (the ablation axes of Table 6 / Fig. 4).
+#[derive(Clone, Debug)]
+pub struct SingleQuantConfig {
+    pub use_art: bool,
+    pub use_urt: bool,
+    /// Hadamard mixing on the n₂ axis (the `H` of Eq. 45).
+    pub use_hadamard: bool,
+    /// ART detect-and-rotate repetitions. Fig. 4 sweeps 20..210 and shows
+    /// saturation at the low end; 20 is the paper's operating point (each
+    /// step is one closed-form Givens + complement — still microseconds).
+    pub art_steps: usize,
+    /// Random complement block in ART (Eq. 38's `O`); disabled in the
+    /// "pure" ablation.
+    pub art_random_complement: bool,
+    /// Also apply URT on the n₂ (Hadamard) axis. Off by default: on this
+    /// testbed the ramp-shaped uniform target *after* the FWHT measurably
+    /// undoes part of the Hadamard's flattening (see EXPERIMENTS.md §Notes,
+    /// Kronecker-axis adaptation of Eq. 45).
+    pub urt_axis2: bool,
+    pub seed: u64,
+}
+
+impl Default for SingleQuantConfig {
+    fn default() -> Self {
+        SingleQuantConfig {
+            use_art: true,
+            use_urt: true,
+            use_hadamard: true,
+            art_steps: 20,
+            art_random_complement: true,
+            urt_axis2: false,
+            seed: 0x51C7,
+        }
+    }
+}
+
+/// Axis profile of a length-n channel vector reshaped to [n1, n2]:
+/// per-row (axis 1) or per-column (axis 2) signed absmax.
+fn axis_profile(v: &[f32], n1: usize, n2: usize, axis1: bool) -> Vec<f32> {
+    let mut out = vec![0.0f32; if axis1 { n1 } else { n2 }];
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let x = v[i * n2 + j];
+            let slot = if axis1 { i } else { j };
+            if x.abs() > out[slot].abs() {
+                out[slot] = x;
+            }
+        }
+    }
+    out
+}
+
+fn rotate_profile(v: &[f32], r: &Tensor) -> Vec<f32> {
+    Tensor::from_raw(vec![1, v.len()], v.to_vec()).matmul(r).into_data()
+}
+
+/// Build the SingleQuant rotation for one site.
+pub fn build_site_rotation(profile: &SiteProfile, cfg: &SingleQuantConfig) -> SiteRotation {
+    let n = profile.n;
+    let (n1, n2) = kron_factor(n);
+    let mut rng = Rng::new(cfg.seed ^ (n as u64));
+
+    // ---- n1 axis: ART (massive outliers) then URT (normal outliers) ----
+    let mo1 = axis_profile(&profile.signed_absmax, n1, n2, true);
+    let r_a = if cfg.use_art && n1 >= 2 {
+        if cfg.art_random_complement {
+            art_rotation(&mo1, cfg.art_steps, &mut rng).rotation
+        } else {
+            art_rotation_pure(&mo1, cfg.art_steps).rotation
+        }
+    } else {
+        Tensor::eye(n1)
+    };
+    let r1 = if cfg.use_urt && n1 >= 2 {
+        let no1 = axis_profile(&profile.median, n1, n2, true);
+        let no1_rot = rotate_profile(&no1, &r_a);
+        r_a.matmul(&urt_rotation(&no1_rot).rotation)
+    } else {
+        r_a
+    };
+
+    // ---- n2 axis: Hadamard then URT ----
+    let h = if cfg.use_hadamard && n2 >= 2 {
+        hadamard_matrix(n2)
+    } else {
+        Tensor::eye(n2)
+    };
+    let r2 = if cfg.use_urt && cfg.urt_axis2 && n2 >= 2 {
+        let no2 = axis_profile(&profile.median, n1, n2, false);
+        let no2_rot = rotate_profile(&no2, &h);
+        h.matmul(&urt_rotation(&no2_rot).rotation)
+    } else {
+        h
+    };
+
+    SiteRotation { r1, r2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{fake_quant_per_token, rel_error};
+    use crate::rotation::kronecker::kron_rotate_rows;
+
+    fn outlier_profile(n: usize, seed: u64) -> SiteProfile {
+        let mut rng = Rng::new(seed);
+        let mut absmax: Vec<f32> = (0..n).map(|_| 1.0 + rng.f32()).collect();
+        let mut median: Vec<f32> = (0..n).map(|_| 0.3 * rng.normal_f32()).collect();
+        absmax[n / 4] = 35.0;
+        median[n / 4] = 6.0;
+        absmax[n / 2] = -22.0;
+        median[n / 2] = -4.0;
+        SiteProfile { n, signed_absmax: absmax, median }
+    }
+
+    #[test]
+    fn factors_are_orthogonal() {
+        let p = outlier_profile(96, 1);
+        let rot = build_site_rotation(&p, &SingleQuantConfig::default());
+        assert!(rot.defect() < 5e-3, "defect {}", rot.defect());
+    }
+
+    #[test]
+    fn ablation_combinations_all_orthogonal() {
+        let p = outlier_profile(64, 2);
+        for (art, urt) in [(false, false), (true, false), (false, true), (true, true)] {
+            let cfg = SingleQuantConfig { use_art: art, use_urt: urt, ..Default::default() };
+            let rot = build_site_rotation(&p, &cfg);
+            assert!(rot.defect() < 5e-3, "art={art} urt={urt}: {}", rot.defect());
+        }
+    }
+
+    #[test]
+    fn identity_config_yields_identity() {
+        let p = outlier_profile(64, 3);
+        let cfg = SingleQuantConfig {
+            use_art: false,
+            use_urt: false,
+            use_hadamard: false,
+            ..Default::default()
+        };
+        let rot = build_site_rotation(&p, &cfg);
+        assert!(rot.r1.sub(&Tensor::eye(rot.r1.rows())).max_abs() < 1e-7);
+        assert!(rot.r2.sub(&Tensor::eye(rot.r2.rows())).max_abs() < 1e-7);
+    }
+
+    #[test]
+    fn rotation_improves_quantization_of_outlier_activations() {
+        // End-to-end property: activations with MO channels quantize with
+        // materially lower error after the SingleQuant rotation (Fig. 1b).
+        let n = 96;
+        let mut rng = Rng::new(4);
+        let mut x = Tensor::randn(&[64, n], 1.0, &mut rng);
+        for i in 0..64 {
+            x.row_mut(i)[n / 4] = 35.0 * (0.8 + 0.4 * rng.f32());
+            x.row_mut(i)[n / 2] = -22.0 * (0.8 + 0.4 * rng.f32());
+        }
+        let p = SiteProfile {
+            n,
+            signed_absmax: crate::tensor::stats::col_signed_absmax(&x),
+            median: crate::tensor::stats::col_median(&x),
+        };
+        let rot = build_site_rotation(&p, &SingleQuantConfig::default());
+        let xr = kron_rotate_rows(&x, &rot.r1, &rot.r2);
+        let err_plain = rel_error(&x, &fake_quant_per_token(&x, 4, 1.0));
+        let err_rot = rel_error(&xr, &fake_quant_per_token(&xr, 4, 1.0));
+        assert!(err_rot < 0.6 * err_plain,
+                "rotated {err_rot} vs plain {err_plain}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = outlier_profile(64, 5);
+        let cfg = SingleQuantConfig::default();
+        let a = build_site_rotation(&p, &cfg);
+        let b = build_site_rotation(&p, &cfg);
+        assert!(a.r1.sub(&b.r1).max_abs() < 1e-9);
+        assert!(a.r2.sub(&b.r2).max_abs() < 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! URT — Uniformity Rotation Transformation (§4.2, Eq. 39–44).
+//!
+//! Targets dense **normal outliers**: build the norm-preserving,
+//! rank-preserving uniform target U for the channel profile V (Eq. 41–42),
+//! map both V and U onto ‖V‖e₁ with n−1 Givens rotations each (Ma et al.
+//! 2024a), and compose Rᵁ = R_map · R'_mapᵀ so that V·Rᵁ = U exactly.
+//! O(n) construction, O(n log n) total via the chain representation.
+
+use crate::rotation::givens::{map_to_e1, GivensChain};
+use crate::tensor::{stats, Tensor};
+
+pub struct UrtResult {
+    /// Dense Rᵁ (n×n) — what the pipeline feeds the graphs.
+    pub rotation: Tensor,
+    /// The uniform target the profile is rotated onto.
+    pub target: Vec<f32>,
+    /// Chains, kept for O(n)-per-vector application in analyses.
+    pub v_chain: GivensChain,
+    pub u_chain: GivensChain,
+}
+
+/// The centered uniform template q_k = (2k − n − 1)/n, k = 1..n (Eq. 41).
+pub fn uniform_template(n: usize) -> Vec<f32> {
+    (1..=n)
+        .map(|k| (2.0 * k as f32 - n as f32 - 1.0) / n as f32)
+        .collect()
+}
+
+/// Norm-preserving, rank-preserving uniform target for profile `v` (Eq. 42).
+pub fn uniform_target(v: &[f32]) -> Vec<f32> {
+    let n = v.len();
+    let q = uniform_template(n);
+    let vnorm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let qnorm = q.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+    let order = stats::argsort(v); // ascending ranks of V
+    let mut u = vec![0.0f32; n];
+    for (k, &idx) in order.iter().enumerate() {
+        u[idx] = q[k] * vnorm / qnorm;
+    }
+    u
+}
+
+/// Build Rᵁ with V·Rᵁ = U.
+///
+/// V·R_map = ‖V‖e₁ᵀ and U·R'_map = ‖U‖e₁ᵀ = ‖V‖e₁ᵀ, hence
+/// V·R_map·R'_mapᵀ = U (Eq. 43–44).
+pub fn urt_rotation(v: &[f32]) -> UrtResult {
+    let n = v.len();
+    let u = uniform_target(v);
+    let v_chain = map_to_e1(v);
+    let u_chain = map_to_e1(&u);
+    // Dense form: rows of Rᵁ are e_r -> apply v_chain -> apply u_chain⁻¹.
+    let mut rot = Tensor::eye(n);
+    for r in 0..n {
+        let row = rot.row_mut(r);
+        v_chain.apply_row(row);
+        u_chain.apply_row_inverse(row);
+    }
+    UrtResult { rotation: rot, target: u, v_chain, u_chain }
+}
+
+/// Apply Rᵁ to a row vector in O(n) via the chains (no dense matmul).
+pub fn urt_apply_row(res: &UrtResult, v: &mut [f32]) {
+    res.v_chain.apply_row(v);
+    res.u_chain.apply_row_inverse(v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn template_centered_and_even() {
+        let q = uniform_template(5);
+        assert!((q.iter().sum::<f32>()).abs() < 1e-6);
+        // evenly spaced
+        for w in q.windows(2) {
+            assert!((w[1] - w[0] - 2.0 / 5.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn target_preserves_norm_and_rank() {
+        let mut rng = Rng::new(1);
+        let v = rng.normal_vec(32, 2.0);
+        let u = uniform_target(&v);
+        let nv = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nu = u.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((nv - nu).abs() / nv < 1e-4);
+        // rank preservation
+        let ov = stats::argsort(&v);
+        let ou = stats::argsort(&u);
+        assert_eq!(ov, ou);
+    }
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(24, 1.5);
+        let res = urt_rotation(&v);
+        assert!(res.rotation.orthogonality_defect() < 1e-3,
+                "defect {}", res.rotation.orthogonality_defect());
+    }
+
+    #[test]
+    fn maps_profile_onto_target_exactly() {
+        let mut rng = Rng::new(3);
+        for n in [4usize, 9, 33] {
+            let v = rng.normal_vec(n, 1.0);
+            let res = urt_rotation(&v);
+            let got = Tensor::from_raw(vec![1, n], v.clone())
+                .matmul(&res.rotation)
+                .into_data();
+            for i in 0..n {
+                assert!((got[i] - res.target[i]).abs() < 2e-3,
+                        "n={n} i={i}: {} vs {}", got[i], res.target[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_apply_matches_dense() {
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(16, 1.0);
+        let res = urt_rotation(&v);
+        let x = rng.normal_vec(16, 1.0);
+        let dense = Tensor::from_raw(vec![1, 16], x.clone())
+            .matmul(&res.rotation)
+            .into_data();
+        let mut fast = x;
+        urt_apply_row(&res, &mut fast);
+        for i in 0..16 {
+            assert!((fast[i] - dense[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn flattens_outlier_profile() {
+        // after URT the profile's spread shrinks toward uniform
+        let mut v = vec![0.5f32; 20];
+        v[3] = 12.0;
+        v[11] = -9.0;
+        let res = urt_rotation(&v);
+        let got = Tensor::from_raw(vec![1, 20], v.clone())
+            .matmul(&res.rotation)
+            .into_data();
+        let max_after = got.iter().fold(0f32, |m, x| m.max(x.abs()));
+        let max_before = 12.0;
+        assert!(max_after < max_before * 0.5, "max after {max_after}");
+    }
+}

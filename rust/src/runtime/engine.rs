@@ -1,0 +1,193 @@
+//! The PJRT engine: a CPU PJRT client plus a compile-once artifact cache.
+//!
+//! Interchange is HLO **text** (`*.hlo.txt` + `*.layout.json`), produced by
+//! `python/compile/aot.py`. Text — not serialized protos — because jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Input dtype of a graph parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub inputs: Vec<InputSpec>,
+    pub n_outputs: usize,
+}
+
+impl Layout {
+    fn from_json(j: &Json) -> Result<Layout> {
+        let inputs = j
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(InputSpec {
+                    name: e.str_at("name")?.to_string(),
+                    shape: e
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    dtype: if e.str_at("dtype")? == "i32" {
+                        DType::I32
+                    } else {
+                        DType::F32
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Layout { inputs, n_outputs: j.usize_at("n_outputs")? })
+    }
+}
+
+/// A compiled artifact: executable + its input layout.
+pub struct Artifact {
+    pub name: String,
+    pub layout: Layout,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.layout.inputs.len() {
+            bail!(
+                "{}: {} inputs given, layout wants {}",
+                self.name,
+                inputs.len(),
+                self.layout.inputs.len()
+            );
+        }
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let mut tuple = out[0][0].to_literal_sync()?;
+        Ok(tuple.decompose_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (weights stay on device across
+    /// calls — the serving hot path).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("execute_b {}", self.name))?;
+        let mut tuple = out[0][0].to_literal_sync()?;
+        Ok(tuple.decompose_tuple()?)
+    }
+}
+
+/// PJRT client + manifest + compiled-artifact cache.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub dir: String,
+    pub manifest: Json,
+    cache: Mutex<HashMap<String, Arc<Artifact>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &str) -> Result<Engine> {
+        let manifest = Json::parse_file(&format!("{artifacts_dir}/manifest.json"))
+            .context("load manifest (run `make artifacts` first)")?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.to_string(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<ModelConfig> {
+        ModelConfig::from_manifest(&self.manifest, name)
+    }
+
+    /// Canonical artifact key, e.g. `sq-m_decode_w4a4_b4`.
+    pub fn artifact_key(cfg: &ModelConfig, graph: &str, mode: &str, batch: usize) -> String {
+        format!("{}_{graph}_{mode}_b{batch}", cfg.artifact_config)
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, key: &str) -> Result<Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(key) {
+            return Ok(a.clone());
+        }
+        let hlo_path = format!("{}/{key}.hlo.txt", self.dir);
+        let layout_path = format!("{}/{key}.layout.json", self.dir);
+        let layout = Layout::from_json(&Json::parse_file(&layout_path)?)?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow!("parse {hlo_path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+        let art = Arc::new(Artifact { name: key.to_string(), layout, exe });
+        self.cache.lock().unwrap().insert(key.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Upload a host tensor as a device-resident buffer.
+    pub fn buffer_f32(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        Ok(self
+            .client
+            .buffer_from_host_buffer(t.data(), t.shape(), None)?)
+    }
+
+    pub fn buffer_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    pub fn buffer_from_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> Tensor conversion helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal -> Tensor with the given logical shape.
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data: Vec<f32> = lit.to_vec()?;
+    if data.len() != shape.iter().product::<usize>() {
+        bail!("literal has {} elems, wanted shape {shape:?}", data.len());
+    }
+    Ok(Tensor::from_raw(shape.to_vec(), data))
+}

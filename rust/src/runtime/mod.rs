@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the Rust hot path. Python is never involved here.
+
+pub mod engine;
+pub mod runner;
+
+pub use engine::{Artifact, Engine};
+pub use runner::{KvCache, ModelRunner};

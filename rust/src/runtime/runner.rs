@@ -1,0 +1,404 @@
+//! ModelRunner: a quantized model bound to its AOT graphs, with
+//! device-resident parameters.
+//!
+//! Parameters (weights + rotation factors + clips) are uploaded once as
+//! PJRT buffers; per-call data (tokens, positions, KV caches) are uploaded
+//! per step. On the CPU plugin "device" is host memory, so the residency
+//! win is avoiding re-validation/copy of the ~all-of-the-model parameter
+//! list on every decode step.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::engine::{literal_to_tensor, Artifact, Engine};
+use crate::coordinator::tokenizer::PAD;
+use crate::model::ModelConfig;
+use crate::pipeline::QuantizedModel;
+use crate::tensor::Tensor;
+
+pub struct ModelRunner {
+    pub engine: Arc<Engine>,
+    pub cfg: ModelConfig,
+    pub mode: &'static str,
+    /// Device-resident parameter buffers keyed by layout name.
+    params: HashMap<String, xla::PjRtBuffer>,
+    score_art: Arc<Artifact>,
+    pub score_batch: usize,
+    /// Long-context scoring graph (few-shot eval), when lowered for this
+    /// config: (artifact, batch, seq).
+    long_art: Option<(Arc<Artifact>, usize, usize)>,
+}
+
+/// KV cache pair held between steps.
+///
+/// Fast path: the cache stays as the PJRT output **literals** and is fed
+/// back with `buffer_from_host_literal` — no tensor materialization. The
+/// coordinator only needs host access on admission (slot-row merges), at
+/// which point the host tensors are materialized lazily and become
+/// authoritative until the next decode uploads them (§Perf: this removed
+/// one full cache copy per side per decode step).
+pub struct KvCache {
+    pub batch: usize,
+    shape: Vec<usize>,
+    k_lit: xla::Literal,
+    v_lit: xla::Literal,
+    /// Some => host copies are dirty/authoritative.
+    host: Option<(Tensor, Tensor)>,
+}
+
+impl KvCache {
+    fn from_literals(shape: Vec<usize>, k_lit: xla::Literal, v_lit: xla::Literal,
+                     batch: usize) -> KvCache {
+        KvCache { batch, shape, k_lit, v_lit, host: None }
+    }
+
+    /// Materialize (or return the existing) host tensors.
+    pub fn host_mut(&mut self) -> Result<(&mut Tensor, &mut Tensor)> {
+        if self.host.is_none() {
+            let k = literal_to_tensor(&self.k_lit, &self.shape)?;
+            let v = literal_to_tensor(&self.v_lit, &self.shape)?;
+            self.host = Some((k, v));
+        }
+        let (k, v) = self.host.as_mut().unwrap();
+        Ok((k, v))
+    }
+
+    /// Contiguous span of one (layer, slot) row in the [L,B,H,T,dh] layout.
+    pub fn row_span(&self, cfg: &ModelConfig, layer: usize, slot: usize) -> std::ops::Range<usize> {
+        let row = cfg.n_heads * cfg.max_seq * cfg.d_head();
+        let base = (layer * self.batch + slot) * row;
+        base..base + row
+    }
+
+    /// Copy one slot's rows (all layers) from another cache.
+    pub fn copy_slot_from(&mut self, cfg: &ModelConfig, other: &mut KvCache,
+                          slot: usize) -> Result<()> {
+        let n_layers = cfg.n_layers;
+        let spans: Vec<(std::ops::Range<usize>, std::ops::Range<usize>)> = (0..n_layers)
+            .map(|l| (self.row_span(cfg, l, slot), other.row_span(cfg, l, slot)))
+            .collect();
+        let (ok, ov) = other.host_mut()?;
+        let (ok, ov) = (ok.data().to_vec(), ov.data().to_vec());
+        let (k, v) = self.host_mut()?;
+        for (dst, src) in spans {
+            k.data_mut()[dst.clone()].copy_from_slice(&ok[src.clone()]);
+            v.data_mut()[dst].copy_from_slice(&ov[src]);
+        }
+        Ok(())
+    }
+}
+
+impl ModelRunner {
+    /// Bind a quantized model package to its artifacts.
+    pub fn new(engine: Arc<Engine>, qm: &QuantizedModel) -> Result<ModelRunner> {
+        let cfg = qm.cfg.clone();
+        let mode: &'static str = match qm.graph_mode() {
+            "fp" => "fp",
+            "w4a16" => "w4a16",
+            "w4a4s" => "w4a4s",
+            _ => "w4a4",
+        };
+        let score_batch = engine.manifest.usize_at("score_batch")?;
+        let score_key = Engine::artifact_key(&cfg, "score", mode, score_batch);
+        let score_art = engine.load(&score_key)?;
+        let long_art = match (engine.manifest.opt("long_batch"),
+                              engine.manifest.opt("long_seq")) {
+            (Some(b), Some(t)) => {
+                let b = b.as_usize()?;
+                let key = Engine::artifact_key(&cfg, "scorelong", mode, b);
+                engine.load(&key).ok().map(|a| (a, b, t.as_usize().unwrap()))
+            }
+            _ => None,
+        };
+
+        // Upload every graph parameter once.
+        let mut params = HashMap::new();
+        for spec in &score_art.layout.inputs {
+            if spec.name.starts_with("in.") {
+                continue;
+            }
+            let t = param_tensor(qm, &spec.name, &spec.shape)?;
+            params.insert(spec.name.clone(), engine.buffer_f32(&t)?);
+        }
+        Ok(ModelRunner { engine, cfg, mode, params, score_art, score_batch, long_art })
+    }
+
+    /// Max sequence length scorable (long graph if available).
+    pub fn max_score_len(&self) -> usize {
+        self.long_art
+            .as_ref()
+            .map(|(_, _, t)| *t)
+            .unwrap_or(self.cfg.score_seq)
+            .max(self.cfg.score_seq)
+    }
+
+    fn param_buffers<'a>(&'a self, art: &Artifact) -> Result<Vec<&'a xla::PjRtBuffer>> {
+        art.layout
+            .inputs
+            .iter()
+            .filter(|s| !s.name.starts_with("in."))
+            .map(|s| {
+                self.params
+                    .get(&s.name)
+                    .ok_or_else(|| anyhow!("missing param buffer {}", s.name))
+            })
+            .collect()
+    }
+
+    // -- score ---------------------------------------------------------------
+
+    /// Logits for one padded batch of token sequences. `seqs` length must
+    /// be <= score_batch; sequences are padded/truncated to score_seq.
+    /// Returns per-sequence [len, V] logits.
+    pub fn score_batch_padded(&self, seqs: &[&[u16]]) -> Result<Vec<Tensor>> {
+        let b = self.score_batch;
+        let t = self.cfg.score_seq;
+        if seqs.is_empty() || seqs.len() > b {
+            bail!("score batch size {} out of range", seqs.len());
+        }
+        let mut tokens = vec![PAD as i32; b * t];
+        for (i, seq) in seqs.iter().enumerate() {
+            for (j, &tok) in seq.iter().take(t).enumerate() {
+                tokens[i * t + j] = tok as i32;
+            }
+        }
+        let tok_buf = self.engine.buffer_i32(&tokens, &[b, t])?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        let pbufs = self.param_buffers(&self.score_art)?;
+        bufs.extend(pbufs);
+        let out = self.score_art.run_buffers(&bufs)?;
+        let logits = literal_to_tensor(&out[0], &[b, t, self.cfg.vocab_size])?;
+        // slice out each sequence's prefix
+        let v = self.cfg.vocab_size;
+        Ok(seqs
+            .iter()
+            .enumerate()
+            .map(|(i, seq)| {
+                let len = seq.len().min(t);
+                let mut out = Tensor::zeros(&[len, v]);
+                for p in 0..len {
+                    let base = (i * t + p) * v;
+                    out.row_mut(p)
+                        .copy_from_slice(&logits.data()[base..base + v]);
+                }
+                out
+            })
+            .collect())
+    }
+
+    /// Score one padded batch through the long-context graph.
+    fn score_batch_long(&self, seqs: &[&[u16]]) -> Result<Vec<Tensor>> {
+        let (art, b, t) = self
+            .long_art
+            .as_ref()
+            .ok_or_else(|| anyhow!("no long-score graph lowered for {}", self.cfg.name))?;
+        let (b, t) = (*b, *t);
+        let mut tokens = vec![PAD as i32; b * t];
+        for (i, seq) in seqs.iter().enumerate() {
+            for (j, &tok) in seq.iter().take(t).enumerate() {
+                tokens[i * t + j] = tok as i32;
+            }
+        }
+        let tok_buf = self.engine.buffer_i32(&tokens, &[b, t])?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        bufs.extend(self.param_buffers(art)?);
+        let out = art.run_buffers(&bufs)?;
+        let logits = literal_to_tensor(&out[0], &[b, t, self.cfg.vocab_size])?;
+        let v = self.cfg.vocab_size;
+        Ok(seqs
+            .iter()
+            .enumerate()
+            .map(|(i, seq)| {
+                let len = seq.len().min(t);
+                let mut o = Tensor::zeros(&[len, v]);
+                for p in 0..len {
+                    let base = (i * t + p) * v;
+                    o.row_mut(p).copy_from_slice(&logits.data()[base..base + v]);
+                }
+                o
+            })
+            .collect())
+    }
+
+    /// Score arbitrarily many sequences (internally batched; sequences
+    /// longer than the short graph route through the long-context graph).
+    pub fn score_many(&self, seqs: &[Vec<u16>]) -> Result<Vec<Tensor>> {
+        let t_short = self.cfg.score_seq;
+        let mut out: Vec<Option<Tensor>> = vec![None; seqs.len()];
+        let mut short_idx = Vec::new();
+        let mut long_idx = Vec::new();
+        for (i, s) in seqs.iter().enumerate() {
+            if s.len() <= t_short {
+                short_idx.push(i);
+            } else {
+                long_idx.push(i);
+            }
+        }
+        for chunk in short_idx.chunks(self.score_batch) {
+            let refs: Vec<&[u16]> = chunk.iter().map(|&i| seqs[i].as_slice()).collect();
+            for (k, lg) in self.score_batch_padded(&refs)?.into_iter().enumerate() {
+                out[chunk[k]] = Some(lg);
+            }
+        }
+        if !long_idx.is_empty() {
+            let lb = self.long_art.as_ref().map(|(_, b, _)| *b).unwrap_or(1);
+            for chunk in long_idx.chunks(lb) {
+                let refs: Vec<&[u16]> =
+                    chunk.iter().map(|&i| seqs[i].as_slice()).collect();
+                for (k, lg) in self.score_batch_long(&refs)?.into_iter().enumerate() {
+                    out[chunk[k]] = Some(lg);
+                }
+            }
+        }
+        Ok(out.into_iter().map(|o| o.unwrap()).collect())
+    }
+
+    // -- serving graphs --------------------------------------------------------
+
+    fn serve_art(&self, graph: &str, batch: usize) -> Result<Arc<Artifact>> {
+        // serving graphs are lowered for fp and w4a4 only
+        let mode = if self.mode == "fp" { "fp" } else { "w4a4" };
+        let key = Engine::artifact_key(&self.cfg, graph, mode, batch);
+        self.engine.load(&key)
+    }
+
+    fn kv_shape(&self, batch: usize) -> Vec<usize> {
+        vec![
+            self.cfg.n_layers,
+            batch,
+            self.cfg.n_heads,
+            self.cfg.max_seq,
+            self.cfg.d_head(),
+        ]
+    }
+
+    /// Prefill a [B, score_seq] right-padded token batch. Returns the full
+    /// logits [B, T, V] and the KV cache.
+    pub fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<(Tensor, KvCache)> {
+        let t = self.cfg.score_seq;
+        assert_eq!(tokens.len(), batch * t);
+        let art = self.serve_art("prefill", batch)?;
+        let tok_buf = self.engine.buffer_i32(tokens, &[batch, t])?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        let pbufs = self.param_buffers(&art)?;
+        bufs.extend(pbufs);
+        let mut out = art.run_buffers(&bufs)?;
+        let logits = literal_to_tensor(&out[0], &[batch, t, self.cfg.vocab_size])?;
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        Ok((logits, KvCache::from_literals(self.kv_shape(batch), k, v, batch)))
+    }
+
+    /// One decode step at per-slot positions; updates `kv` in place and
+    /// returns logits [B, V].
+    pub fn decode(
+        &self,
+        kv: &mut KvCache,
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<Tensor> {
+        let b = kv.batch;
+        assert_eq!(tokens.len(), b);
+        assert_eq!(positions.len(), b);
+        let art = self.serve_art("decode", b)?;
+        let tok_buf = self.engine.buffer_i32(tokens, &[b])?;
+        let pos_buf = self.engine.buffer_i32(positions, &[b])?;
+        // fast path: literals straight back to the device; host tensors
+        // only when the coordinator dirtied them (admission merge)
+        let force_host = std::env::var("SQ_KV_HOST_PATH").is_ok();
+        let (k_buf, v_buf) = match kv.host.take() {
+            Some((k, v)) => (self.engine.buffer_f32(&k)?, self.engine.buffer_f32(&v)?),
+            None if force_host => {
+                let (k, v) = {
+                    let (k, v) = kv.host_mut()?;
+                    (k.clone(), v.clone())
+                };
+                kv.host = None;
+                (self.engine.buffer_f32(&k)?, self.engine.buffer_f32(&v)?)
+            }
+            None => (
+                self.engine.buffer_from_literal(&kv.k_lit)?,
+                self.engine.buffer_from_literal(&kv.v_lit)?,
+            ),
+        };
+        let mut bufs: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &pos_buf, &k_buf, &v_buf];
+        let pbufs = self.param_buffers(&art)?;
+        bufs.extend(pbufs);
+        let mut out = art.run_buffers(&bufs)?;
+        let logits = literal_to_tensor(&out[0], &[b, self.cfg.vocab_size])?;
+        kv.v_lit = out.pop().unwrap();
+        kv.k_lit = out.pop().unwrap();
+        kv.host = None;
+        Ok(logits)
+    }
+
+    /// Zero-filled KV cache (fresh decode slots).
+    pub fn empty_kv(&self, batch: usize) -> KvCache {
+        let shape = self.kv_shape(batch);
+        let zeros = Tensor::zeros(&shape);
+        let k = super::engine::lit_f32(&zeros).expect("zero literal");
+        let v = super::engine::lit_f32(&zeros).expect("zero literal");
+        KvCache::from_literals(shape, k, v, batch)
+    }
+}
+
+/// Resolve a layout parameter name to its tensor in the quantized package.
+fn param_tensor(qm: &QuantizedModel, name: &str, shape: &[usize]) -> Result<Tensor> {
+    if let Some(rest) = name_rot(name) {
+        let (site_key, which) = rest;
+        let rot = qm
+            .rots
+            .get(&site_key)
+            .ok_or_else(|| anyhow!("missing rotation {site_key}"))?;
+        let t = if which == "r1" { rot.r1.clone() } else { rot.r2.clone() };
+        if t.shape() != shape {
+            bail!("rotation {name}: shape {:?} vs layout {:?}", t.shape(), shape);
+        }
+        return Ok(t);
+    }
+    if let Some(site_key) = name_clip(name) {
+        let clip = *qm.clips.get(&site_key).unwrap_or(&1.0);
+        return Ok(Tensor::from_raw(vec![], vec![clip]));
+    }
+    let t = qm.weights.get(name)?;
+    if t.shape() != shape {
+        bail!("weight {name}: shape {:?} vs layout {:?}", t.shape(), shape);
+    }
+    Ok(t.clone())
+}
+
+/// "l00.rot_qkv.r1" -> ("l00.qkv", "r1")
+fn name_rot(name: &str) -> Option<(String, &str)> {
+    let parts: Vec<&str> = name.split('.').collect();
+    if parts.len() == 3 && parts[1].starts_with("rot_") {
+        let site = &parts[1][4..];
+        return Some((format!("{}.{site}", parts[0]), parts[2]));
+    }
+    None
+}
+
+/// "l00.clip_qkv" -> "l00.qkv"
+fn name_clip(name: &str) -> Option<String> {
+    let parts: Vec<&str> = name.split('.').collect();
+    if parts.len() == 2 && parts[1].starts_with("clip_") {
+        let site = &parts[1][5..];
+        return Some(format!("{}.{site}", parts[0]));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_parsers() {
+        assert_eq!(name_rot("l03.rot_down.r2"),
+                   Some(("l03.down".to_string(), "r2")));
+        assert_eq!(name_rot("l03.wq"), None);
+        assert_eq!(name_clip("l00.clip_mlp"), Some("l00.mlp".to_string()));
+        assert_eq!(name_clip("l00.an"), None);
+    }
+}

@@ -1,0 +1,219 @@
+//! Matrix decompositions: Cholesky (GPTQ's Hessian machinery), triangular
+//! inversion, and Gram–Schmidt QR (random orthogonal matrices).
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+use crate::util::rng::Rng;
+
+/// Lower-triangular Cholesky factor L of a symmetric positive-definite A
+/// (A = L Lᵀ). Fails if a pivot collapses (matrix not PD).
+pub fn cholesky(a: &Tensor) -> Result<Tensor> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j);
+            for k in 0..j {
+                sum -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("cholesky: non-PD pivot {sum} at {i}");
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.at(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Inverse of a lower-triangular matrix (forward substitution per column).
+pub fn invert_lower(l: &Tensor) -> Tensor {
+    let n = l.rows();
+    let mut inv = Tensor::zeros(&[n, n]);
+    for col in 0..n {
+        // Solve L x = e_col.
+        let mut x = vec![0.0f32; n];
+        for i in col..n {
+            let mut sum = if i == col { 1.0 } else { 0.0 };
+            for k in col..i {
+                sum -= l.at(i, k) * x[k];
+            }
+            x[i] = sum / l.at(i, i);
+        }
+        for i in 0..n {
+            inv.set(i, col, x[i]);
+        }
+    }
+    inv
+}
+
+/// Symmetric-positive-definite inverse via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹.
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor> {
+    let l = cholesky(a)?;
+    let li = invert_lower(&l);
+    Ok(li.matmul_tn(&li)) // Liᵀ @ Li
+}
+
+/// Upper Cholesky factor U of A (A = Uᵀ U): the form GPTQ uses for the
+/// inverse Hessian. U = (lower-cholesky(A))ᵀ.
+pub fn cholesky_upper(a: &Tensor) -> Result<Tensor> {
+    Ok(cholesky(a)?.transpose())
+}
+
+/// General matrix inverse by Gauss–Jordan elimination with partial
+/// pivoting (needed for the Cayley transform's (I − α/2 Ω)⁻¹).
+pub fn inverse(a: &Tensor) -> Result<Tensor> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut m = a.clone();
+    let mut inv = Tensor::eye(n);
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if m.at(r, col).abs() > m.at(piv, col).abs() {
+                piv = r;
+            }
+        }
+        if m.at(piv, col).abs() < 1e-12 {
+            bail!("inverse: singular at column {col}");
+        }
+        if piv != col {
+            for j in 0..n {
+                let (a1, a2) = (m.at(col, j), m.at(piv, j));
+                m.set(col, j, a2);
+                m.set(piv, j, a1);
+                let (b1, b2) = (inv.at(col, j), inv.at(piv, j));
+                inv.set(col, j, b2);
+                inv.set(piv, j, b1);
+            }
+        }
+        let d = m.at(col, col);
+        for j in 0..n {
+            m.set(col, j, m.at(col, j) / d);
+            inv.set(col, j, inv.at(col, j) / d);
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = m.at(r, col);
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let v = m.at(r, j) - f * m.at(col, j);
+                m.set(r, j, v);
+                let w = inv.at(r, j) - f * inv.at(col, j);
+                inv.set(r, j, w);
+            }
+        }
+    }
+    Ok(inv)
+}
+
+/// QR by modified Gram–Schmidt; returns Q ([m, n] with orthonormal columns).
+pub fn gram_schmidt_q(a: &Tensor) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    let mut q = a.clone();
+    for j in 0..n {
+        // subtract projections onto previous columns
+        for k in 0..j {
+            let mut dot = 0.0f32;
+            for i in 0..m {
+                dot += q.at(i, k) * q.at(i, j);
+            }
+            for i in 0..m {
+                let v = q.at(i, j) - dot * q.at(i, k);
+                q.set(i, j, v);
+            }
+        }
+        let mut norm = 0.0f32;
+        for i in 0..m {
+            norm += q.at(i, j) * q.at(i, j);
+        }
+        let norm = norm.sqrt().max(1e-12);
+        for i in 0..m {
+            let v = q.at(i, j) / norm;
+            q.set(i, j, v);
+        }
+    }
+    q
+}
+
+/// Haar-ish random orthogonal matrix: QR of a Gaussian (re-orthogonalized
+/// once for numerical hygiene at f32).
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Tensor {
+    let g = Tensor::randn(&[n, n], 1.0, rng);
+    let q = gram_schmidt_q(&g);
+    gram_schmidt_q(&q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let a = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let mut h = a.matmul_tn(&a); // AᵀA is PSD
+        for i in 0..n {
+            let v = h.at(i, i) + 0.5;
+            h.set(i, i, v);
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul_nt(&l);
+        assert!(a.sub(&rec).max_abs() < 1e-3, "{}", a.sub(&rec).max_abs());
+    }
+
+    #[test]
+    fn spd_inverse_works() {
+        let a = spd(6, 2);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.sub(&Tensor::eye(6)).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn invert_lower_correct() {
+        let a = spd(5, 3);
+        let l = cholesky(&a).unwrap();
+        let li = invert_lower(&l);
+        assert!(l.matmul(&li).sub(&Tensor::eye(5)).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Rng::new(4);
+        for n in [2, 5, 16, 33] {
+            let q = random_orthogonal(n, &mut rng);
+            assert!(q.orthogonality_defect() < 1e-4,
+                    "defect {} at n={n}", q.orthogonality_defect());
+        }
+    }
+
+    #[test]
+    fn general_inverse() {
+        let mut rng = Rng::new(9);
+        let a = Tensor::randn(&[7, 7], 1.0, &mut rng);
+        let inv = inverse(&a).unwrap();
+        assert!(a.matmul(&inv).sub(&Tensor::eye(7)).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let a = Tensor::from_raw(vec![2, 2], vec![1.0, 2.0, 2.0, 1.0]); // indefinite
+        assert!(cholesky(&a).is_err());
+    }
+}

@@ -1,0 +1,428 @@
+//! Dense f32 tensors + the linear algebra the quantization pipeline needs.
+//!
+//! Row-major, shape-checked, deliberately simple: models in this repo are
+//! ≤ a few million parameters and all heavy inference math runs inside XLA;
+//! this module serves the *pipeline* (calibration, rotation construction,
+//! GPTQ) and the Rust reference forward used for calibration capture.
+
+pub mod decomp;
+pub mod stats;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // -- construction ---------------------------------------------------------
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn from_raw(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs {} elems", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Tensor {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Tensor { shape: vec![r, c], data }
+    }
+
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn randn(shape: &[usize], sigma: f32, rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, sigma) }
+    }
+
+    // -- accessors ------------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Rows of a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on non-matrix {:?}", self.shape);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on non-matrix {:?}", self.shape);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        let c = self.shape[1];
+        self.data[i * c + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows()).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // -- elementwise ------------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn mul_elem(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    // -- norms ------------------------------------------------------------------
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mse(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1) as f32;
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n
+    }
+
+    // -- matmul family ------------------------------------------------------------
+
+    /// C = A @ B for 2-D tensors (ikj loop order; B rows stream through cache).
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul {:?} @ {:?}", self.shape, b.shape);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kk);
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// C = A^T @ B (A: [k, m], B: [k, n]).
+    pub fn matmul_tn(&self, b: &Tensor) -> Tensor {
+        let (k, m) = (self.rows(), self.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul_tn {:?} @ {:?}", self.shape, b.shape);
+        let mut out = vec![0.0f32; m * n];
+        for kk in 0..k {
+            let arow = self.row(kk);
+            let brow = b.row(kk);
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// C = A @ B^T (A: [m, k], B: [n, k]).
+    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (n, k2) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul_nt {:?} @ {:?}", self.shape, b.shape);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = self.row(i);
+            for j in 0..n {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    /// y = x @ A for a single row vector x (len = rows of A).
+    pub fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        let (k, n) = (self.rows(), self.cols());
+        assert_eq!(x.len(), k);
+        let mut out = vec![0.0f32; n];
+        for (kk, &a) in x.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let row = self.row(kk);
+            for j in 0..n {
+                out[j] += a * row[j];
+            }
+        }
+        out
+    }
+
+    /// Orthogonality defect ‖AᵀA − I‖∞ (0 for exact rotations).
+    pub fn orthogonality_defect(&self) -> f32 {
+        let g = self.matmul_tn(self);
+        let n = g.rows();
+        let mut worst = 0.0f32;
+        for i in 0..n {
+            for j in 0..n {
+                let target = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((g.at(i, j) - target).abs());
+            }
+        }
+        worst
+    }
+
+    /// Horizontal concatenation of 2-D tensors with equal row counts.
+    pub fn hcat(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("hcat of nothing");
+        }
+        let m = parts[0].rows();
+        let total: usize = parts.iter().map(|p| p.cols()).sum();
+        let mut out = Tensor::zeros(&[m, total]);
+        for i in 0..m {
+            let mut off = 0;
+            for p in parts {
+                if p.rows() != m {
+                    bail!("hcat row mismatch");
+                }
+                out.row_mut(i)[off..off + p.cols()].copy_from_slice(p.row(i));
+                off += p.cols();
+            }
+        }
+        Ok(out)
+    }
+
+    /// Rows `lo..hi` as a new tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        let c = self.cols();
+        Tensor {
+            shape: vec![hi - lo, c],
+            data: self.data[lo * c..hi * c].to_vec(),
+        }
+    }
+
+    /// Columns `lo..hi` as a new tensor.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
+        let m = self.rows();
+        let mut out = Tensor::zeros(&[m, hi - lo]);
+        for i in 0..m {
+            out.row_mut(i).copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        out
+    }
+
+    /// Kronecker product A ⊗ B (used only in tests/analysis; the hot path
+    /// uses the two-sided small-GEMM form).
+    pub fn kron(&self, b: &Tensor) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let (p, q) = (b.rows(), b.cols());
+        let mut out = Tensor::zeros(&[m * p, n * q]);
+        for i in 0..m {
+            for j in 0..n {
+                let a = self.at(i, j);
+                if a == 0.0 {
+                    continue;
+                }
+                for r in 0..p {
+                    for s in 0..q {
+                        out.set(i * p + r, j * q + s, a * b.at(r, s));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_raw(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_raw(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[7, 4], 1.0, &mut rng);
+        let c1 = a.matmul(&b);
+        let c2 = a.transpose().matmul_tn(&b);
+        let c3 = a.matmul_nt(&b.transpose());
+        for i in 0..c1.len() {
+            assert!((c1.data()[i] - c2.data()[i]).abs() < 1e-4);
+            assert!((c1.data()[i] - c3.data()[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn eye_is_orthogonal() {
+        assert!(Tensor::eye(9).orthogonality_defect() < 1e-7);
+    }
+
+    #[test]
+    fn kron_shape_and_identity() {
+        let i2 = Tensor::eye(2);
+        let i3 = Tensor::eye(3);
+        let k = i2.kron(&i3);
+        assert_eq!(k.shape(), &[6, 6]);
+        assert!(k.sub(&Tensor::eye(6)).max_abs() < 1e-7);
+    }
+
+    #[test]
+    fn hcat_and_slices() {
+        let a = Tensor::from_raw(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_raw(vec![2, 1], vec![5., 6.]);
+        let c = Tensor::hcat(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.row(1), &[3., 4., 6.]);
+        assert_eq!(c.slice_cols(2, 3).data(), &[5., 6.]);
+        assert_eq!(c.slice_rows(1, 2).data(), &[3., 4., 6.]);
+    }
+
+    #[test]
+    fn vecmat_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let x: Vec<f32> = rng.normal_vec(6, 1.0);
+        let y1 = a.vecmat(&x);
+        let xm = Tensor::from_raw(vec![1, 6], x);
+        let y2 = xm.matmul(&a);
+        for i in 0..4 {
+            assert!((y1[i] - y2.data()[i]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Distribution statistics used by calibration and the outlier analyses
+//! (Fig. 1b quantization-space utilization, MO/NO detection).
+
+use super::Tensor;
+
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+pub fn variance(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32
+}
+
+/// Excess kurtosis (0 for a Gaussian): the paper's proxy for how heavy-
+/// tailed / outlier-dominated an activation distribution is.
+pub fn kurtosis(xs: &[f32]) -> f32 {
+    let m = mean(xs);
+    let var = variance(xs).max(1e-12);
+    let m4 = xs.iter().map(|x| (x - m).powi(4)).sum::<f32>() / xs.len() as f32;
+    m4 / (var * var) - 3.0
+}
+
+/// p-th percentile (0..=100) by sorting a copy.
+pub fn percentile(xs: &[f32], p: f32) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f32).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Indices that sort `xs` ascending.
+pub fn argsort(xs: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx
+}
+
+pub fn argmax_abs(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if x.abs() > xs[best].abs() {
+            best = i;
+        }
+    }
+    best
+}
+
+pub fn argmin_abs(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if x.abs() < xs[best].abs() {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Per-column max |x| of a [T, n] activation matrix (channel absmax profile).
+pub fn col_absmax(x: &Tensor) -> Vec<f32> {
+    let (t, n) = (x.rows(), x.cols());
+    let mut out = vec![0.0f32; n];
+    for i in 0..t {
+        for (j, &v) in x.row(i).iter().enumerate() {
+            out[j] = out[j].max(v.abs());
+        }
+    }
+    let _ = t;
+    out
+}
+
+/// Per-column signed value of maximum magnitude (keeps the outlier's sign,
+/// which ART's closed-form angle uses).
+pub fn col_signed_absmax(x: &Tensor) -> Vec<f32> {
+    let (t, n) = (x.rows(), x.cols());
+    let mut out = vec![0.0f32; n];
+    for i in 0..t {
+        for (j, &v) in x.row(i).iter().enumerate() {
+            if v.abs() > out[j].abs() {
+                out[j] = v;
+            }
+        }
+    }
+    let _ = t;
+    out
+}
+
+/// Per-column median of a [T, n] matrix (URT's NO profile; medians are the
+/// "consistent across tokens" statistic the paper cites for normal outliers).
+pub fn col_median(x: &Tensor) -> Vec<f32> {
+    let (t, n) = (x.rows(), x.cols());
+    let mut out = vec![0.0f32; n];
+    let mut buf = vec![0.0f32; t];
+    for j in 0..n {
+        for i in 0..t {
+            buf[i] = x.at(i, j);
+        }
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out[j] = buf[t / 2];
+    }
+    out
+}
+
+/// Per-row max |x| (per-token scale basis of the A4 quantizer).
+pub fn row_absmax(x: &Tensor) -> Vec<f32> {
+    (0..x.rows())
+        .map(|i| x.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+        .collect()
+}
+
+/// Quantization-space utilization (Fig. 1b): the fraction of the
+/// [-absmax, absmax] range that the bulk (99th percentile) of the data
+/// actually occupies. Near 1.0 = well-spread; ≪ 1 = outlier-dominated.
+pub fn quant_space_utilization(xs: &[f32]) -> f32 {
+    let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-12);
+    let abs: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    percentile(&abs, 99.0) / absmax
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kurtosis_gaussian_near_zero() {
+        let mut rng = Rng::new(1);
+        let xs = rng.normal_vec(30_000, 1.0);
+        assert!(kurtosis(&xs).abs() < 0.3, "{}", kurtosis(&xs));
+    }
+
+    #[test]
+    fn kurtosis_spiked_is_large() {
+        let mut rng = Rng::new(2);
+        let mut xs = rng.normal_vec(1000, 1.0);
+        xs[0] = 100.0;
+        assert!(kurtosis(&xs) > 50.0);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn argsort_sorts() {
+        let xs = vec![3.0, 1.0, 2.0];
+        assert_eq!(argsort(&xs), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn utilization_detects_outliers() {
+        let mut rng = Rng::new(3);
+        let clean = rng.normal_vec(2000, 1.0);
+        let mut spiked = clean.clone();
+        spiked[7] = 50.0;
+        assert!(quant_space_utilization(&clean) > 0.5);
+        assert!(quant_space_utilization(&spiked) < 0.2);
+    }
+
+    #[test]
+    fn col_profiles() {
+        let x = Tensor::from_raw(vec![2, 3], vec![1., -5., 2., -3., 4., 2.]);
+        assert_eq!(col_absmax(&x), vec![3., 5., 2.]);
+        assert_eq!(col_signed_absmax(&x), vec![-3., -5., 2.]);
+        assert_eq!(row_absmax(&x), vec![5., 4.]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Micro-benchmark harness (offline stand-in for criterion).
+//!
+//! Used by the `cargo bench` targets (`rust/benches/*.rs`, all
+//! `harness = false`) and by the quantization-time experiment (Table 7).
+//! Reports robust statistics over repeated timed runs after a warmup.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<38} {:>10} {:>10} {:>10} {:>10}",
+            self.name,
+            fmt_s(self.mean_s),
+            fmt_s(self.p50_s),
+            fmt_s(self.p95_s),
+            fmt_s(self.min_s),
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<38} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "p50", "p95", "min"
+    )
+}
+
+fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Time `f` for `iters` measured runs after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    stats_from(name, &mut times)
+}
+
+/// Time `f` repeatedly until `budget_s` elapses (at least 3 runs).
+pub fn bench_for<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchStats {
+    f(); // warmup
+    let start = Instant::now();
+    let mut times = Vec::new();
+    while start.elapsed().as_secs_f64() < budget_s || times.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() > 10_000 {
+            break;
+        }
+    }
+    stats_from(name, &mut times)
+}
+
+fn stats_from(name: &str, times: &mut [f64]) -> BenchStats {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: times.iter().sum::<f64>() / n as f64,
+        p50_s: times[n / 2],
+        p95_s: times[(n as f64 * 0.95) as usize % n.max(1)],
+        min_s: times[0],
+        max_s: times[n - 1],
+    }
+}
+
+/// Simple aligned-column table printer for experiment outputs.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop", 2, 20, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 20);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.max_s);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("demo") && r.contains("bb"));
+    }
+}

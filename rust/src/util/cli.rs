@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (offline stand-in for clap).
+//!
+//! Grammar: `singlequant <subcommand> [--key value]... [--flag]...`
+//! Unknown keys are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `flag_names` lists the valueless switches.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if flag_names.contains(&key) {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("--{key} expects a value"))?;
+                    out.options.insert(key.to_string(), val.clone());
+                    i += 2;
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+                i += 1;
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&v(&["quantize", "--model", "sq-m", "--verbose"]),
+                            &["verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("quantize"));
+        assert_eq!(a.get("model"), Some("sq-m"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&v(&["x", "--k"]), &[]).is_err());
+    }
+
+    #[test]
+    fn numeric_helpers() {
+        let a = Args::parse(&v(&["b", "--n", "12", "--r", "0.5"]), &[]).unwrap();
+        assert_eq!(a.usize_or("n", 1).unwrap(), 12);
+        assert_eq!(a.f64_or("r", 1.0).unwrap(), 0.5);
+        assert_eq!(a.usize_or("absent", 3).unwrap(), 3);
+    }
+}

@@ -1,0 +1,25 @@
+//! Hand-rolled substrates.
+//!
+//! This environment is fully offline — the only third-party crates
+//! available are `xla` and `anyhow` (plus their transitive deps), so the
+//! usual ecosystem pieces (serde, rand, clap, criterion, proptest) are
+//! implemented here from scratch, sized to what the rest of the system
+//! needs:
+//!
+//! * [`rng`]   — xoshiro256++ PRNG with normal/uniform/permutation helpers.
+//! * [`json`]  — recursive-descent JSON parser + writer (manifest, tasks,
+//!   reports).
+//! * [`sqt`]   — the named-tensor container format shared with the Python
+//!   build path (twin of `python/compile/sqt.py`).
+//! * [`cli`]   — subcommand + `--flag value` argument parser.
+//! * [`bench`] — wall-clock micro-benchmark harness with robust statistics
+//!   (criterion stand-in; used by `cargo bench` targets).
+//! * [`prop`]  — property-testing harness (proptest stand-in) used for the
+//!   invariant suites in `rust/tests/`.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod sqt;

@@ -1,0 +1,73 @@
+//! Property-testing harness (offline stand-in for proptest).
+//!
+//! `forall` drives a generator through N seeded cases and reports the
+//! first failing seed so a failure is reproducible with
+//! `check_seed(failing_seed, ...)`. No shrinking — generators are kept
+//! small and structured instead.
+
+use crate::util::rng::Rng;
+
+/// Run `prop(gen(rng))` for `cases` seeded inputs; panics with the seed and
+/// message on the first failure.
+pub fn forall<T, G, P>(name: &str, cases: usize, base_seed: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B9);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two slices match elementwise within `tol`.
+pub fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Assert a scalar predicate with a formatted message.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes() {
+        forall("sum-commutes", 50, 1, |r| (r.f32(), r.f32()), |(a, b)| {
+            ensure((a + b - (b + a)).abs() < 1e-9, "addition must commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn forall_reports_failure() {
+        forall("always-fails", 3, 1, |r| r.f32(), |_| Err("always-fails".into()));
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.5], 0.1).is_err());
+        assert!(close(&[1.0, 2.0], &[1.0, 2.05], 0.1).is_ok());
+    }
+}

@@ -1,0 +1,239 @@
+//! SQT named-tensor container: the Rust twin of `python/compile/sqt.py`.
+//!
+//! See the Python module for the byte layout. Checkpoints, token corpora,
+//! and quantized-model packages all travel in this format.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::json::Json;
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"SQT1";
+
+/// A tensor of one of the supported on-disk dtypes.
+#[derive(Clone, Debug)]
+pub enum AnyTensor {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U16 { shape: Vec<usize>, data: Vec<u16> },
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+}
+
+impl AnyTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            AnyTensor::F32(t) => t.shape(),
+            AnyTensor::I32 { shape, .. } => shape,
+            AnyTensor::U16 { shape, .. } => shape,
+            AnyTensor::U8 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            AnyTensor::F32(t) => Ok(t),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_u16(&self) -> Result<&[u16]> {
+        match self {
+            AnyTensor::U16 { data, .. } => Ok(data),
+            _ => bail!("tensor is not u16"),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            AnyTensor::U8 { data, .. } => Ok(data),
+            _ => bail!("tensor is not u8"),
+        }
+    }
+}
+
+/// An SQT file in memory: named tensors + free-form JSON metadata.
+#[derive(Clone, Debug, Default)]
+pub struct SqtFile {
+    pub tensors: BTreeMap<String, AnyTensor>,
+    pub meta: Option<Json>,
+}
+
+impl SqtFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert_f32(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), AnyTensor::F32(t));
+    }
+
+    pub fn get(&self, name: &str) -> Result<&AnyTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("SQT: missing tensor {name:?}"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)?.as_f32()
+    }
+
+    pub fn load(path: &str) -> Result<SqtFile> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).map_err(|e| anyhow!("open {path}: {e}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path}: bad SQT magic");
+        }
+        let n_tensors = read_u32(&mut f)? as usize;
+        let meta_len = read_u32(&mut f)? as usize;
+        let mut meta_bytes = vec![0u8; meta_len];
+        f.read_exact(&mut meta_bytes)?;
+        let meta = if meta_len > 0 {
+            Some(Json::parse(std::str::from_utf8(&meta_bytes)?)?)
+        } else {
+            None
+        };
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n_tensors {
+            let name_len = read_u16(&mut f)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            f.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes)?;
+            let mut db = [0u8; 2];
+            f.read_exact(&mut db)?;
+            let (dtype, ndim) = (db[0], db[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let nbytes = read_u64(&mut f)? as usize;
+            let mut raw = vec![0u8; nbytes];
+            f.read_exact(&mut raw)?;
+            let t = match dtype {
+                0 => AnyTensor::F32(Tensor::from_raw(
+                    shape,
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                )),
+                1 => AnyTensor::I32 {
+                    shape,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                },
+                2 => AnyTensor::U16 {
+                    shape,
+                    data: raw
+                        .chunks_exact(2)
+                        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                        .collect(),
+                },
+                3 => AnyTensor::U8 { shape, data: raw },
+                d => bail!("{path}: unknown dtype code {d}"),
+            };
+            tensors.insert(name, t);
+        }
+        Ok(SqtFile { tensors, meta })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        let meta_bytes = self
+            .meta
+            .as_ref()
+            .map(|m| m.to_string().into_bytes())
+            .unwrap_or_default();
+        f.write_all(&(meta_bytes.len() as u32).to_le_bytes())?;
+        f.write_all(&meta_bytes)?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u16).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            let (code, shape): (u8, &[usize]) = match t {
+                AnyTensor::F32(x) => (0, x.shape()),
+                AnyTensor::I32 { shape, .. } => (1, shape),
+                AnyTensor::U16 { shape, .. } => (2, shape),
+                AnyTensor::U8 { shape, .. } => (3, shape),
+            };
+            f.write_all(&[code, shape.len() as u8])?;
+            for &d in shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            match t {
+                AnyTensor::F32(x) => {
+                    f.write_all(&((x.len() * 4) as u64).to_le_bytes())?;
+                    for v in x.data() {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                AnyTensor::I32 { data, .. } => {
+                    f.write_all(&((data.len() * 4) as u64).to_le_bytes())?;
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                AnyTensor::U16 { data, .. } => {
+                    f.write_all(&((data.len() * 2) as u64).to_le_bytes())?;
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                AnyTensor::U8 { data, .. } => {
+                    f.write_all(&(data.len() as u64).to_le_bytes())?;
+                    f.write_all(data)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sqt_test_rs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sqt");
+        let mut f = SqtFile::new();
+        f.insert_f32("w", Tensor::from_raw(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        f.tensors.insert(
+            "toks".into(),
+            AnyTensor::U16 { shape: vec![4], data: vec![9, 8, 7, 256] },
+        );
+        f.meta = Some(Json::parse(r#"{"config": "sq-s", "steps": 10}"#).unwrap());
+        f.save(path.to_str().unwrap()).unwrap();
+        let g = SqtFile::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(g.f32("w").unwrap().data(), &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(g.get("toks").unwrap().as_u16().unwrap(), &[9, 8, 7, 256]);
+        assert_eq!(g.meta.unwrap().str_at("config").unwrap(), "sq-s");
+    }
+}

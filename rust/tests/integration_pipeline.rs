@@ -1,0 +1,122 @@
+//! Pipeline integration on real trained checkpoints: quality ordering,
+//! calibration structure, and the single-pass speed claim.
+//! Requires `make artifacts`.
+
+use singlequant::analysis::outliers::site_outlier_stats;
+use singlequant::calib::{calib_sequences, run_calibration};
+use singlequant::model::forward::forward_score;
+use singlequant::model::Weights;
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::util::sqt::SqtFile;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists()
+}
+
+fn load(model: &str) -> (singlequant::model::ModelConfig, Weights, Vec<u16>) {
+    let dir = artifacts_dir();
+    let engine = singlequant::runtime::Engine::new(&dir).unwrap();
+    let cfg = engine.config(model).unwrap();
+    let w = Weights::load(&format!("{dir}/ckpt/{model}.sqt")).unwrap();
+    let toks = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))
+        .unwrap()
+        .get("tokens")
+        .unwrap()
+        .as_u16()
+        .unwrap()
+        .to_vec();
+    (cfg, w, toks)
+}
+
+#[test]
+fn calibration_detects_massive_outliers() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (cfg, w, toks) = load("sq-m");
+    let seqs = calib_sequences(&toks, 6, 64, 1);
+    let cal = run_calibration(&cfg, &w, &seqs, 1).unwrap();
+    // the training fold injects 80-320x massive channels; calibration must
+    // see them at the qkv/mlp sites
+    let s = site_outlier_stats(&cal, "l00.qkv");
+    assert!(s.mo_ratio > 8.0, "MO ratio only {}", s.mo_ratio);
+    assert!(s.mo_channels >= 1);
+    assert!(s.utilization < 0.5, "activations look too easy: {}", s.utilization);
+}
+
+#[test]
+fn quality_ordering_singlequant_vs_naive() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Through the Rust quantized reference forward (fast, no PJRT):
+    // fidelity to the fp logits must order SingleQuant/QuaRot above RTN.
+    let (cfg, w, toks) = load("sq-m");
+    let eval: Vec<u16> = toks[5000..5000 + 64].to_vec();
+    let fp = forward_score(&cfg, &w, &eval, None, None).unwrap();
+    let mut errs = std::collections::BTreeMap::new();
+    for (name, method) in [
+        ("rtn", Method::Rtn),
+        ("quarot", Method::QuaRot),
+        ("singlequant", Method::singlequant()),
+    ] {
+        let opts = PipelineOptions { method, calib_seqs: 6, calib_len: 64, ..Default::default() };
+        let qm = quantize(&cfg, &w, &toks, &opts).unwrap();
+        let ctx = qm.quant_ctx().unwrap();
+        let lg = forward_score(&cfg, &qm.weights, &eval, Some(&ctx), None).unwrap();
+        errs.insert(name, lg.mse(&fp));
+    }
+    assert!(errs["singlequant"] < errs["rtn"],
+            "singlequant {} !< rtn {}", errs["singlequant"], errs["rtn"]);
+    assert!(errs["quarot"] < errs["rtn"]);
+}
+
+#[test]
+fn single_pass_speed_claim() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Table 7's core claim at this scale: closed-form construction is
+    // much faster than the 100-step learned baseline.
+    let (cfg, w, toks) = load("sq-s");
+    let t0 = std::time::Instant::now();
+    let _ = quantize(&cfg, &w, &toks, &PipelineOptions::default()).unwrap();
+    let t_single = t0.elapsed().as_secs_f64();
+
+    let t0 = std::time::Instant::now();
+    let _ = quantize(&cfg, &w, &toks, &PipelineOptions {
+        method: Method::SpinQuant { steps: 100 },
+        ..Default::default()
+    })
+    .unwrap();
+    let t_spin = t0.elapsed().as_secs_f64();
+    assert!(t_spin > 3.0 * t_single,
+            "spin {t_spin:.2}s not much slower than single {t_single:.2}s");
+}
+
+#[test]
+fn moe_pipeline_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (cfg, w, toks) = load("sq-moe");
+    let qm = quantize(&cfg, &w, &toks, &PipelineOptions {
+        calib_seqs: 4,
+        calib_len: 48,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(qm.rots.len(), cfg.n_layers * 4);
+    let eval: Vec<u16> = toks[100..148].to_vec();
+    let ctx = qm.quant_ctx().unwrap();
+    let lg = forward_score(&cfg, &qm.weights, &eval, Some(&ctx), None).unwrap();
+    assert!(lg.data().iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,142 @@
+//! Integration: AOT HLO artifacts executed through PJRT must agree with
+//! the pure-Rust reference forward on the real trained checkpoints, for
+//! both fp and quantized graphs — the wire that holds the three layers
+//! together. Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use singlequant::coordinator::tokenizer::PAD;
+use singlequant::model::forward::forward_score;
+use singlequant::model::Weights;
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::util::sqt::SqtFile;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists()
+}
+
+fn corpus_tokens() -> Vec<u16> {
+    let f = SqtFile::load(&format!("{}/data/corpus_wiki_eval.sqt", artifacts_dir()))
+        .expect("corpus");
+    f.get("tokens").unwrap().as_u16().unwrap().to_vec()
+}
+
+#[test]
+fn fp_graph_matches_rust_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Arc::new(Engine::new(&artifacts_dir()).unwrap());
+    let cfg = engine.config("sq-s").unwrap();
+    let weights = Weights::load(&format!("{}/ckpt/sq-s.sqt", artifacts_dir())).unwrap();
+    weights.validate(&cfg).unwrap();
+
+    let toks = corpus_tokens();
+    let opts = PipelineOptions { method: Method::Fp16, ..Default::default() };
+    let qm = quantize(&cfg, &weights, &toks, &opts).unwrap();
+    let runner = ModelRunner::new(engine, &qm).unwrap();
+
+    let seq: Vec<u16> = toks[100..100 + 40].to_vec();
+    let via_pjrt = &runner.score_many(&[seq.clone()]).unwrap()[0];
+    let via_rust = forward_score(&cfg, &weights, &seq, None, None).unwrap();
+    let scale = via_rust.max_abs().max(1.0);
+    let mut worst = 0.0f32;
+    for p in 0..seq.len() {
+        for v in 0..cfg.vocab_size {
+            worst = worst.max((via_pjrt.at(p, v) - via_rust.at(p, v)).abs());
+        }
+    }
+    assert!(worst / scale < 2e-3, "fp mismatch {worst} (scale {scale})");
+}
+
+#[test]
+fn w4a4_graph_matches_rust_quant_forward() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Arc::new(Engine::new(&artifacts_dir()).unwrap());
+    let cfg = engine.config("sq-s").unwrap();
+    let weights = Weights::load(&format!("{}/ckpt/sq-s.sqt", artifacts_dir())).unwrap();
+    let toks = corpus_tokens();
+    let opts = PipelineOptions {
+        method: Method::singlequant(),
+        calib_seqs: 4,
+        calib_len: 48,
+        ..Default::default()
+    };
+    let qm = quantize(&cfg, &weights, &toks, &opts).unwrap();
+    let ctx = qm.quant_ctx().unwrap();
+
+    let seq: Vec<u16> = toks[500..500 + 32].to_vec();
+    let via_rust = forward_score(&cfg, &qm.weights, &seq, Some(&ctx), None).unwrap();
+
+    let runner = ModelRunner::new(engine, &qm).unwrap();
+    let via_pjrt = &runner.score_many(&[seq.clone()]).unwrap()[0];
+
+    let scale = via_rust.max_abs().max(1.0);
+    let mut worst = 0.0f32;
+    for p in 0..seq.len() {
+        for v in 0..cfg.vocab_size {
+            worst = worst.max((via_pjrt.at(p, v) - via_rust.at(p, v)).abs());
+        }
+    }
+    // fake-quant thresholds can flip under f32 reassociation; tolerate a
+    // small relative gap.
+    assert!(worst / scale < 5e-2, "w4a4 mismatch {worst} (scale {scale})");
+}
+
+#[test]
+fn decode_path_matches_score_path() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Arc::new(Engine::new(&artifacts_dir()).unwrap());
+    let cfg = engine.config("sq-m").unwrap();
+    let weights = Weights::load(&format!("{}/ckpt/sq-m.sqt", artifacts_dir())).unwrap();
+    let toks = corpus_tokens();
+    let opts = PipelineOptions { method: Method::Fp16, ..Default::default() };
+    let qm = quantize(&cfg, &weights, &toks, &opts).unwrap();
+    let runner = ModelRunner::new(engine, &qm).unwrap();
+
+    let t = cfg.score_seq;
+    let seq: Vec<u16> = toks[20..20 + 24].to_vec();
+    let score = &runner.score_many(&[seq.clone()]).unwrap()[0];
+
+    // prefill the first 16 tokens, decode the rest one by one (batch 4,
+    // only slot 0 populated)
+    let batch = 4;
+    let mut ptoks = vec![PAD as i32; batch * t];
+    for (j, &tok) in seq[..16].iter().enumerate() {
+        ptoks[j] = tok as i32;
+    }
+    let (plogits, mut kv) = runner.prefill(batch, &ptoks).unwrap();
+    // prefill logits at position 15 must match the score graph
+    let v = cfg.vocab_size;
+    for vi in 0..v {
+        let a = plogits.data()[15 * v + vi]; // row 0, pos 15
+        let b = score.at(15, vi);
+        assert!((a - b).abs() < 2e-2 * score.max_abs().max(1.0),
+                "prefill logit mismatch at {vi}: {a} vs {b}");
+    }
+    for pos in 16..24 {
+        let mut toks_step = vec![PAD as i32; batch];
+        toks_step[0] = seq[pos] as i32;
+        let mut positions = vec![0i32; batch];
+        positions[0] = pos as i32;
+        let logits = runner.decode(&mut kv, &toks_step, &positions).unwrap();
+        for vi in 0..v {
+            let a = logits.at(0, vi);
+            let b = score.at(pos, vi);
+            assert!((a - b).abs() < 5e-2 * score.max_abs().max(1.0),
+                    "decode logit mismatch at pos {pos}, vocab {vi}: {a} vs {b}");
+        }
+    }
+}

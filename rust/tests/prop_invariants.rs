@@ -1,0 +1,332 @@
+//! Property-based invariant suite (proptest-lite harness from
+//! `util::prop`): the mathematical guarantees the paper's constructions
+//! rest on, checked over randomized inputs.
+
+use singlequant::quant::pack::PackedWeight;
+use singlequant::quant::{fake_quant_per_channel, fake_quant_per_token, qlevels};
+use singlequant::rotation::art::{art_rotation, art_rotation_pure};
+use singlequant::rotation::baselines::{duquant_rotation, quarot_rotation};
+use singlequant::rotation::givens::{lemma1_givens, map_to_e1};
+use singlequant::rotation::hadamard::{fwht_row, hadamard_matrix};
+use singlequant::rotation::kronecker::{kron_factor, kron_rotate_rows, kron_rotate_weight};
+use singlequant::rotation::singlequant::{build_site_rotation, SingleQuantConfig, SiteProfile};
+use singlequant::rotation::urt::{uniform_target, urt_rotation};
+use singlequant::tensor::{decomp, stats, Tensor};
+use singlequant::util::prop::{ensure, forall};
+use singlequant::util::rng::Rng;
+
+fn rand_profile(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = rng.normal_vec(n, 1.0);
+    // sprinkle massive outliers
+    for _ in 0..1 + rng.below(3) {
+        let i = rng.below(n);
+        v[i] = (20.0 + 200.0 * rng.f32()) * if rng.f32() < 0.5 { -1.0 } else { 1.0 };
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Lemma 1 + Givens chains
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lemma1_minimizes_infinity_norm() {
+    forall("lemma1", 200, 11, |rng| (rng.normal_f32() * 50.0, rng.normal_f32() * 50.0),
+           |&(a, b)| {
+        let r = (a * a + b * b).sqrt();
+        if r < 1e-3 {
+            return Ok(());
+        }
+        let mut v = vec![a, b];
+        lemma1_givens(&v.clone(), 0, 1).apply_row(&mut v);
+        let target = r / 2f32.sqrt();
+        ensure((v[0].abs() - target).abs() < 1e-2 * target.max(1.0),
+               format!("pair not balanced: {v:?} target {target}"))?;
+        ensure(v.iter().fold(0f32, |m, x| m.max(x.abs())) <= target * 1.001 + 1e-4,
+               "infinity norm above the Lemma-1 optimum")
+    });
+}
+
+#[test]
+fn prop_map_to_e1_norm_and_zeroing() {
+    forall("map_to_e1", 100, 13, |rng| { let n = 2 + rng.below(60); rng.normal_vec(n, 2.0) },
+           |v| {
+        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let chain = map_to_e1(v);
+        let mut w = v.clone();
+        chain.apply_row(&mut w);
+        ensure((w[0] - norm).abs() < 2e-3 * norm.max(1.0), "head not the norm")?;
+        for &x in &w[1..] {
+            ensure(x.abs() < 2e-3 * norm.max(1.0), "tail not zeroed")?;
+        }
+        ensure(chain.len() <= v.len() - 1, "more than n-1 rotations")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ART / URT / composed rotation orthogonality + semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_art_orthogonal_and_reduces_max() {
+    forall("art", 60, 17, |rng| {
+        let n = 4 + rng.below(28);
+        (rand_profile(rng, n), rng.next_u64())
+    }, |(v, seed)| {
+        let mut rng = Rng::new(*seed);
+        let res = art_rotation(v, 1 + (seed % 4) as usize, &mut rng);
+        ensure(res.rotation.orthogonality_defect() < 5e-3,
+               format!("defect {}", res.rotation.orthogonality_defect()))?;
+        let before = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+        let after = res.profile_after.iter().fold(0f32, |m, x| m.max(x.abs()));
+        ensure(after <= before * 1.01, format!("max grew {before} -> {after}"))
+    });
+}
+
+#[test]
+fn prop_art_pure_never_increases_infinity_norm_stepwise() {
+    forall("art_pure", 80, 19, |rng| { let n = 6 + rng.below(20); rand_profile(rng, n) }, |v| {
+        let r1 = art_rotation_pure(v, 1);
+        let r5 = art_rotation_pure(v, 5);
+        let m = |p: &[f32]| p.iter().fold(0f32, |m, x| m.max(x.abs()));
+        ensure(m(&r5.profile_after) <= m(&r1.profile_after) + 1e-3,
+               "multi-step worse than single")
+    });
+}
+
+#[test]
+fn prop_urt_exact_mapping_and_rank_preservation() {
+    forall("urt", 60, 23, |rng| { let n = 3 + rng.below(40); rand_profile(rng, n) }, |v| {
+        let res = urt_rotation(v);
+        ensure(res.rotation.orthogonality_defect() < 5e-3, "not orthogonal")?;
+        let got = Tensor::from_raw(vec![1, v.len()], v.clone())
+            .matmul(&res.rotation)
+            .into_data();
+        let scale = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1.0);
+        for (g, t) in got.iter().zip(&res.target) {
+            ensure((g - t).abs() < 5e-3 * scale, "V R^U != U")?;
+        }
+        // rank preservation
+        ensure(stats::argsort(v) == stats::argsort(&res.target),
+               "target does not preserve ranks")
+    });
+}
+
+#[test]
+fn prop_uniform_target_norm_preserving() {
+    forall("uniform_target", 100, 29, |rng| { let n = 2 + rng.below(64); rng.normal_vec(n, 3.0) },
+           |v| {
+        let u = uniform_target(v);
+        let nv = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nu = u.iter().map(|x| x * x).sum::<f32>().sqrt();
+        ensure((nv - nu).abs() < 1e-3 * nv.max(1.0), format!("{nv} vs {nu}"))
+    });
+}
+
+#[test]
+fn prop_composed_rotation_orthogonal_all_ablations() {
+    forall("composer", 24, 31, |rng| {
+        let n = [24usize, 48, 64, 96][rng.below(4)];
+        let sa = rand_profile(rng, n);
+        let med = rng.normal_vec(n, 0.4);
+        (n, sa, med, rng.next_u64())
+    }, |(n, sa, med, seed)| {
+        for (art, urt) in [(false, false), (true, false), (false, true), (true, true)] {
+            let cfg = SingleQuantConfig {
+                use_art: art,
+                use_urt: urt,
+                seed: *seed,
+                ..Default::default()
+            };
+            let profile = SiteProfile {
+                n: *n,
+                signed_absmax: sa.clone(),
+                median: med.clone(),
+            };
+            let rot = build_site_rotation(&profile, &cfg);
+            ensure(rot.defect() < 5e-3,
+                   format!("art={art} urt={urt} defect {}", rot.defect()))?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Kronecker algebra
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kron_factor_postconditions() {
+    forall("kron_factor", 300, 37, |rng| 1 + rng.below(4096), |&n| {
+        let (n1, n2) = kron_factor(n);
+        ensure(n1 * n2 == n, "product mismatch")?;
+        ensure(n2.is_power_of_two(), "n2 not a power of two")?;
+        let root = (n as f64).sqrt();
+        for k in 0..13 {
+            let a = 1usize << k;
+            if a <= n && n % a == 0 {
+                ensure((n2 as f64 - root).abs() <= (a as f64 - root).abs() + 1e-9,
+                       format!("n={n}: {a} closer to sqrt than {n2}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kron_rotation_preserves_product() {
+    forall("kron_product", 30, 41, |rng| {
+        let n1 = 2 + rng.below(6);
+        let n2 = 2 + rng.below(6);
+        let c = 1 + rng.below(8);
+        let t = 1 + rng.below(10);
+        let r1 = decomp::random_orthogonal(n1, rng);
+        let r2 = decomp::random_orthogonal(n2, rng);
+        let x = Tensor::randn(&[t, n1 * n2], 1.0, rng);
+        let w = Tensor::randn(&[n1 * n2, c], 0.5, rng);
+        (r1, r2, x, w)
+    }, |(r1, r2, x, w)| {
+        let y_ref = x.matmul(w);
+        let xr = kron_rotate_rows(x, r1, r2);
+        let wr = kron_rotate_weight(w, r1, r2);
+        let y = xr.matmul(&wr);
+        let scale = y_ref.max_abs().max(1.0);
+        ensure(y.sub(&y_ref).max_abs() / scale < 5e-3,
+               format!("Eq.1 violated by {}", y.sub(&y_ref).max_abs()))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Hadamard
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fwht_matches_matrix_and_is_involution() {
+    forall("fwht", 50, 43, |rng| {
+        let n = 1usize << (1 + rng.below(6));
+        (rng.normal_vec(n, 1.5), n)
+    }, |(v, n)| {
+        let h = hadamard_matrix(*n);
+        let expect = Tensor::from_raw(vec![1, *n], v.clone()).matmul(&h);
+        let mut got = v.clone();
+        fwht_row(&mut got);
+        for i in 0..*n {
+            ensure((got[i] - expect.data()[i]).abs() < 1e-3, "fwht != H")?;
+        }
+        fwht_row(&mut got);
+        for i in 0..*n {
+            ensure((got[i] - v[i]).abs() < 1e-3, "H(Hx) != x")?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Quantizers / packing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fake_quant_on_grid_and_bounded() {
+    forall("fq_token", 60, 47, |rng| {
+        let t = 1 + rng.below(12);
+        let n = 2 + rng.below(40);
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        (Tensor::randn(&[t, n], 2.0, rng), bits)
+    }, |(x, bits)| {
+        let q = fake_quant_per_token(x, *bits, 1.0);
+        let (qmin, qmax) = qlevels(*bits);
+        for i in 0..x.rows() {
+            let absmax = x.row(i).iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let scale = (absmax / qmax).max(1e-8);
+            for &v in q.row(i) {
+                let k = v / scale;
+                ensure((k - k.round()).abs() < 2e-2, "off grid")?;
+                ensure(k.round() >= qmin && k.round() <= qmax, "out of range")?;
+            }
+            for (a, b) in x.row(i).iter().zip(q.row(i)) {
+                ensure((a - b).abs() <= scale * 0.51 + 1e-6, "error above half-step")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pack_roundtrip_exact() {
+    forall("pack", 40, 53, |rng| {
+        let n = 1 + rng.below(40);
+        let c = 1 + rng.below(24);
+        let bits = [3u32, 4, 8][rng.below(3)];
+        (Tensor::randn(&[n, c], 0.8, rng), bits)
+    }, |(w, bits)| {
+        let packed = PackedWeight::pack(w, *bits).map_err(|e| e.to_string())?;
+        let deq = packed.unpack();
+        let reference = fake_quant_per_channel(w, *bits, 1.0);
+        ensure(deq.sub(&reference).max_abs() < 1e-5, "pack != fake-quant")?;
+        if w.len() >= 64 && *bits <= 4 {
+            // headers/scales amortize away on real layer sizes
+            ensure(packed.nbytes() * 2 < w.len() * 4, "no compression")?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Baseline rotations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_baseline_rotations_orthogonal() {
+    forall("baselines", 30, 59, |rng| {
+        let n = [16usize, 24, 48, 96][rng.below(4)];
+        (rand_profile(rng, n), n, rng.next_u64())
+    }, |(prof, n, seed)| {
+        ensure(quarot_rotation(*n, *seed).defect() < 5e-3, "quarot")?;
+        ensure(duquant_rotation(prof, 8, *seed).defect() < 5e-3, "duquant")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Smoothing end-to-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_singlequant_rotation_improves_outlier_quantization() {
+    forall("sq_improves", 12, 61, |rng| {
+        let n = [48usize, 64, 96][rng.below(3)];
+        let t = 48 + rng.below(64);
+        let mut x = Tensor::randn(&[t, n], 1.0, rng);
+        let c1 = rng.below(n);
+        let mut c2 = rng.below(n);
+        if c2 == c1 {
+            c2 = (c2 + 1) % n;
+        }
+        let m1 = 15.0 + 45.0 * rng.f32();
+        let m2 = 10.0 + 30.0 * rng.f32();
+        for i in 0..t {
+            x.row_mut(i)[c1] = m1 * (0.7 + 0.6 * rng.f32());
+            x.row_mut(i)[c2] = -m2 * (0.7 + 0.6 * rng.f32());
+        }
+        x
+    }, |x| {
+        // Functional metric: quantized layer-output error against the
+        // unquantized product (the norm-relative elementwise error is
+        // dominated by the outlier coordinates themselves and misleads).
+        let mut rng = Rng::new(97);
+        let w = Tensor::randn(&[x.cols(), 32], 0.5, &mut rng);
+        let y_ref = x.matmul(&w);
+        let e0 = fake_quant_per_token(x, 4, 1.0).matmul(&w).sub(&y_ref).frob_norm()
+            / y_ref.frob_norm().max(1e-9);
+        let profile = SiteProfile {
+            n: x.cols(),
+            signed_absmax: stats::col_signed_absmax(x),
+            median: stats::col_median(x),
+        };
+        let rot = build_site_rotation(&profile, &SingleQuantConfig::default());
+        let xr = kron_rotate_rows(x, &rot.r1, &rot.r2);
+        let wr = kron_rotate_weight(&w, &rot.r1, &rot.r2);
+        let e1 = fake_quant_per_token(&xr, 4, 1.0).matmul(&wr).sub(&y_ref).frob_norm()
+            / y_ref.frob_norm().max(1e-9);
+        ensure(e1 < 0.85 * e0, format!("no improvement: {e1} vs {e0}"))
+    });
+}
