@@ -8,7 +8,7 @@ use std::sync::Arc;
 use singlequant::coordinator::{Request, ServeConfig, ServeEngine};
 use singlequant::model::Weights;
 use singlequant::pipeline::{quantize, Method, PipelineOptions};
-use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::runtime::{Engine, ModelRunner, RunnerBackend};
 use singlequant::util::bench::{bench_for, header};
 use singlequant::util::rng::Rng;
 use singlequant::util::sqt::SqtFile;
@@ -68,17 +68,15 @@ fn main() {
 
         // end-to-end coordinator throughput at batch 4
         let mut serve = ServeEngine::new(
-            runner.clone(),
-            ServeConfig { batch: 4, max_new_cap: 16, seed: 3 },
+            Box::new(RunnerBackend::new(runner.clone(), 4)),
+            ServeConfig { max_new_cap: 16, seed: 3, ..Default::default() },
         );
         for id in 0..12u64 {
             let start = (id as usize * 311) % (corpus.len() - 64);
-            serve.submit(Request {
-                id,
-                prompt_tokens: corpus[start..start + 24 + (id as usize % 32)].to_vec(),
-                max_new_tokens: 12,
-                temperature: None,
-            });
+            serve.submit(
+                Request::new(id, corpus[start..start + 24 + (id as usize % 32)].to_vec())
+                    .with_max_new(12),
+            );
         }
         let t0 = std::time::Instant::now();
         let responses = serve.run_to_completion().unwrap();

@@ -1,0 +1,221 @@
+//! Concurrent load generator for the HTTP serving front-end: replays a
+//! bursty synthetic trace of mixed streaming / non-streaming completions
+//! against a live server and reports client-side latency percentiles plus
+//! the server's own /metrics.
+//!
+//!     # self-contained demo (in-process server on the synthetic backend):
+//!     cargo run --release --example http_load -- --self-host
+//!
+//!     # against a running `singlequant serve-http`:
+//!     cargo run --release --example http_load -- --addr 127.0.0.1:8071 \
+//!         --requests 64 --burst 8 --burst-pause-ms 40
+//!
+//! Every third request streams (SSE); the rest take the single-JSON path.
+//! 429 responses are counted as shed load, not errors — that is the
+//! admission control doing its job under burst.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+use singlequant::coordinator::metrics::Histogram;
+use singlequant::coordinator::{ServeConfig, ServeEngine, SyntheticBackend};
+use singlequant::server::{serve, ServerConfig, ServerHandle};
+use singlequant::util::cli::Args;
+use singlequant::util::json::Json;
+use singlequant::util::rng::Rng;
+
+struct Outcome {
+    status: u16,
+    latency: Duration,
+    /// Time to the first SSE token frame (streaming requests only).
+    first_token: Option<Duration>,
+    tokens: usize,
+}
+
+fn one_request(addr: &str, id: usize, prompt: &str, max_tokens: usize,
+               stream: bool) -> Result<Outcome> {
+    let started = Instant::now();
+    let mut sock = TcpStream::connect(addr).context("connect")?;
+    sock.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let body = Json::obj(vec![
+        ("prompt", Json::str(prompt)),
+        ("max_tokens", Json::usize(max_tokens)),
+        ("stream", Json::bool(stream)),
+        ("temperature", if id % 4 == 0 { Json::num(0.8) } else { Json::Null }),
+    ])
+    .to_string();
+    write!(
+        sock,
+        "POST /v1/completions HTTP/1.1\r\nHost: l\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+
+    let mut raw = Vec::new();
+    let mut buf = [0u8; 4096];
+    let mut first_token = None;
+    loop {
+        match sock.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                raw.extend_from_slice(&buf[..n]);
+                if stream && first_token.is_none()
+                    && raw.windows(6).any(|w| w == b"data: ".as_slice())
+                {
+                    first_token = Some(started.elapsed());
+                }
+            }
+            Err(e) => return Err(anyhow!("read: {e}")),
+        }
+    }
+    let text = String::from_utf8_lossy(&raw);
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("unparseable response"))?;
+    let payload = text.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    let tokens = if stream {
+        payload.matches("data: ").count().saturating_sub(2) // finish chunk + [DONE]
+    } else {
+        Json::parse(payload)
+            .ok()
+            .and_then(|j| j.get("usage").ok().and_then(|u| u.usize_at("completion_tokens").ok()))
+            .unwrap_or(0)
+    };
+    Ok(Outcome { status, latency: started.elapsed(), first_token, tokens })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["self-host"])?;
+
+    let self_host = args.flag("self-host") || args.get("addr").is_none();
+    let handle: Option<ServerHandle> = if self_host {
+        let engine = ServeEngine::new(
+            Box::new(
+                SyntheticBackend::new(4)
+                    .with_seq(64, 128)
+                    .with_delay(Duration::from_millis(2)),
+            ),
+            ServeConfig { max_new_cap: 32, seed: 7, queue_cap: 16 },
+        );
+        let h = serve(engine, ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            default_max_tokens: 16,
+            default_deadline_ms: Some(10_000),
+            model: "synthetic".to_string(),
+        })?;
+        println!("self-hosted synthetic server on {}", h.addr());
+        Some(h)
+    } else {
+        None
+    };
+    let addr = match &handle {
+        Some(h) => h.addr().to_string(),
+        None => args.get("addr").unwrap().to_string(),
+    };
+
+    let n_requests = args.usize_or("requests", 48)?;
+    let burst = args.usize_or("burst", 8)?.max(1);
+    let pause = Duration::from_millis(args.usize_or("burst-pause-ms", 30)? as u64);
+    let max_tokens = args.usize_or("max-new", 12)?;
+
+    println!(
+        "replaying {n_requests} requests against {addr} in bursts of {burst} \
+         ({}ms apart), every 3rd streamed\n",
+        pause.as_millis()
+    );
+
+    let mut rng = Rng::new(0x10ad);
+    let mut latency = Histogram::default();
+    let mut ttft = Histogram::default();
+    let (mut ok, mut shed, mut failed, mut tokens) = (0usize, 0usize, 0usize, 0usize);
+
+    let t0 = Instant::now();
+    let mut id = 0usize;
+    while id < n_requests {
+        let wave = burst.min(n_requests - id);
+        let workers: Vec<_> = (0..wave)
+            .map(|k| {
+                let rid = id + k;
+                let addr = addr.clone();
+                let plen = 8 + rng.below(40);
+                let prompt: String =
+                    (0..plen).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+                std::thread::spawn(move || {
+                    one_request(&addr, rid, &prompt, max_tokens, rid % 3 == 0)
+                })
+            })
+            .collect();
+        for w in workers {
+            match w.join().expect("worker") {
+                Ok(o) => {
+                    match o.status {
+                        200 => {
+                            ok += 1;
+                            latency.record(o.latency.as_secs_f64());
+                            if let Some(ft) = o.first_token {
+                                ttft.record(ft.as_secs_f64());
+                            }
+                            tokens += o.tokens;
+                        }
+                        429 => shed += 1,
+                        _ => failed += 1,
+                    };
+                }
+                Err(e) => {
+                    eprintln!("request error: {e:#}");
+                    failed += 1;
+                }
+            }
+        }
+        id += wave;
+        std::thread::sleep(pause);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("── client side ────────────────────────────────────────");
+    println!("  200 OK      : {ok}");
+    println!("  429 shed    : {shed}");
+    println!("  failed      : {failed}");
+    println!("  tokens      : {tokens} ({:.1} tok/s end-to-end)", tokens as f64 / wall);
+    println!(
+        "  latency     : p50 {:.1}ms  p95 {:.1}ms  mean {:.1}ms",
+        latency.percentile(50.0) * 1e3,
+        latency.percentile(95.0) * 1e3,
+        latency.mean() * 1e3
+    );
+    if ttft.count() > 0 {
+        println!(
+            "  stream ttfb : p50 {:.1}ms  p95 {:.1}ms",
+            ttft.percentile(50.0) * 1e3,
+            ttft.percentile(95.0) * 1e3
+        );
+    }
+
+    // pull the server's own view
+    if let Ok(mut sock) = TcpStream::connect(&addr) {
+        let _ = write!(sock, "GET /metrics HTTP/1.1\r\nHost: l\r\nConnection: close\r\n\r\n");
+        let mut raw = String::new();
+        let _ = sock.set_read_timeout(Some(Duration::from_secs(5)));
+        if sock.read_to_string(&mut raw).is_ok() {
+            println!("── server /metrics (excerpt) ──────────────────────────");
+            for line in raw.lines().filter(|l| {
+                !l.starts_with('#')
+                    && (l.contains("requests_") || l.contains("ttft")
+                        || l.contains("per_token") || l.contains("throughput"))
+            }) {
+                println!("  {line}");
+            }
+        }
+    }
+
+    if let Some(h) = handle {
+        h.shutdown();
+        println!("\nself-hosted server drained cleanly");
+    }
+    Ok(())
+}

@@ -15,7 +15,7 @@ use anyhow::Result;
 use singlequant::coordinator::{Request, ServeConfig, ServeEngine};
 use singlequant::model::Weights;
 use singlequant::pipeline::{quantize, Method, PipelineOptions};
-use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::runtime::{Engine, ModelRunner, RunnerBackend};
 use singlequant::util::rng::Rng;
 use singlequant::util::sqt::SqtFile;
 
@@ -29,12 +29,12 @@ fn trace(corpus: &[u16], n: usize) -> Vec<Request> {
         .map(|id| {
             let start = rng.below(corpus.len() - 96);
             let len = 12 + rng.below(60);
-            Request {
-                id: id as u64,
-                prompt_tokens: corpus[start..start + len].to_vec(),
-                max_new_tokens: 8 + rng.below(24),
-                temperature: if id % 3 == 0 { Some(0.8) } else { None },
+            let mut req = Request::new(id as u64, corpus[start..start + len].to_vec())
+                .with_max_new(8 + rng.below(24));
+            if id % 3 == 0 {
+                req = req.with_temperature(0.8);
             }
+            req
         })
         .collect()
 }
@@ -50,8 +50,8 @@ fn serve_with(engine: Arc<Engine>, method: Method, corpus: &[u16],
     })?;
     let runner = Arc::new(ModelRunner::new(engine, &qm)?);
     let mut serve = ServeEngine::new(
-        runner,
-        ServeConfig { batch: BATCH, max_new_cap: 32, seed: 7 },
+        Box::new(RunnerBackend::new(runner, BATCH)),
+        ServeConfig { max_new_cap: 32, seed: 7, ..Default::default() },
     );
     for req in trace(corpus, N_REQUESTS) {
         serve.submit(req);

@@ -1,0 +1,180 @@
+//! The decode backend the continuous batcher schedules over.
+//!
+//! [`ServeBackend`] abstracts the fixed-shape prefill/decode graphs so the
+//! scheduler is independent of PJRT: production uses
+//! `crate::runtime::RunnerBackend` (AOT HLO graphs + device-resident KV),
+//! while tests, the HTTP integration suite, and the load generator use the
+//! deterministic [`SyntheticBackend`] — no artifacts, no XLA.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::tokenizer::{PAD, VOCAB_SIZE};
+use crate::tensor::Tensor;
+
+/// Static shape limits of a backend's lowered serving graphs.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendLimits {
+    /// Slot count (the lowered serve batch size).
+    pub batch: usize,
+    /// Prefill width: max admissible prompt length.
+    pub score_seq: usize,
+    pub vocab_size: usize,
+    /// KV-cache horizon: prompt + generation must stay below this.
+    pub max_seq: usize,
+}
+
+/// A model the batcher can drive: one padded prefill per admission wave,
+/// one decode step per tick. Implementations own their KV state; the
+/// scheduler only tracks per-slot positions.
+pub trait ServeBackend: Send {
+    fn limits(&self) -> BackendLimits;
+
+    /// Prefill a right-padded `[batch * score_seq]` token matrix (PAD in
+    /// unused cells) and merge the KV rows of `admitted` slots into the
+    /// live cache. Returns the full prefill logits `[batch, score_seq,
+    /// vocab]`; the scheduler reads each admitted prompt's logits at its
+    /// true last index.
+    fn prefill(&mut self, tokens: &[i32], admitted: &[usize]) -> Result<Tensor>;
+
+    /// One decode wave at per-slot positions (`tokens`/`positions` are
+    /// `[batch]`, PAD/0 in inactive slots). Returns logits `[batch,
+    /// vocab]` and advances the KV cache in place.
+    fn decode(&mut self, tokens: &[i32], positions: &[i32]) -> Result<Tensor>;
+}
+
+/// Deterministic model-free backend: the "token calculator".
+///
+/// Greedy sampling over it yields, for a prompt `p`, first token
+/// `(sum(p) + len(p) - 1) mod 256` and then each next token
+/// `(prev + 1) mod 256` — prompt-dependent, slot-isolated, and trivially
+/// checkable by tests. An optional per-call delay simulates model latency
+/// so overload/backpressure behavior can be exercised deterministically.
+pub struct SyntheticBackend {
+    limits: BackendLimits,
+    step_delay: Duration,
+}
+
+impl SyntheticBackend {
+    pub fn new(batch: usize) -> SyntheticBackend {
+        SyntheticBackend {
+            limits: BackendLimits {
+                batch,
+                score_seq: 96,
+                vocab_size: VOCAB_SIZE,
+                max_seq: 160,
+            },
+            step_delay: Duration::ZERO,
+        }
+    }
+
+    /// Simulated per-call latency (applied to prefill and decode alike).
+    pub fn with_delay(mut self, d: Duration) -> SyntheticBackend {
+        self.step_delay = d;
+        self
+    }
+
+    pub fn with_seq(mut self, score_seq: usize, max_seq: usize) -> SyntheticBackend {
+        self.limits.score_seq = score_seq;
+        self.limits.max_seq = max_seq;
+        self
+    }
+
+    /// The token this backend emits after seeing `prev`.
+    pub fn next_token(prev: u16) -> u16 {
+        (prev + 1) % 256
+    }
+
+    /// The first token this backend emits for a prompt.
+    pub fn first_token(prompt: &[u16]) -> u16 {
+        let sum: u32 = prompt.iter().map(|&t| t as u32).sum();
+        ((sum + prompt.len() as u32 - 1) % 256) as u16
+    }
+}
+
+impl ServeBackend for SyntheticBackend {
+    fn limits(&self) -> BackendLimits {
+        self.limits
+    }
+
+    fn prefill(&mut self, tokens: &[i32], _admitted: &[usize]) -> Result<Tensor> {
+        let BackendLimits { batch, score_seq: t, vocab_size: v, .. } = self.limits;
+        anyhow::ensure!(tokens.len() == batch * t, "prefill shape mismatch");
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let mut logits = Tensor::zeros(&[batch, t, v]);
+        for slot in 0..batch {
+            let mut sum: u32 = 0;
+            for p in 0..t {
+                let tok = tokens[slot * t + p];
+                if tok == PAD as i32 {
+                    continue;
+                }
+                sum += tok as u32;
+                let arg = ((sum + p as u32) % 256) as usize;
+                logits.data_mut()[(slot * t + p) * v + arg] = 1.0;
+            }
+        }
+        Ok(logits)
+    }
+
+    fn decode(&mut self, tokens: &[i32], positions: &[i32]) -> Result<Tensor> {
+        let BackendLimits { batch, vocab_size: v, .. } = self.limits;
+        anyhow::ensure!(tokens.len() == batch && positions.len() == batch,
+                        "decode shape mismatch");
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let mut logits = Tensor::zeros(&[batch, v]);
+        for slot in 0..batch {
+            let tok = tokens[slot];
+            if tok == PAD as i32 {
+                continue;
+            }
+            let arg = Self::next_token(tok as u16) as usize;
+            logits.data_mut()[slot * v + arg] = 1.0;
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_argmax_matches_first_token() {
+        let mut be = SyntheticBackend::new(2).with_seq(8, 16);
+        let prompt: Vec<u16> = vec![10, 20, 30];
+        let mut tokens = vec![PAD as i32; 2 * 8];
+        for (j, &t) in prompt.iter().enumerate() {
+            tokens[j] = t as i32;
+        }
+        let logits = be.prefill(&tokens, &[0]).unwrap();
+        let v = be.limits().vocab_size;
+        let row = &logits.data()[(prompt.len() - 1) * v..prompt.len() * v];
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(arg as u16, SyntheticBackend::first_token(&prompt));
+    }
+
+    #[test]
+    fn decode_increments() {
+        let mut be = SyntheticBackend::new(1);
+        let logits = be.decode(&[41], &[5]).unwrap();
+        let v = be.limits().vocab_size;
+        let arg = logits.data()[..v]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(arg, 42);
+    }
+}

@@ -6,63 +6,178 @@
 //! prompt lengths are handled by the per-slot `pos` vector of the decode
 //! graph and by reading each prompt's logits at its true last index from
 //! the full prefill logits.
+//!
+//! The scheduler emits a per-token [`TokenEvent`] stream (see
+//! `coordinator::events`): each `step()` returns every state transition of
+//! the tick, and requests submitted with a sink get the same events pushed
+//! over their channel — the contract the HTTP front-end (`crate::server`)
+//! streams SSE from. Admission is bounded ([`ServeEngine::try_submit`]),
+//! per-request deadlines cut work off with partial output, and a dropped
+//! sink cancels its request and frees the slot in the same tick.
+//!
+//! The model itself sits behind [`ServeBackend`], so this file knows
+//! nothing about PJRT: production uses `runtime::RunnerBackend`, tests use
+//! the deterministic `SyntheticBackend`.
 
 use std::collections::VecDeque;
-use std::sync::Arc;
+use std::fmt;
+use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
+use super::backend::{BackendLimits, ServeBackend};
+use super::events::{FinishReason, TokenEvent};
 use super::metrics::ServeMetrics;
-use super::request::{InFlight, Request, Response};
-use super::tokenizer::{decode as tok_decode, EOS, PAD};
-use crate::runtime::{KvCache, ModelRunner};
+use super::request::{InFlight, Request, Response, MIN_TEMPERATURE};
+use super::tokenizer::{decode as tok_decode, decode_stream, EOS, PAD};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// Slot count; must be one of the lowered serve batch sizes.
-    pub batch: usize,
     /// Hard cap on generation length (cache capacity guard applies too).
     pub max_new_cap: usize,
     pub seed: u64,
+    /// Queued-request bound enforced by [`ServeEngine::try_submit`];
+    /// the legacy `submit` path (batch drivers pre-queueing a whole
+    /// trace) is exempt.
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { batch: 4, max_new_cap: 48, seed: 7 }
+        ServeConfig { max_new_cap: 48, seed: 7, queue_cap: 256 }
     }
 }
 
+/// Why `try_submit` refused a request (the HTTP layer maps these to 429
+/// and 400 respectively).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    QueueFull { cap: usize },
+    InvalidPrompt { len: usize, max: usize },
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::QueueFull { cap } => {
+                write!(f, "admission queue full (cap {cap})")
+            }
+            AdmissionError::InvalidPrompt { len, max } => {
+                write!(f, "prompt length {len} out of range (1..={max})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// A submitted request waiting for a slot.
+struct Queued {
+    req: Request,
+    sink: Option<Sender<TokenEvent>>,
+    enqueued: Instant,
+}
+
 pub struct ServeEngine {
-    runner: Arc<ModelRunner>,
+    backend: Box<dyn ServeBackend>,
+    limits: BackendLimits,
     cfg: ServeConfig,
-    queue: VecDeque<Request>,
+    queue: VecDeque<Queued>,
     slots: Vec<Option<InFlight>>,
-    kv: KvCache,
     pub metrics: ServeMetrics,
     rng: Rng,
     started: Option<Instant>,
 }
 
+/// Push an event to a slot's subscriber (marking it cancelled on a dropped
+/// receiver) and to the tick's event list.
+fn emit(slot: &mut InFlight, events: &mut Vec<TokenEvent>, ev: TokenEvent) {
+    if let Some(sink) = &slot.sink {
+        if sink.send(ev.clone()).is_err() {
+            slot.cancelled = true;
+            slot.sink = None;
+        }
+    }
+    events.push(ev);
+}
+
+/// Same for requests that never reached a slot.
+fn emit_unslotted(
+    sink: &Option<Sender<TokenEvent>>,
+    events: &mut Vec<TokenEvent>,
+    ev: TokenEvent,
+) {
+    if let Some(s) = sink {
+        let _ = s.send(ev.clone());
+    }
+    events.push(ev);
+}
+
 impl ServeEngine {
-    pub fn new(runner: Arc<ModelRunner>, cfg: ServeConfig) -> ServeEngine {
-        let kv = runner.empty_kv(cfg.batch);
+    pub fn new(backend: Box<dyn ServeBackend>, cfg: ServeConfig) -> ServeEngine {
+        let limits = backend.limits();
         ServeEngine {
-            slots: (0..cfg.batch).map(|_| None).collect(),
+            slots: (0..limits.batch).map(|_| None).collect(),
             queue: VecDeque::new(),
-            kv,
             metrics: ServeMetrics::default(),
             rng: Rng::new(cfg.seed),
-            runner,
+            backend,
+            limits,
             cfg,
             started: None,
         }
     }
 
-    pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
+    /// Static shape limits of the underlying serving graphs.
+    pub fn limits(&self) -> BackendLimits {
+        self.limits
+    }
+
+    /// The bounded-admission queue capacity (`try_submit`'s limit).
+    pub fn queue_cap(&self) -> usize {
+        self.cfg.queue_cap
+    }
+
+    /// Unbounded enqueue for batch drivers. Prefer [`try_submit`] on any
+    /// path fed by external traffic.
+    ///
+    /// [`try_submit`]: ServeEngine::try_submit
+    pub fn submit(&mut self, mut req: Request) {
+        req.normalize();
+        self.queue.push_back(Queued { req, sink: None, enqueued: Instant::now() });
+    }
+
+    /// Unbounded enqueue with a per-token event subscriber.
+    pub fn submit_streaming(&mut self, mut req: Request, sink: Sender<TokenEvent>) {
+        req.normalize();
+        self.queue
+            .push_back(Queued { req, sink: Some(sink), enqueued: Instant::now() });
+    }
+
+    /// Bounded admission: validates the prompt against graph limits and
+    /// enforces `queue_cap`. Also normalizes the sampling temperature —
+    /// the single clamp point; the sampler never re-clamps.
+    pub fn try_submit(
+        &mut self,
+        mut req: Request,
+        sink: Option<Sender<TokenEvent>>,
+    ) -> std::result::Result<(), AdmissionError> {
+        let plen = req.prompt_tokens.len();
+        let max = self.limits.score_seq;
+        if plen == 0 || plen > max {
+            self.metrics.failed += 1;
+            return Err(AdmissionError::InvalidPrompt { len: plen, max });
+        }
+        if self.queue.len() >= self.cfg.queue_cap {
+            self.metrics.rejected += 1;
+            return Err(AdmissionError::QueueFull { cap: self.cfg.queue_cap });
+        }
+        req.normalize();
+        self.queue.push_back(Queued { req, sink, enqueued: Instant::now() });
+        Ok(())
     }
 
     pub fn pending(&self) -> usize {
@@ -73,23 +188,47 @@ impl ServeEngine {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.active() > 0
+    }
+
+    /// Sample a token id from one logits row. Greedy is NaN/−inf-proof:
+    /// non-finite entries are skipped, ties resolve to the lowest index,
+    /// and a row with no finite logit deterministically returns EOS
+    /// (ending the request) instead of silently emitting token 0.
+    /// Temperatures arrive pre-clamped from admission.
     fn sample(rng: &mut Rng, logits: &[f32], temperature: Option<f32>) -> u16 {
         match temperature {
             None => {
-                let mut best = 0usize;
-                for (i, &v) in logits.iter().enumerate() {
-                    if v > logits[best] {
-                        best = i;
+                let mut best: Option<(usize, f32)> = None;
+                for (i, &x) in logits.iter().enumerate() {
+                    if x.is_finite() && best.map_or(true, |(_, bv)| x > bv) {
+                        best = Some((i, x));
                     }
                 }
-                best as u16
+                best.map(|(i, _)| i as u16).unwrap_or(EOS)
             }
             Some(t) => {
-                let t = t.max(1e-3);
-                let maxv = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let probs: Vec<f32> =
-                    logits.iter().map(|&v| ((v - maxv) / t).exp()).collect();
+                debug_assert!(
+                    t >= MIN_TEMPERATURE,
+                    "temperature must be clamped at admission"
+                );
+                let maxv = logits
+                    .iter()
+                    .copied()
+                    .filter(|x| x.is_finite())
+                    .fold(f32::NEG_INFINITY, f32::max);
+                if !maxv.is_finite() {
+                    return EOS;
+                }
+                let probs: Vec<f32> = logits
+                    .iter()
+                    .map(|&x| if x.is_finite() { ((x - maxv) / t).exp() } else { 0.0 })
+                    .collect();
                 let total: f32 = probs.iter().sum();
+                if !total.is_finite() || total <= 0.0 {
+                    return EOS;
+                }
                 let mut u = rng.f32() * total;
                 for (i, &p) in probs.iter().enumerate() {
                     u -= p;
@@ -97,77 +236,160 @@ impl ServeEngine {
                         return i as u16;
                     }
                 }
-                (probs.len() - 1) as u16
+                // float subtraction is not the exact inverse of the sum:
+                // fall back to the last index that actually has mass, never
+                // a masked (zero-probability) one
+                probs
+                    .iter()
+                    .rposition(|&p| p > 0.0)
+                    .map(|i| i as u16)
+                    .unwrap_or(EOS)
             }
         }
     }
 
-    /// One scheduler tick: admit + prefill newcomers, one decode wave.
-    /// Returns the responses completed during this tick.
-    pub fn step(&mut self) -> Result<Vec<Response>> {
+    /// One scheduler tick: expire stale queue entries, admit + prefill
+    /// newcomers, sweep deadlines/cancellations, run one decode wave, and
+    /// retire finished slots (freeing their capacity within this tick).
+    /// Returns every event of the tick in emission order.
+    pub fn step(&mut self) -> Result<Vec<TokenEvent>> {
         if self.started.is_none() {
             self.started = Some(Instant::now());
         }
-        let mut done = Vec::new();
+        let mut events = Vec::new();
 
-        // ---- admission + prefill -------------------------------------------
-        let free: Vec<usize> = (0..self.cfg.batch)
+        // ---- expire queued requests whose deadline already passed ---------
+        let now = Instant::now();
+        if self
+            .queue
+            .iter()
+            .any(|q| q.req.deadline.map_or(false, |d| d <= now))
+        {
+            let mut kept = VecDeque::with_capacity(self.queue.len());
+            while let Some(q) = self.queue.pop_front() {
+                if q.req.deadline.map_or(false, |d| d <= now) {
+                    // counts as completed too: a Done/Response is delivered,
+                    // so completed must reconcile with responses sent
+                    self.metrics.completed += 1;
+                    self.metrics.timeouts += 1;
+                    let response = Response {
+                        id: q.req.id,
+                        tokens: Vec::new(),
+                        text: String::new(),
+                        ttft_s: 0.0,
+                        latency_s: now.duration_since(q.enqueued).as_secs_f64(),
+                        prompt_len: q.req.prompt_tokens.len(),
+                        finish: FinishReason::Deadline,
+                    };
+                    let id = q.req.id;
+                    emit_unslotted(&q.sink, &mut events, TokenEvent::Done {
+                        id,
+                        reason: FinishReason::Deadline,
+                        response,
+                    });
+                } else {
+                    kept.push_back(q);
+                }
+            }
+            self.queue = kept;
+        }
+
+        // ---- admission + prefill ------------------------------------------
+        let free: Vec<usize> = (0..self.limits.batch)
             .filter(|&i| self.slots[i].is_none())
             .collect();
         if !free.is_empty() && !self.queue.is_empty() {
-            let t = self.runner.cfg.score_seq;
-            let mut tokens = vec![PAD as i32; self.cfg.batch * t];
+            let t = self.limits.score_seq;
+            let mut tokens = vec![PAD as i32; self.limits.batch * t];
             let mut admitted: Vec<usize> = Vec::new();
-            for &slot in &free {
-                let Some(req) = self.queue.pop_front() else { break };
-                if req.prompt_tokens.is_empty() || req.prompt_tokens.len() > t {
-                    bail!("request {}: prompt length {} out of range (1..={t})",
-                          req.id, req.prompt_tokens.len());
-                }
-                for (j, &tok) in req.prompt_tokens.iter().enumerate() {
+            'slots: for &slot in &free {
+                // pop until a valid request is found; invalid ones fail
+                // loudly instead of poisoning the whole tick
+                let q = loop {
+                    let Some(q) = self.queue.pop_front() else { break 'slots };
+                    let plen = q.req.prompt_tokens.len();
+                    if plen == 0 || plen > t {
+                        self.metrics.failed += 1;
+                        let id = q.req.id;
+                        // same wording as the HTTP 400 path, by construction
+                        let err = AdmissionError::InvalidPrompt { len: plen, max: t };
+                        emit_unslotted(&q.sink, &mut events, TokenEvent::Failed {
+                            id,
+                            error: err.to_string(),
+                        });
+                        continue;
+                    }
+                    break q;
+                };
+                for (j, &tok) in q.req.prompt_tokens.iter().enumerate() {
                     tokens[slot * t + j] = tok as i32;
                 }
+                let now = Instant::now();
+                self.metrics
+                    .queue_wait
+                    .record(now.duration_since(q.enqueued).as_secs_f64());
                 self.slots[slot] = Some(InFlight {
-                    req,
-                    admitted: Instant::now(),
+                    enqueued: q.enqueued,
+                    admitted: now,
                     first_token: None,
                     generated: Vec::new(),
                     pos: 0,
                     last_token: PAD,
+                    sink: q.sink,
+                    cancelled: false,
+                    utf8_pending: Vec::new(),
+                    req: q.req,
                 });
+                let inf = self.slots[slot].as_mut().unwrap();
+                let id = inf.req.id;
+                emit(inf, &mut events, TokenEvent::Started { id });
                 admitted.push(slot);
             }
             if !admitted.is_empty() {
                 let t0 = Instant::now();
-                let (logits, mut fresh_kv) = self.runner.prefill(self.cfg.batch, &tokens)?;
+                let logits = self.backend.prefill(&tokens, &admitted)?;
                 self.metrics.prefill_call.record(t0.elapsed().as_secs_f64());
                 self.metrics.prefill_calls += 1;
-                let v = self.runner.cfg.vocab_size;
+                let v = self.limits.vocab_size;
                 for &slot in &admitted {
-                    self.kv.copy_slot_from(&self.runner.cfg, &mut fresh_kv, slot)?;
                     let inf = self.slots[slot].as_mut().unwrap();
                     let plen = inf.req.prompt_tokens.len();
-                    self.metrics.prefill_tokens += plen;
+                    let temperature = inf.req.temperature;
+                    let id = inf.req.id;
                     let row = row3(&logits, slot, plen - 1, v);
-                    let tok = Self::sample(&mut self.rng, row, inf.req.temperature);
+                    let tok = Self::sample(&mut self.rng, row, temperature);
+                    let inf = self.slots[slot].as_mut().unwrap();
                     inf.first_token = Some(Instant::now());
                     inf.generated.push(tok);
                     inf.last_token = tok;
                     inf.pos = plen;
+                    self.metrics.prefill_tokens += plen;
                     self.metrics.generated_tokens += 1;
+                    if tok != EOS {
+                        let text = decode_stream(&mut inf.utf8_pending, tok);
+                        let ev = TokenEvent::Token { id, index: 0, token: tok, text };
+                        emit(inf, &mut events, ev);
+                    }
                 }
                 // retire single-token completions immediately
+                let now = Instant::now();
                 for &slot in &admitted {
-                    if self.slot_finished(slot) {
-                        done.push(self.retire(slot));
-                    }
+                    self.maybe_retire(slot, now, &mut events);
                 }
             }
         }
 
-        // ---- decode wave -----------------------------------------------------
+        // ---- deadline / cancel sweep (before burning a decode wave) -------
+        let now = Instant::now();
+        for slot in 0..self.limits.batch {
+            if self.slots[slot].is_some() {
+                self.maybe_retire(slot, now, &mut events);
+            }
+        }
+
+        // ---- decode wave ---------------------------------------------------
         if self.active() > 0 {
-            let b = self.cfg.batch;
+            let b = self.limits.batch;
             let mut toks = vec![PAD as i32; b];
             let mut pos = vec![0i32; b];
             for (i, s) in self.slots.iter().enumerate() {
@@ -177,40 +399,76 @@ impl ServeEngine {
                 }
             }
             let t0 = Instant::now();
-            let logits = self.runner.decode(&mut self.kv, &toks, &pos)?;
-            self.metrics.decode_step.record(t0.elapsed().as_secs_f64());
+            let logits = self.backend.decode(&toks, &pos)?;
+            let wave = t0.elapsed().as_secs_f64();
+            self.metrics.decode_step.record(wave);
             self.metrics.decode_steps += 1;
-            let v = self.runner.cfg.vocab_size;
+            let v = self.limits.vocab_size;
             for i in 0..b {
                 if let Some(inf) = self.slots[i].as_mut() {
                     let row = &logits.data()[i * v..(i + 1) * v];
                     let tok = Self::sample(&mut self.rng, row, inf.req.temperature);
+                    let index = inf.generated.len();
                     inf.generated.push(tok);
                     inf.last_token = tok;
                     inf.pos += 1;
                     self.metrics.generated_tokens += 1;
+                    self.metrics.per_token.record(wave);
+                    if tok != EOS {
+                        let id = inf.req.id;
+                        let text = decode_stream(&mut inf.utf8_pending, tok);
+                        let ev = TokenEvent::Token { id, index, token: tok, text };
+                        emit(inf, &mut events, ev);
+                    }
                 }
             }
+            // retirement frees capacity within the same tick
+            let now = Instant::now();
             for i in 0..b {
-                if self.slots[i].is_some() && self.slot_finished(i) {
-                    done.push(self.retire(i));
+                if self.slots[i].is_some() {
+                    self.maybe_retire(i, now, &mut events);
                 }
             }
         }
 
         self.metrics.wall_s = self.started.unwrap().elapsed().as_secs_f64();
-        Ok(done)
+        Ok(events)
     }
 
-    fn slot_finished(&self, slot: usize) -> bool {
-        let inf = self.slots[slot].as_ref().unwrap();
+    fn finish_reason(&self, slot: usize, now: Instant) -> Option<FinishReason> {
+        let inf = self.slots[slot].as_ref()?;
+        if inf.cancelled {
+            return Some(FinishReason::Cancelled);
+        }
+        if inf.last_token == EOS {
+            return Some(FinishReason::Eos);
+        }
         let cap = inf.req.max_new_tokens.min(self.cfg.max_new_cap);
-        inf.last_token == EOS
-            || inf.generated.len() >= cap
-            || inf.pos + 1 >= self.runner.cfg.max_seq
+        if inf.generated.len() >= cap || inf.pos + 1 >= self.limits.max_seq {
+            return Some(FinishReason::Length);
+        }
+        if inf.req.deadline.map_or(false, |d| d <= now) {
+            return Some(FinishReason::Deadline);
+        }
+        None
     }
 
-    fn retire(&mut self, slot: usize) -> Response {
+    fn maybe_retire(
+        &mut self,
+        slot: usize,
+        now: Instant,
+        events: &mut Vec<TokenEvent>,
+    ) -> bool {
+        match self.finish_reason(slot, now) {
+            Some(reason) => {
+                self.retire(slot, reason, events);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn retire(&mut self, slot: usize, reason: FinishReason, events: &mut Vec<TokenEvent>) {
         let inf = self.slots[slot].take().unwrap();
         let now = Instant::now();
         let ttft = inf
@@ -221,25 +479,67 @@ impl ServeEngine {
         self.metrics.ttft.record(ttft);
         self.metrics.latency.record(latency);
         self.metrics.completed += 1;
+        match reason {
+            FinishReason::Deadline => self.metrics.timeouts += 1,
+            FinishReason::Cancelled => self.metrics.cancelled += 1,
+            _ => {}
+        }
         let mut tokens = inf.generated;
         if tokens.last() == Some(&EOS) {
             tokens.pop();
         }
-        Response {
+        let response = Response {
             id: inf.req.id,
             text: tok_decode(&tokens),
             tokens,
             ttft_s: ttft,
             latency_s: latency,
             prompt_len: inf.req.prompt_tokens.len(),
+            finish: reason,
+        };
+        let ev = TokenEvent::Done { id: inf.req.id, reason, response };
+        if !inf.cancelled {
+            if let Some(sink) = &inf.sink {
+                let _ = sink.send(ev.clone());
+            }
         }
+        events.push(ev);
     }
 
-    /// Drive until queue and slots drain.
+    /// Fail every queued and in-flight request (backend fault recovery /
+    /// hard shutdown). Slots and queue end up empty.
+    pub fn abort_all(&mut self, error: &str) -> Vec<TokenEvent> {
+        let mut events = Vec::new();
+        for slot in 0..self.limits.batch {
+            if let Some(inf) = self.slots[slot].take() {
+                self.metrics.failed += 1;
+                let id = inf.req.id;
+                emit_unslotted(&inf.sink, &mut events, TokenEvent::Failed {
+                    id,
+                    error: error.to_string(),
+                });
+            }
+        }
+        while let Some(q) = self.queue.pop_front() {
+            self.metrics.failed += 1;
+            let id = q.req.id;
+            emit_unslotted(&q.sink, &mut events, TokenEvent::Failed {
+                id,
+                error: error.to_string(),
+            });
+        }
+        events
+    }
+
+    /// Drive until queue and slots drain; collect finished responses.
     pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
-        while self.pending() > 0 || self.active() > 0 {
-            out.extend(self.step()?);
+        while self.has_work() {
+            for ev in self.step()? {
+                if let TokenEvent::Done { response, .. } = ev {
+                    out.push(response);
+                }
+            }
         }
         Ok(out)
     }
@@ -258,4 +558,234 @@ fn row3<'a>(t: &'a Tensor, i: usize, j: usize, v: usize) -> &'a [f32] {
     let rows = t.shape()[1];
     let base = (i * rows + j) * v;
     &t.data()[base..base + v]
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    use super::*;
+    use crate::coordinator::backend::SyntheticBackend;
+
+    fn engine(batch: usize) -> ServeEngine {
+        ServeEngine::new(
+            Box::new(SyntheticBackend::new(batch).with_seq(32, 64)),
+            ServeConfig { max_new_cap: 16, seed: 1, queue_cap: 8 },
+        )
+    }
+
+    #[test]
+    fn retirement_frees_capacity_same_tick() {
+        let mut e = engine(1);
+        e.submit(Request::new(0, vec![5, 6, 7]).with_max_new(3));
+        e.submit(Request::new(1, vec![9]).with_max_new(1));
+
+        // tick 1 = admit + prefill token 1 + decode-wave token 2
+        e.step().unwrap();
+        assert_eq!(e.active(), 1);
+        assert_eq!(e.pending(), 1);
+        let evs = e.step().unwrap(); // token 3 -> finished
+        assert!(evs.iter().any(|ev| ev.is_terminal() && ev.id() == 0));
+        assert_eq!(e.active(), 0, "slot must free in the finishing tick");
+        assert_eq!(e.pending(), 1);
+
+        // single-token request: admitted, prefilled, and retired in one tick
+        let evs = e.step().unwrap();
+        assert!(evs.iter().any(|ev| ev.is_terminal() && ev.id() == 1));
+        assert_eq!(e.active(), 0);
+        assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    fn per_token_events_arrive_in_order() {
+        let mut e = engine(2);
+        let prompts: Vec<Vec<u16>> = vec![vec![1, 2, 3], vec![40], vec![7, 7]];
+        let mut rxs = Vec::new();
+        for (id, p) in prompts.iter().enumerate() {
+            let (tx, rx) = channel();
+            e.submit_streaming(Request::new(id as u64, p.clone()).with_max_new(5), tx);
+            rxs.push(rx);
+        }
+        while e.has_work() {
+            e.step().unwrap();
+        }
+        for (id, (rx, prompt)) in rxs.iter().zip(&prompts).enumerate() {
+            let evs: Vec<TokenEvent> = rx.try_iter().collect();
+            assert!(
+                matches!(evs[0], TokenEvent::Started { .. }),
+                "req {id}: first event must be Started"
+            );
+            let mut want_tok = SyntheticBackend::first_token(prompt);
+            let mut want_index = 0usize;
+            for ev in &evs[1..evs.len() - 1] {
+                match ev {
+                    TokenEvent::Token { index, token, .. } => {
+                        assert_eq!(*index, want_index, "req {id}: index order");
+                        assert_eq!(*token, want_tok, "req {id}: token progression");
+                        want_index += 1;
+                        want_tok = SyntheticBackend::next_token(want_tok);
+                    }
+                    other => panic!("req {id}: unexpected mid-stream event {other:?}"),
+                }
+            }
+            assert_eq!(want_index, 5, "req {id}: all 5 tokens streamed");
+            match evs.last().unwrap() {
+                TokenEvent::Done { reason, response, .. } => {
+                    assert_eq!(*reason, FinishReason::Length);
+                    assert_eq!(response.tokens.len(), 5);
+                }
+                other => panic!("req {id}: last event {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_admission_rejects_overflow() {
+        let mut e = ServeEngine::new(
+            Box::new(SyntheticBackend::new(1).with_seq(32, 64)),
+            ServeConfig { max_new_cap: 4, seed: 1, queue_cap: 2 },
+        );
+        assert!(e.try_submit(Request::new(0, vec![1]), None).is_ok());
+        assert!(e.try_submit(Request::new(1, vec![2]), None).is_ok());
+        assert_eq!(
+            e.try_submit(Request::new(2, vec![3]), None),
+            Err(AdmissionError::QueueFull { cap: 2 })
+        );
+        assert_eq!(e.metrics.rejected, 1);
+
+        assert_eq!(
+            e.try_submit(Request::new(3, Vec::new()), None),
+            Err(AdmissionError::InvalidPrompt { len: 0, max: 32 })
+        );
+        let long = vec![1u16; 33];
+        assert!(matches!(
+            e.try_submit(Request::new(4, long), None),
+            Err(AdmissionError::InvalidPrompt { len: 33, .. })
+        ));
+    }
+
+    #[test]
+    fn queued_deadline_expires_without_serving() {
+        let mut e = engine(1);
+        // deadline already in the past
+        let mut req = Request::new(0, vec![1, 2]).with_max_new(4);
+        req.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let (tx, rx) = channel();
+        e.submit_streaming(req, tx);
+        let evs = e.step().unwrap();
+        assert!(matches!(
+            evs.first(),
+            Some(TokenEvent::Done { reason: FinishReason::Deadline, .. })
+        ));
+        assert_eq!(e.metrics.timeouts, 1);
+        assert_eq!(e.active(), 0);
+        assert_eq!(e.pending(), 0);
+        let got: Vec<TokenEvent> = rx.try_iter().collect();
+        assert_eq!(got.len(), 1);
+    }
+
+    #[test]
+    fn inflight_deadline_returns_partial_output() {
+        let mut e = ServeEngine::new(
+            Box::new(
+                SyntheticBackend::new(1)
+                    .with_seq(32, 64)
+                    .with_delay(Duration::from_millis(5)),
+            ),
+            ServeConfig { max_new_cap: 16, seed: 1, queue_cap: 8 },
+        );
+        e.submit(
+            Request::new(0, vec![3, 4])
+                .with_max_new(16)
+                .with_deadline_in(Duration::from_millis(1)),
+        );
+        let mut done = None;
+        for _ in 0..4 {
+            for ev in e.step().unwrap() {
+                if let TokenEvent::Done { reason, response, .. } = ev {
+                    done = Some((reason, response));
+                }
+            }
+            if done.is_some() {
+                break;
+            }
+        }
+        let (reason, response) = done.expect("request must finish via deadline");
+        assert_eq!(reason, FinishReason::Deadline);
+        assert!(response.tokens.len() < 16, "deadline cut generation short");
+        assert!(e.metrics.timeouts >= 1);
+        assert_eq!(e.active(), 0);
+    }
+
+    #[test]
+    fn dropped_sink_cancels_and_frees_slot() {
+        let mut e = engine(1);
+        let (tx, rx) = channel();
+        e.submit_streaming(Request::new(0, vec![8, 9]).with_max_new(16), tx);
+        e.step().unwrap(); // admitted + first token
+        assert_eq!(e.active(), 1);
+        drop(rx); // client disconnects
+        let evs = e.step().unwrap(); // send fails -> cancelled -> retired
+        assert!(evs.iter().any(|ev| matches!(
+            ev,
+            TokenEvent::Done { reason: FinishReason::Cancelled, .. }
+        )));
+        assert_eq!(e.active(), 0, "cancelled slot must free in the same tick");
+        assert_eq!(e.metrics.cancelled, 1);
+    }
+
+    #[test]
+    fn greedy_sample_guards_nonfinite() {
+        let mut rng = Rng::new(0);
+        // all-NaN and all -inf rows end the request deterministically
+        assert_eq!(ServeEngine::sample(&mut rng, &[f32::NAN; 4], None), EOS);
+        assert_eq!(
+            ServeEngine::sample(&mut rng, &[f32::NEG_INFINITY; 4], None),
+            EOS
+        );
+        assert_eq!(ServeEngine::sample(&mut rng, &[f32::NAN; 4], Some(0.5)), EOS);
+        // NaN entries are skipped, not compared
+        assert_eq!(
+            ServeEngine::sample(&mut rng, &[f32::NAN, 1.0, 2.0, f32::NAN], None),
+            2
+        );
+        // ties resolve to the lowest index (deterministic)
+        assert_eq!(ServeEngine::sample(&mut rng, &[3.0, 3.0, 1.0], None), 0);
+        // +inf in the temperature path is masked rather than poisoning exp()
+        let t = ServeEngine::sample(
+            &mut rng,
+            &[0.0, f32::INFINITY, 1.0],
+            Some(1.0),
+        );
+        assert!(t == 0 || t == 2);
+    }
+
+    #[test]
+    fn generate_follows_synthetic_progression() {
+        let mut e = engine(1);
+        let resp = e.generate(0, "ab", 4).unwrap();
+        let first = SyntheticBackend::first_token(&[97, 98]);
+        let mut want = vec![first];
+        for _ in 1..4 {
+            want.push(SyntheticBackend::next_token(*want.last().unwrap()));
+        }
+        assert_eq!(resp.tokens, want);
+        assert_eq!(resp.finish, FinishReason::Length);
+        assert!(resp.latency_s >= resp.ttft_s);
+    }
+
+    #[test]
+    fn abort_all_fails_everything() {
+        let mut e = engine(2);
+        e.submit(Request::new(0, vec![1]).with_max_new(8));
+        e.submit(Request::new(1, vec![2]).with_max_new(8));
+        e.submit(Request::new(2, vec![3]).with_max_new(8));
+        e.step().unwrap(); // two admitted, one queued
+        let evs = e.abort_all("backend lost");
+        assert_eq!(evs.len(), 3);
+        assert!(evs.iter().all(|ev| matches!(ev, TokenEvent::Failed { .. })));
+        assert_eq!(e.active(), 0);
+        assert_eq!(e.pending(), 0);
+    }
 }

@@ -1,0 +1,85 @@
+//! Per-token event stream emitted by the continuous batcher.
+//!
+//! The scheduler no longer returns only finished [`Response`]s: every tick
+//! yields a sequence of [`TokenEvent`]s, one per state transition of each
+//! in-flight request. Streaming consumers (the SSE path in
+//! `crate::server`) subscribe per request via an `mpsc::Sender` handed to
+//! [`crate::coordinator::ServeEngine::submit_streaming`]; batch consumers
+//! collect the terminal events.
+
+use super::request::Response;
+
+/// Why a request stopped generating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The model emitted EOS.
+    Eos,
+    /// Hit `max_new_tokens`, the engine cap, or the KV-cache horizon.
+    Length,
+    /// The per-request deadline passed; the response holds partial output.
+    Deadline,
+    /// The subscriber dropped its receiver (client disconnect).
+    Cancelled,
+}
+
+impl FinishReason {
+    /// OpenAI-compatible wire label.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "stop",
+            FinishReason::Length => "length",
+            FinishReason::Deadline => "deadline",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// One scheduler-observable state transition of a request.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// Admitted to a slot; prefill for this request starts this tick.
+    Started { id: u64 },
+    /// One generated token. `index` counts from 0 per request and is
+    /// strictly increasing; EOS is never surfaced as a `Token` event.
+    Token { id: u64, index: usize, token: u16, text: String },
+    /// Terminal: generation finished (possibly with partial output on
+    /// deadline/cancel). Exactly one `Done` or `Failed` per request.
+    Done { id: u64, reason: FinishReason, response: Response },
+    /// Terminal: the request never produced a response (validation or
+    /// backend failure).
+    Failed { id: u64, error: String },
+}
+
+impl TokenEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            TokenEvent::Started { id }
+            | TokenEvent::Token { id, .. }
+            | TokenEvent::Done { id, .. }
+            | TokenEvent::Failed { id, .. } => *id,
+        }
+    }
+
+    /// True for `Done`/`Failed` — no further events follow for this id.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TokenEvent::Done { .. } | TokenEvent::Failed { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_reason_labels() {
+        assert_eq!(FinishReason::Eos.as_str(), "stop");
+        assert_eq!(FinishReason::Length.as_str(), "length");
+    }
+
+    #[test]
+    fn terminality() {
+        assert!(!TokenEvent::Started { id: 1 }.is_terminal());
+        assert!(TokenEvent::Failed { id: 1, error: "x".into() }.is_terminal());
+        assert_eq!(TokenEvent::Started { id: 9 }.id(), 9);
+    }
+}

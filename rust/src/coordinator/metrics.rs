@@ -1,18 +1,35 @@
 //! Serving metrics: latency histograms + throughput counters (the Fig. 3
 //! measurement surface).
 
+/// Samples kept per histogram. The scheduler snapshots (clones) its
+/// metrics every tick and a serving process records one sample per token,
+/// so storage must stay bounded: beyond this window the ring overwrites
+/// the oldest sample. `count()` stays cumulative; quantiles describe the
+/// most recent `WINDOW` observations.
+const WINDOW: usize = 4096;
+
 #[derive(Clone, Debug, Default)]
 pub struct Histogram {
     samples: Vec<f64>,
+    /// Ring cursor once `samples` reaches `WINDOW`.
+    next: usize,
+    /// Lifetime observation count.
+    total: usize,
 }
 
 impl Histogram {
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
+        if self.samples.len() < WINDOW {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+        }
+        self.next = (self.next + 1) % WINDOW;
+        self.total += 1;
     }
 
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.total
     }
 
     pub fn mean(&self) -> f64 {
@@ -39,11 +56,24 @@ pub struct ServeMetrics {
     pub latency: Histogram,
     pub decode_step: Histogram,
     pub prefill_call: Histogram,
+    /// Decode-wave latency attributed per generated token (the "per-token
+    /// latency" surface of the HTTP front-end).
+    pub per_token: Histogram,
+    /// Time spent in the admission queue before landing in a slot.
+    pub queue_wait: Histogram,
     pub completed: usize,
     pub generated_tokens: usize,
     pub prefill_tokens: usize,
     pub decode_steps: usize,
     pub prefill_calls: usize,
+    /// Requests refused by bounded admission (HTTP 429).
+    pub rejected: usize,
+    /// Requests cut off by their deadline (queued or in flight).
+    pub timeouts: usize,
+    /// Requests whose subscriber disconnected mid-generation.
+    pub cancelled: usize,
+    /// Requests that failed validation or died with the backend.
+    pub failed: usize,
     pub wall_s: f64,
 }
 
@@ -58,7 +88,8 @@ impl ServeMetrics {
     pub fn summary(&self) -> String {
         format!(
             "completed={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
-             ttft p50={:.1}ms p95={:.1}ms latency p50={:.1}ms decode_step p50={:.2}ms",
+             ttft p50={:.1}ms p95={:.1}ms latency p50={:.1}ms decode_step p50={:.2}ms \
+             per_token p50={:.2}ms p95={:.2}ms rejected={} timeouts={} cancelled={}",
             self.completed,
             self.generated_tokens,
             self.wall_s,
@@ -67,7 +98,69 @@ impl ServeMetrics {
             self.ttft.percentile(95.0) * 1e3,
             self.latency.percentile(50.0) * 1e3,
             self.decode_step.percentile(50.0) * 1e3,
+            self.per_token.percentile(50.0) * 1e3,
+            self.per_token.percentile(95.0) * 1e3,
+            self.rejected,
+            self.timeouts,
+            self.cancelled,
         )
+    }
+
+    /// Render the Prometheus text exposition format served by the HTTP
+    /// front-end's `GET /metrics`. Quantiles are exported as gauges
+    /// (recomputed per scrape), counters as `_total` counters.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::with_capacity(2048);
+        let counter = |o: &mut String, name: &str, help: &str, v: f64| {
+            let _ = writeln!(o, "# HELP {name} {help}");
+            let _ = writeln!(o, "# TYPE {name} counter");
+            let _ = writeln!(o, "{name} {v}");
+        };
+        counter(&mut o, "singlequant_requests_completed_total",
+                "Requests retired with a response.", self.completed as f64);
+        counter(&mut o, "singlequant_requests_rejected_total",
+                "Requests refused by bounded admission (429).", self.rejected as f64);
+        counter(&mut o, "singlequant_requests_timeout_total",
+                "Requests cut off by their deadline.", self.timeouts as f64);
+        counter(&mut o, "singlequant_requests_cancelled_total",
+                "Requests cancelled by client disconnect.", self.cancelled as f64);
+        counter(&mut o, "singlequant_requests_failed_total",
+                "Requests failed by validation or backend errors.", self.failed as f64);
+        counter(&mut o, "singlequant_tokens_generated_total",
+                "Tokens sampled across all requests.", self.generated_tokens as f64);
+        counter(&mut o, "singlequant_prefill_tokens_total",
+                "Prompt tokens prefilled.", self.prefill_tokens as f64);
+        counter(&mut o, "singlequant_decode_steps_total",
+                "Decode waves executed.", self.decode_steps as f64);
+        counter(&mut o, "singlequant_prefill_calls_total",
+                "Prefill batches executed.", self.prefill_calls as f64);
+
+        let quantiles = |o: &mut String, name: &str, help: &str, h: &Histogram| {
+            let _ = writeln!(o, "# HELP {name} {help}");
+            let _ = writeln!(o, "# TYPE {name} gauge");
+            for (label, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                let _ = writeln!(
+                    o, "{name}{{quantile=\"{label}\"}} {}", h.percentile(p)
+                );
+            }
+            let _ = writeln!(o, "{name}_count {}", h.count());
+        };
+        quantiles(&mut o, "singlequant_ttft_seconds",
+                  "Time to first token.", &self.ttft);
+        quantiles(&mut o, "singlequant_per_token_seconds",
+                  "Decode latency per generated token.", &self.per_token);
+        quantiles(&mut o, "singlequant_latency_seconds",
+                  "Total request latency.", &self.latency);
+        quantiles(&mut o, "singlequant_queue_wait_seconds",
+                  "Admission-queue wait.", &self.queue_wait);
+
+        let _ = writeln!(o, "# HELP singlequant_throughput_tokens_per_second \
+                             Decode throughput over the engine lifetime.");
+        let _ = writeln!(o, "# TYPE singlequant_throughput_tokens_per_second gauge");
+        let _ = writeln!(o, "singlequant_throughput_tokens_per_second {}",
+                         self.decode_tokens_per_s());
+        o
     }
 }
 
@@ -92,5 +185,38 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_window_bounds_memory() {
+        let mut h = Histogram::default();
+        for i in 0..(WINDOW * 2 + 10) {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), WINDOW * 2 + 10, "count stays cumulative");
+        assert_eq!(h.samples.len(), WINDOW, "storage is bounded");
+        // quantiles describe the most recent window only
+        assert!(h.percentile(0.0) >= WINDOW as f64);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let mut m = ServeMetrics::default();
+        m.completed = 3;
+        m.rejected = 1;
+        m.generated_tokens = 40;
+        m.ttft.record(0.010);
+        m.ttft.record(0.030);
+        m.per_token.record(0.002);
+        let text = m.prometheus();
+        assert!(text.contains("singlequant_requests_completed_total 3"));
+        assert!(text.contains("singlequant_requests_rejected_total 1"));
+        assert!(text.contains("singlequant_ttft_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("singlequant_per_token_seconds{quantile=\"0.95\"}"));
+        assert!(text.contains("# TYPE singlequant_tokens_generated_total counter"));
+        // every non-comment line is "name[{labels}] value"
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line {line:?}");
+        }
     }
 }

@@ -7,11 +7,20 @@
 //! prefilled as a padded batch and join the decode wave in place (per-slot
 //! positions — the decode graph takes `pos: [B]`), finished requests retire
 //! their slot immediately. Python is never on this path.
+//!
+//! The batcher drives an abstract [`ServeBackend`] (PJRT graphs in
+//! production via `runtime::RunnerBackend`, a deterministic synthetic
+//! model in tests) and emits a per-token [`TokenEvent`] stream that the
+//! HTTP front-end (`crate::server`) turns into SSE. See `DESIGN.md`.
 
+pub mod backend;
 pub mod batcher;
+pub mod events;
 pub mod metrics;
 pub mod request;
 pub mod tokenizer;
 
-pub use batcher::{ServeConfig, ServeEngine};
+pub use backend::{BackendLimits, ServeBackend, SyntheticBackend};
+pub use batcher::{AdmissionError, ServeConfig, ServeEngine};
+pub use events::{FinishReason, TokenEvent};
 pub use request::{Request, Response};

@@ -1,8 +1,15 @@
 //! Request/response types for the serving path.
 
-use std::time::Instant;
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
 
+use super::events::{FinishReason, TokenEvent};
 use super::tokenizer;
+
+/// Sampling temperatures are clamped into this range once, at admission
+/// (`ServeEngine::try_submit`/`submit`), never per sample call.
+pub const MIN_TEMPERATURE: f32 = 1e-3;
+pub const MAX_TEMPERATURE: f32 = 1e3;
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -11,16 +18,53 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Greedy when None; otherwise softmax temperature.
     pub temperature: Option<f32>,
+    /// Absolute wall-clock cutoff. Once passed, a queued request is
+    /// rejected and an in-flight one retires with partial output and
+    /// [`FinishReason::Deadline`].
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
-    pub fn from_text(id: u64, text: &str, max_new_tokens: usize) -> Request {
+    pub fn new(id: u64, prompt_tokens: Vec<u16>) -> Request {
         Request {
             id,
-            prompt_tokens: tokenizer::encode(text),
-            max_new_tokens,
+            prompt_tokens,
+            max_new_tokens: 16,
             temperature: None,
+            deadline: None,
         }
+    }
+
+    pub fn from_text(id: u64, text: &str, max_new_tokens: usize) -> Request {
+        Request::new(id, tokenizer::encode(text)).with_max_new(max_new_tokens)
+    }
+
+    pub fn with_max_new(mut self, n: usize) -> Request {
+        self.max_new_tokens = n;
+        self
+    }
+
+    /// Set the sampling temperature (`t <= 0`, NaN, and inf mean greedy).
+    pub fn with_temperature(mut self, t: f32) -> Request {
+        self.temperature = Some(t);
+        self
+    }
+
+    pub fn with_deadline_in(mut self, d: Duration) -> Request {
+        self.deadline = Some(Instant::now() + d);
+        self
+    }
+
+    /// Normalize the sampling temperature into the supported range.
+    /// Called exactly once per request at admission so the sampler's hot
+    /// path never re-clamps.
+    pub(crate) fn normalize(&mut self) {
+        self.temperature = match self.temperature {
+            Some(t) if t.is_finite() && t > 0.0 => {
+                Some(t.clamp(MIN_TEMPERATURE, MAX_TEMPERATURE))
+            }
+            _ => None,
+        };
     }
 }
 
@@ -31,19 +75,65 @@ pub struct Response {
     pub text: String,
     /// Time to first token (prefill completion), seconds.
     pub ttft_s: f64,
-    /// Total request latency, seconds.
+    /// Total request latency from admission, seconds.
     pub latency_s: f64,
     pub prompt_len: usize,
+    /// Why generation stopped.
+    pub finish: FinishReason,
 }
 
 /// Internal per-slot record while a request is in flight.
 #[derive(Debug)]
 pub struct InFlight {
     pub req: Request,
+    /// When the request entered the admission queue.
+    pub enqueued: Instant,
+    /// When it was admitted to a slot.
     pub admitted: Instant,
     pub first_token: Option<Instant>,
     pub generated: Vec<u16>,
     /// Index at which the *next* token will be written into the KV cache.
     pub pos: usize,
     pub last_token: u16,
+    /// Per-token event subscriber; None for batch-mode requests.
+    pub sink: Option<Sender<TokenEvent>>,
+    /// Set when the subscriber hung up; the slot retires next check.
+    pub cancelled: bool,
+    /// Bytes of an incomplete UTF-8 sequence awaiting their tail, so
+    /// streamed text deltas reassemble multi-byte chars (see
+    /// `tokenizer::decode_stream`).
+    pub utf8_pending: Vec<u8>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn temperature_normalizes_once() {
+        let mut r = Request::new(0, vec![1]).with_temperature(0.0);
+        r.normalize();
+        assert_eq!(r.temperature, None, "t=0 means greedy");
+
+        let mut r = Request::new(0, vec![1]).with_temperature(f32::NAN);
+        r.normalize();
+        assert_eq!(r.temperature, None, "NaN means greedy");
+
+        let mut r = Request::new(0, vec![1]).with_temperature(1e-9);
+        r.normalize();
+        assert_eq!(r.temperature, Some(MIN_TEMPERATURE));
+
+        let mut r = Request::new(0, vec![1]).with_temperature(0.8);
+        r.normalize();
+        assert_eq!(r.temperature, Some(0.8));
+    }
+
+    #[test]
+    fn builder_defaults() {
+        let r = Request::from_text(3, "ab", 7);
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt_tokens.len(), 2);
+        assert_eq!(r.max_new_tokens, 7);
+        assert!(r.deadline.is_none());
+    }
 }

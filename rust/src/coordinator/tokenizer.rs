@@ -31,6 +31,42 @@ pub fn decode(ids: &[u16]) -> String {
     String::from_utf8_lossy(&bytes).into_owned()
 }
 
+/// Incremental decode for token streaming: feed one token, get the text
+/// that became *complete* with it. Multi-byte UTF-8 sequences buffer in
+/// `pending` until their last byte arrives (so concatenated deltas equal
+/// the batch `decode` of the same tokens, instead of one U+FFFD per
+/// byte); invalid sequences flush lossily. Special tokens produce "".
+pub fn decode_stream(pending: &mut Vec<u8>, tok: u16) -> String {
+    if tok >= 256 {
+        return String::new();
+    }
+    pending.push(tok as u8);
+    match std::str::from_utf8(pending) {
+        Ok(s) => {
+            let out = s.to_string();
+            pending.clear();
+            out
+        }
+        Err(e) if e.error_len().is_none() => {
+            // incomplete trailing sequence: flush any valid prefix, keep
+            // the tail (at most 3 bytes) for the next token
+            let valid = e.valid_up_to();
+            if valid == 0 {
+                return String::new();
+            }
+            let out = String::from_utf8_lossy(&pending[..valid]).into_owned();
+            pending.drain(..valid);
+            out
+        }
+        Err(_) => {
+            // invalid byte: flush everything lossily rather than stall
+            let out = String::from_utf8_lossy(pending).into_owned();
+            pending.clear();
+            out
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -53,5 +89,31 @@ mod tests {
     fn non_ascii_lossy_safe() {
         let s = "héllo";
         assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn stream_decode_reassembles_multibyte() {
+        // "é" is two byte-tokens; the delta must arrive whole, not as
+        // two replacement chars
+        let mut pending = Vec::new();
+        let deltas: Vec<String> = encode("héllo")
+            .into_iter()
+            .map(|t| decode_stream(&mut pending, t))
+            .collect();
+        assert_eq!(deltas.concat(), "héllo");
+        assert_eq!(deltas[1], "", "first byte of é buffers");
+        assert_eq!(deltas[2], "é", "second byte completes it");
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn stream_decode_flushes_invalid_and_skips_specials() {
+        let mut pending = Vec::new();
+        // 0xC4 is a 2-byte leader; 0xC5 is not a valid continuation
+        assert_eq!(decode_stream(&mut pending, 0xC4), "");
+        assert_eq!(decode_stream(&mut pending, 0xC5), "\u{FFFD}\u{FFFD}");
+        assert!(pending.is_empty());
+        assert_eq!(decode_stream(&mut pending, EOS), "");
+        assert_eq!(decode_stream(&mut pending, b'a' as u16), "a");
     }
 }

@@ -7,7 +7,7 @@
 //! baseline the paper evaluates (SmoothQuant, QuaRot, SpinQuant, DuQuant,
 //! FlatQuant, GPTQ/AWQ/QuIP weight quantizers).
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Three-layer architecture (see `DESIGN.md` at the repository root):
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the W4A4
 //!   GEMM and Kronecker-rotation hot path, AOT-lowered into the HLO.
 //! * **Layer 2** — JAX model (`python/compile/model.py`): LLaMA-style and
@@ -15,9 +15,11 @@
 //! * **Layer 3** — this crate: the quantization pipeline (calibration →
 //!   closed-form rotations → weight quantization), the PJRT runtime that
 //!   loads and executes the AOT artifacts, the serving coordinator
-//!   (continuous batching, prefill/decode scheduling), the evaluation
-//!   harness, and the experiment drivers that regenerate every table and
-//!   figure in the paper.
+//!   (continuous batching, per-token event streaming, prefill/decode
+//!   scheduling), the HTTP front-end (`server`: OpenAI-style streaming
+//!   completions over `std::net`), the evaluation harness, and the
+//!   experiment drivers that regenerate every table and figure in the
+//!   paper.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `singlequant` binary is self-contained.
@@ -32,5 +34,6 @@ pub mod pipeline;
 pub mod quant;
 pub mod rotation;
 pub mod runtime;
+pub mod server;
 pub mod tensor;
 pub mod util;

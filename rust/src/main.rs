@@ -5,6 +5,15 @@
 //!   quantize                     — run the pipeline, save a package report
 //!   eval                         — PPL + zero-shot eval of one (model, method)
 //!   serve                        — serve a synthetic request trace, print metrics
+//!   serve-http                   — run the HTTP front-end: POST /v1/completions
+//!                                  (OpenAI-style JSON; `"stream": true` for SSE
+//!                                  token streaming), GET /healthz, GET /metrics
+//!                                  (Prometheus text), POST /admin/shutdown
+//!                                  (graceful drain). Flags: --port N (default
+//!                                  8071), --host IP, --batch N, --max-new N,
+//!                                  --queue-cap N (admission bound -> HTTP 429),
+//!                                  --deadline-ms N, --synthetic (model-free
+//!                                  backend, no artifacts needed)
 //!   generate                     — one-shot text generation
 //!   reproduce --id <id>          — regenerate a paper table/figure (or `all`)
 //!   analyze-ste                  — the Fig. 2 STE instability study
@@ -16,14 +25,17 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use singlequant::coordinator::{Request, ServeConfig, ServeEngine};
+use singlequant::coordinator::{
+    Request, ServeBackend, ServeConfig, ServeEngine, SyntheticBackend,
+};
 use singlequant::eval::ppl::perplexity;
 use singlequant::eval::tasks::zero_shot_suite;
 use singlequant::experiments::{run_experiment, EvalBudget, ExpContext};
 use singlequant::pipeline::{Method, PipelineOptions};
 use singlequant::quant::WeightQuantizer;
 use singlequant::rotation::singlequant::SingleQuantConfig;
-use singlequant::runtime::ModelRunner;
+use singlequant::runtime::{ModelRunner, RunnerBackend};
+use singlequant::server::{serve as serve_http, ServerConfig};
 use singlequant::util::cli::Args;
 use singlequant::util::rng::Rng;
 
@@ -104,13 +116,14 @@ fn ctx_from_args(args: &Args) -> Result<ExpContext> {
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["fast", "lct", "verbose", "urt-axis2"])?;
+    let args = Args::parse(&argv, &["fast", "lct", "verbose", "urt-axis2", "synthetic"])?;
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     match sub.as_str() {
         "info" => info(&args),
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "serve-http" => cmd_serve_http(&args),
         "generate" => cmd_generate(&args),
         "reproduce" => cmd_reproduce(&args),
         "analyze-ste" => cmd_ste(&args),
@@ -122,12 +135,14 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "singlequant — W4A4 LLM quantization via closed-form rotations
-usage: singlequant <info|quantize|eval|serve|generate|reproduce|analyze-ste> [flags]
+usage: singlequant <info|quantize|eval|serve|serve-http|generate|reproduce|analyze-ste> [flags]
   --artifacts DIR   artifact directory (default: artifacts)
   --model NAME      sq-s | sq-m | sq-l | sq-xl | sq-moe | sq-m-chat
   --method NAME     fp16|rtn|smoothquant|awq|quarot|quip|spinquant|duquant|flatquant|singlequant
   --wq NAME         rtn | gptq | gptq-g32 | rtn-g32
   --wbits N --abits N --lct --fast
+  serve-http        --host IP --port N --batch N --max-new N --queue-cap N
+                    --deadline-ms N --synthetic (model-free demo backend)
   reproduce --id X  table1..table8 tableb3 fig1a fig1b fig2 fig3 fig4 all
   generate          --prompt TEXT --max-new N";
 
@@ -206,9 +221,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch = args.usize_or("batch", 4)?;
     let n_req = args.usize_or("requests", ctx.budget.serve_requests)?;
     let max_new = args.usize_or("max-new", 24)?;
+    let backend = RunnerBackend::new(runner, batch);
     let mut engine = ServeEngine::new(
-        runner,
-        ServeConfig { batch, max_new_cap: max_new, seed: 7 },
+        Box::new(backend),
+        ServeConfig { max_new_cap: max_new, seed: 7, ..Default::default() },
     );
 
     // synthetic request trace from corpus prompts
@@ -218,17 +234,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let start = rng.below(corpus.len() - 64);
         let len = 16 + rng.below(48);
         let prompt = &corpus[start..start + len];
-        engine.submit(Request {
-            id: id as u64,
-            prompt_tokens: prompt.to_vec(),
-            max_new_tokens: max_new,
-            temperature: None,
-        });
+        engine.submit(Request::new(id as u64, prompt.to_vec()).with_max_new(max_new));
     }
     let responses = engine.run_to_completion()?;
     println!("served {} requests [{} | batch {batch}]", responses.len(),
              opts.method.label());
     println!("{}", engine.metrics.summary());
+    Ok(())
+}
+
+fn cmd_serve_http(args: &Args) -> Result<()> {
+    let host = args.get_or("host", "127.0.0.1");
+    let port = args.usize_or("port", 8071)?;
+    let batch = args.usize_or("batch", 4)?;
+    let max_new = args.usize_or("max-new", 32)?;
+    let queue_cap = args.usize_or("queue-cap", 64)?;
+    let deadline_ms = args.get("deadline-ms").map(|v| v.parse::<u64>()).transpose()
+        .map_err(|e| anyhow!("--deadline-ms: {e}"))?;
+
+    let (backend, model_label): (Box<dyn ServeBackend>, String) = if args.flag("synthetic") {
+        (Box::new(SyntheticBackend::new(batch)), "synthetic".to_string())
+    } else {
+        let ctx = ctx_from_args(args)?;
+        let model = args.get_or("model", "sq-m");
+        let opts = opts_from_args(args)?;
+        let qm = ctx.package(model, &opts)?;
+        let runner = Arc::new(ModelRunner::new(ctx.engine.clone(), &qm)?);
+        (
+            Box::new(RunnerBackend::new(runner, batch)),
+            format!("{model}/{}", opts.method.label()),
+        )
+    };
+    let engine = ServeEngine::new(
+        backend,
+        ServeConfig { max_new_cap: max_new, seed: 7, queue_cap },
+    );
+    let handle = serve_http(engine, ServerConfig {
+        addr: format!("{host}:{port}"),
+        default_max_tokens: max_new.min(16),
+        default_deadline_ms: deadline_ms,
+        model: model_label,
+    })?;
+    println!("serving on http://{}  (POST /v1/completions, GET /healthz, \
+              GET /metrics; POST /admin/shutdown to drain)", handle.addr());
+    // Block until a graceful drain is requested over HTTP; shutdown() then
+    // joins the scheduler after in-flight requests finish.
+    handle.shutdown_on_drain();
     Ok(())
 }
 
@@ -238,7 +289,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let opts = opts_from_args(args)?;
     let qm = ctx.package(model, &opts)?;
     let runner = Arc::new(ModelRunner::new(ctx.engine.clone(), &qm)?);
-    let mut engine = ServeEngine::new(runner, ServeConfig::default());
+    let backend = RunnerBackend::new(runner, 4);
+    let mut engine = ServeEngine::new(Box::new(backend), ServeConfig::default());
     let prompt = args.get_or("prompt", "the weaving master ");
     let max_new = args.usize_or("max-new", 32)?;
     let resp = engine.generate(0, prompt, max_new)?;

@@ -3,6 +3,8 @@
 
 pub mod engine;
 pub mod runner;
+pub mod serve_backend;
 
 pub use engine::{Artifact, Engine};
 pub use runner::{KvCache, ModelRunner};
+pub use serve_backend::RunnerBackend;

@@ -1,0 +1,52 @@
+//! [`ServeBackend`] implementation over the PJRT [`ModelRunner`]: the
+//! production decode backend the continuous batcher schedules.
+//!
+//! Owns the live KV cache so the coordinator never touches runtime types:
+//! prefill merges freshly-filled slot rows into the cache (all layers per
+//! admitted slot), decode advances it in place.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::runner::{KvCache, ModelRunner};
+use crate::coordinator::backend::{BackendLimits, ServeBackend};
+use crate::tensor::Tensor;
+
+pub struct RunnerBackend {
+    runner: Arc<ModelRunner>,
+    kv: KvCache,
+    limits: BackendLimits,
+}
+
+impl RunnerBackend {
+    /// Bind a runner at one of its lowered serve batch sizes.
+    pub fn new(runner: Arc<ModelRunner>, batch: usize) -> RunnerBackend {
+        let kv = runner.empty_kv(batch);
+        let limits = BackendLimits {
+            batch,
+            score_seq: runner.cfg.score_seq,
+            vocab_size: runner.cfg.vocab_size,
+            max_seq: runner.cfg.max_seq,
+        };
+        RunnerBackend { runner, kv, limits }
+    }
+}
+
+impl ServeBackend for RunnerBackend {
+    fn limits(&self) -> BackendLimits {
+        self.limits
+    }
+
+    fn prefill(&mut self, tokens: &[i32], admitted: &[usize]) -> Result<Tensor> {
+        let (logits, mut fresh_kv) = self.runner.prefill(self.limits.batch, tokens)?;
+        for &slot in admitted {
+            self.kv.copy_slot_from(&self.runner.cfg, &mut fresh_kv, slot)?;
+        }
+        Ok(logits)
+    }
+
+    fn decode(&mut self, tokens: &[i32], positions: &[i32]) -> Result<Tensor> {
+        self.runner.decode(&mut self.kv, tokens, positions)
+    }
+}

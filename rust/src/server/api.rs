@@ -1,0 +1,232 @@
+//! The OpenAI-style completions wire format: request parsing and JSON /
+//! SSE-chunk rendering, kept separate from socket handling so it unit
+//! tests without a server.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::coordinator::{FinishReason, Response};
+use crate::util::json::Json;
+
+/// Parsed + defaulted body of `POST /v1/completions`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletionParams {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: Option<f32>,
+    pub stream: bool,
+    /// Optional per-request deadline (milliseconds from admission).
+    pub deadline_ms: Option<u64>,
+}
+
+/// Validate a completions body. `Err` carries a client-facing message
+/// (HTTP 400).
+pub fn parse_completion(
+    body: &Json,
+    default_max_tokens: usize,
+    default_deadline_ms: Option<u64>,
+) -> Result<CompletionParams, String> {
+    if body.as_obj().is_err() {
+        return Err("body must be a JSON object".to_string());
+    }
+    let prompt = match body.opt("prompt") {
+        Some(Json::Str(s)) => s.clone(),
+        Some(_) => return Err("\"prompt\" must be a string".to_string()),
+        None => return Err("missing required field \"prompt\"".to_string()),
+    };
+    if prompt.is_empty() {
+        return Err("\"prompt\" must be non-empty".to_string());
+    }
+    let max_tokens = match body.opt("max_tokens") {
+        Some(v) => match v.as_f64() {
+            Ok(x) if x >= 0.0 => (x as usize).max(1),
+            _ => return Err("\"max_tokens\" must be a non-negative number".to_string()),
+        },
+        None => default_max_tokens,
+    };
+    let temperature = match body.opt("temperature") {
+        Some(v) => match v.as_f64() {
+            Ok(x) => Some(x as f32),
+            Err(_) => return Err("\"temperature\" must be a number".to_string()),
+        },
+        None => None,
+    };
+    let stream = match body.opt("stream") {
+        Some(v) => v
+            .as_bool()
+            .map_err(|_| "\"stream\" must be a boolean".to_string())?,
+        None => false,
+    };
+    // capped at 24h so downstream arithmetic (relay timeout = deadline +
+    // margin) can never overflow
+    const MAX_DEADLINE_MS: f64 = 86_400_000.0;
+    let deadline_ms = match body.opt("deadline_ms") {
+        Some(v) => match v.as_f64() {
+            Ok(x) if x > 0.0 => Some(x.min(MAX_DEADLINE_MS) as u64),
+            _ => return Err("\"deadline_ms\" must be a positive number".to_string()),
+        },
+        None => default_deadline_ms,
+    };
+    Ok(CompletionParams { prompt, max_tokens, temperature, stream, deadline_ms })
+}
+
+fn unix_now() -> i64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs() as i64)
+        .unwrap_or(0)
+}
+
+fn cmpl_id(id: u64) -> Json {
+    Json::str(format!("cmpl-{id}"))
+}
+
+/// Full (non-streaming) completion response body.
+pub fn completion_json(model: &str, resp: &Response) -> Json {
+    Json::obj(vec![
+        ("id", cmpl_id(resp.id)),
+        ("object", Json::str("text_completion")),
+        ("created", Json::int(unix_now())),
+        ("model", Json::str(model)),
+        (
+            "choices",
+            Json::arr(vec![Json::obj(vec![
+                ("index", Json::int(0)),
+                ("text", Json::str(resp.text.clone())),
+                ("finish_reason", Json::str(resp.finish.as_str())),
+            ])]),
+        ),
+        (
+            "usage",
+            Json::obj(vec![
+                ("prompt_tokens", Json::usize(resp.prompt_len)),
+                ("completion_tokens", Json::usize(resp.tokens.len())),
+                ("total_tokens", Json::usize(resp.prompt_len + resp.tokens.len())),
+            ]),
+        ),
+        (
+            "timing",
+            Json::obj(vec![
+                ("ttft_s", Json::num(resp.ttft_s)),
+                ("latency_s", Json::num(resp.latency_s)),
+            ]),
+        ),
+    ])
+}
+
+/// One SSE chunk: a token delta, or the closing chunk carrying the finish
+/// reason when `finish` is set.
+pub fn chunk_json(model: &str, id: u64, text: &str, finish: Option<FinishReason>) -> Json {
+    Json::obj(vec![
+        ("id", cmpl_id(id)),
+        ("object", Json::str("text_completion.chunk")),
+        ("created", Json::int(unix_now())),
+        ("model", Json::str(model)),
+        (
+            "choices",
+            Json::arr(vec![Json::obj(vec![
+                ("index", Json::int(0)),
+                ("text", Json::str(text)),
+                (
+                    "finish_reason",
+                    match finish {
+                        Some(f) => Json::str(f.as_str()),
+                        None => Json::Null,
+                    },
+                ),
+            ])]),
+        ),
+    ])
+}
+
+/// Error body, OpenAI-shaped: `{"error": {"message", "type"}}`.
+pub fn error_json(kind: &str, message: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("message", Json::str(message)),
+            ("type", Json::str(kind)),
+        ]),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<CompletionParams, String> {
+        parse_completion(&Json::parse(s).unwrap(), 16, None)
+    }
+
+    #[test]
+    fn parses_full_body() {
+        let p = parse(
+            r#"{"prompt": "hi", "max_tokens": 4, "temperature": 0.7,
+                "stream": true, "deadline_ms": 250}"#,
+        )
+        .unwrap();
+        assert_eq!(p.prompt, "hi");
+        assert_eq!(p.max_tokens, 4);
+        assert_eq!(p.temperature, Some(0.7));
+        assert!(p.stream);
+        assert_eq!(p.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn applies_defaults() {
+        let p = parse(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(p.max_tokens, 16);
+        assert_eq!(p.temperature, None);
+        assert!(!p.stream);
+        assert_eq!(p.deadline_ms, None);
+    }
+
+    #[test]
+    fn rejects_bad_bodies() {
+        assert!(parse(r#"{}"#).is_err(), "missing prompt");
+        assert!(parse(r#"{"prompt": 3}"#).is_err(), "non-string prompt");
+        assert!(parse(r#"{"prompt": ""}"#).is_err(), "empty prompt");
+        assert!(parse(r#"{"prompt": "x", "stream": "yes"}"#).is_err());
+        assert!(parse(r#"{"prompt": "x", "max_tokens": -1}"#).is_err());
+        assert!(parse(r#"[1,2]"#).is_err(), "non-object body");
+    }
+
+    #[test]
+    fn max_tokens_zero_means_one() {
+        let p = parse(r#"{"prompt": "x", "max_tokens": 0}"#).unwrap();
+        assert_eq!(p.max_tokens, 1);
+    }
+
+    #[test]
+    fn absurd_deadline_is_capped() {
+        let p = parse(r#"{"prompt": "x", "deadline_ms": 1e30}"#).unwrap();
+        assert_eq!(p.deadline_ms, Some(86_400_000));
+    }
+
+    #[test]
+    fn renders_wire_shapes() {
+        let resp = Response {
+            id: 7,
+            tokens: vec![1, 2],
+            text: "ab".into(),
+            ttft_s: 0.01,
+            latency_s: 0.05,
+            prompt_len: 3,
+            finish: FinishReason::Length,
+        };
+        let body = completion_json("sq-m", &resp).to_string();
+        assert!(body.contains("\"id\":\"cmpl-7\""));
+        assert!(body.contains("\"finish_reason\":\"length\""));
+        assert!(body.contains("\"total_tokens\":5"));
+
+        let chunk = chunk_json("sq-m", 7, "a", None).to_string();
+        assert!(chunk.contains("\"finish_reason\":null"));
+        let last = chunk_json("sq-m", 7, "", Some(FinishReason::Eos)).to_string();
+        assert!(last.contains("\"finish_reason\":\"stop\""));
+
+        let err = error_json("overloaded_error", "queue full").to_string();
+        assert_eq!(
+            err,
+            r#"{"error":{"message":"queue full","type":"overloaded_error"}}"#
+        );
+    }
+}

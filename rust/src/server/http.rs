@@ -1,0 +1,244 @@
+//! Minimal HTTP/1.1 on top of `std::io` — request parsing, response
+//! writing, and Server-Sent-Events framing. Deliberately small: one
+//! request per connection (`Connection: close` on every response),
+//! `Content-Length` bodies only, hard caps on header/body size. This is
+//! the entire wire layer of the serving front-end; no hyper, no tokio.
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Cap on the request line + headers.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on request bodies (prompts are short; this is generous).
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|e| anyhow!("body not UTF-8: {e}"))
+    }
+
+    /// Parse one request (head + body) from a buffered stream.
+    pub fn read_from<R: Read>(reader: &mut BufReader<R>) -> Result<HttpRequest> {
+        let mut head_bytes = 0usize;
+        let mut line = String::new();
+        read_line_limited(reader, &mut line, MAX_HEAD_BYTES)?;
+        if line.is_empty() {
+            bail!("connection closed before request line");
+        }
+        head_bytes += line.len();
+        let mut parts = line.split_whitespace();
+        let method = parts
+            .next()
+            .ok_or_else(|| anyhow!("empty request line"))?
+            .to_string();
+        let path = parts
+            .next()
+            .ok_or_else(|| anyhow!("request line missing path"))?
+            .to_string();
+        let version = parts.next().unwrap_or("HTTP/1.0");
+        if !version.starts_with("HTTP/1.") {
+            bail!("unsupported protocol {version:?}");
+        }
+
+        let mut headers = Vec::new();
+        loop {
+            let mut hline = String::new();
+            read_line_limited(reader, &mut hline, MAX_HEAD_BYTES)?;
+            head_bytes += hline.len();
+            if head_bytes > MAX_HEAD_BYTES {
+                bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+            }
+            let trimmed = hline.trim_end_matches(['\r', '\n']);
+            if trimmed.is_empty() {
+                break;
+            }
+            let (k, v) = trimmed
+                .split_once(':')
+                .ok_or_else(|| anyhow!("malformed header line {trimmed:?}"))?;
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+
+        let req = HttpRequest { method, path, headers, body: Vec::new() };
+        if req
+            .header("transfer-encoding")
+            .is_some_and(|v| !v.eq_ignore_ascii_case("identity"))
+        {
+            bail!("transfer-encoding not supported");
+        }
+        let len = match req.header("content-length") {
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|e| anyhow!("bad content-length {v:?}: {e}"))?,
+            None => 0,
+        };
+        if len > MAX_BODY_BYTES {
+            bail!("body of {len} bytes exceeds {MAX_BODY_BYTES}");
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        Ok(HttpRequest { body, ..req })
+    }
+}
+
+/// `read_line` with a hard byte cap: a newline-less flood errors out at
+/// `limit` instead of growing the line buffer unboundedly.
+fn read_line_limited<R: Read>(
+    reader: &mut BufReader<R>,
+    line: &mut String,
+    limit: usize,
+) -> Result<()> {
+    let mut bounded = reader.by_ref().take(limit as u64 + 1);
+    bounded.read_line(line)?;
+    if line.len() > limit {
+        bail!("line exceeds {limit} bytes");
+    }
+    Ok(())
+}
+
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete non-streaming response (Content-Length framed,
+/// connection closing).
+pub fn write_response(
+    w: &mut impl Write,
+    code: u16,
+    content_type: &str,
+    body: &[u8],
+    extra_headers: &[(&str, &str)],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        status_text(code),
+        body.len()
+    )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Start an SSE response; frames follow via [`write_sse_data`].
+pub fn write_sse_headers(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// One `data: <payload>\n\n` frame, flushed immediately (`payload` must be
+/// newline-free — JSON-encode first).
+pub fn write_sse_data(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
+    debug_assert!(!payload.contains('\n'), "SSE payload must be single-line");
+    write!(w, "data: {payload}\n\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<HttpRequest> {
+        HttpRequest::read_from(&mut BufReader::new(Cursor::new(raw.as_bytes().to_vec())))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\n\
+             content-length: 11\r\nContent-Type: application/json\r\n\r\n\
+             {\"a\": true}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("Content-Length"), Some("11"));
+        assert_eq!(req.header("CONTENT-TYPE"), Some("application/json"));
+        assert_eq!(req.body_str().unwrap(), "{\"a\": true}");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse("GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse("").is_err(), "empty stream");
+        assert!(parse("GARBAGE\r\n\r\n").is_err(), "no path");
+        assert!(
+            parse("GET / HTTP/1.1\r\nContent-Length: 9999999999\r\n\r\n").is_err(),
+            "oversized body"
+        );
+        assert!(
+            parse("GET / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").is_err(),
+            "chunked bodies unsupported"
+        );
+        assert!(
+            parse("GET / SPDY/9\r\n\r\n").is_err(),
+            "unknown protocol"
+        );
+        let flood = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(20_000));
+        assert!(parse(&flood).is_err(), "newline-less flood must be capped");
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", b"{}", &[("Retry-After", "1")])
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("Retry-After: 1\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn sse_framing() {
+        let mut out = Vec::new();
+        write_sse_headers(&mut out).unwrap();
+        write_sse_data(&mut out, "{\"x\":1}").unwrap();
+        write_sse_data(&mut out, "[DONE]").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Content-Type: text/event-stream"));
+        assert!(s.contains("data: {\"x\":1}\n\ndata: [DONE]\n\n"));
+    }
+}

@@ -1,0 +1,508 @@
+//! HTTP serving front-end: a streaming completions API over the
+//! continuous batcher.
+//!
+//! Dependency-light by construction — `std::net` + the hand-rolled JSON in
+//! `util::json`; no async runtime. Threading model (see `DESIGN.md`):
+//!
+//! * **scheduler thread** (`scheduler.rs`) — sole owner of the
+//!   [`ServeEngine`]; runs the admit/prefill/decode tick loop and answers
+//!   admission verdicts over a bounded mpsc command channel.
+//! * **accept thread** — blocking `TcpListener::accept`; spawns one
+//!   short-lived handler thread per connection (one request per
+//!   connection, `Connection: close`).
+//! * **handler threads** — parse HTTP, submit to the scheduler, then relay
+//!   [`TokenEvent`]s: SSE frames for `"stream": true`, a single JSON body
+//!   otherwise. On the streaming path a dropped client surfaces as a failed
+//!   SSE write, the handler drops its receiver, and the engine cancels the
+//!   request — freeing the slot the same tick. Non-streaming handlers only
+//!   touch the socket at the end, so a mid-generation disconnect there is
+//!   bounded by the request deadline rather than detected eagerly.
+//!
+//! Endpoints: `POST /v1/completions` (OpenAI-style, optional SSE),
+//! `GET /healthz`, `GET /metrics` (Prometheus text), `POST
+//! /admin/shutdown` (graceful drain). Overload returns HTTP 429 rather
+//! than queueing unboundedly.
+
+pub mod api;
+pub mod http;
+pub mod scheduler;
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::AdmissionError;
+use crate::coordinator::tokenizer;
+use crate::coordinator::{Request, ServeEngine, TokenEvent};
+use crate::util::json::Json;
+
+use api::{chunk_json, completion_json, error_json, parse_completion};
+use http::{write_response, write_sse_data, write_sse_headers, HttpRequest};
+use scheduler::{SchedCmd, SchedulerHandle, SchedulerShared};
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; use port 0 for an ephemeral port (tests).
+    pub addr: String,
+    /// `max_tokens` when the request omits it.
+    pub default_max_tokens: usize,
+    /// Deadline applied to requests that don't set `deadline_ms`.
+    pub default_deadline_ms: Option<u64>,
+    /// Model label echoed in the wire format.
+    pub model: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:8071".to_string(),
+            default_max_tokens: 16,
+            default_deadline_ms: None,
+            model: "singlequant".to_string(),
+        }
+    }
+}
+
+/// Shared server state (everything handler threads need).
+struct ServerState {
+    cfg: ServerConfig,
+    sched_tx: SyncSender<SchedCmd>,
+    sched_shared: Arc<SchedulerShared>,
+    addr: SocketAddr,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+    http_requests: AtomicU64,
+    http_400: AtomicU64,
+    http_404: AtomicU64,
+    http_429: AtomicU64,
+    http_500: AtomicU64,
+    streams_opened: AtomicU64,
+}
+
+impl ServerState {
+    /// Begin graceful drain: stop accepting, tell the scheduler to finish
+    /// in-flight work and exit. The blocking `send` is safe: the
+    /// scheduler always drains its channel between ticks. The accept loop
+    /// polls nonblockingly, so it observes `stop` within one poll
+    /// interval without needing a wake-up connection.
+    fn request_shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.sched_tx.send(SchedCmd::Shutdown);
+    }
+}
+
+/// A running server; dropping the handle does NOT stop it — call
+/// [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    state: Arc<ServerState>,
+    accept_thread: Option<JoinHandle<()>>,
+    sched_thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Graceful shutdown: refuse new work, drain in-flight requests, join
+    /// both threads.
+    pub fn shutdown(mut self) {
+        self.state.request_shutdown();
+        self.join();
+    }
+
+    /// Block until a drain is requested externally (POST /admin/shutdown),
+    /// then join — the `serve-http` subcommand's run-forever mode.
+    pub fn shutdown_on_drain(mut self) {
+        while !self.state.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        self.join();
+    }
+
+    fn join(&mut self) {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.sched_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving `engine` per `cfg`. Returns once the listener is bound
+/// and the scheduler thread is running.
+pub fn serve(engine: ServeEngine, cfg: ServerConfig) -> Result<ServerHandle> {
+    let queue_cap = engine.queue_cap();
+    let batch = engine.limits().batch;
+    let SchedulerHandle { tx: sched_tx, thread: sched_thread, shared: sched_shared } =
+        scheduler::spawn(engine, queue_cap + batch + 4);
+
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("bind {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+
+    let state = Arc::new(ServerState {
+        cfg,
+        sched_tx,
+        sched_shared,
+        addr,
+        stop: AtomicBool::new(false),
+        next_id: AtomicU64::new(1),
+        http_requests: AtomicU64::new(0),
+        http_400: AtomicU64::new(0),
+        http_404: AtomicU64::new(0),
+        http_429: AtomicU64::new(0),
+        http_500: AtomicU64::new(0),
+        streams_opened: AtomicU64::new(0),
+    });
+
+    let accept_state = state.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("sq-http-accept".into())
+        .spawn(move || accept_loop(listener, accept_state))
+        .expect("spawn accept thread");
+
+    Ok(ServerHandle {
+        state,
+        accept_thread: Some(accept_thread),
+        sched_thread: Some(sched_thread),
+    })
+}
+
+/// Nonblocking accept poll: a blocking `accept()` could only be woken by
+/// a loopback connection, which can fail exactly when shutdown matters
+/// most (listen backlog full under flood) — polling makes drain
+/// unconditional at the cost of one syscall per interval.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    while !state.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let conn_state = state.clone();
+                let _ = std::thread::Builder::new()
+                    .name("sq-http-conn".into())
+                    .spawn(move || handle_conn(stream, conn_state));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    // a client that stops draining its socket must not pin this thread
+    // forever: a stalled write errors out, the handler drops its event
+    // receiver, and the engine cancels the request
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+
+    let req = match HttpRequest::read_from(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            // port scans and probes disconnect before sending a request
+            // line — nothing to answer there; real malformed HTTP counts
+            // as a request and gets a counted 400
+            if !e.to_string().contains("closed before request line") {
+                state.http_requests.fetch_add(1, Ordering::Relaxed);
+                respond_error(
+                    &mut writer,
+                    &state,
+                    400,
+                    "invalid_request_error",
+                    &format!("{e:#}"),
+                );
+            }
+            return;
+        }
+    };
+    state.http_requests.fetch_add(1, Ordering::Relaxed);
+
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => handle_healthz(&mut writer, &state),
+        ("GET", "/metrics") => handle_metrics(&mut writer, &state),
+        ("POST", "/v1/completions") => handle_completions(&mut writer, &req, &state),
+        ("POST", "/admin/shutdown") => {
+            let _ = write_response(
+                &mut writer,
+                200,
+                "application/json",
+                b"{\"status\":\"draining\"}",
+                &[],
+            );
+            state.request_shutdown();
+        }
+        ("GET" | "POST", _) => {
+            state.http_404.fetch_add(1, Ordering::Relaxed);
+            respond_error(&mut writer, &state, 404, "not_found_error", "no such route");
+        }
+        _ => {
+            respond_error(
+                &mut writer,
+                &state,
+                405,
+                "invalid_request_error",
+                "method not allowed",
+            );
+        }
+    }
+}
+
+fn respond_error(
+    w: &mut impl Write,
+    state: &ServerState,
+    code: u16,
+    kind: &str,
+    msg: &str,
+) {
+    match code {
+        400 => state.http_400.fetch_add(1, Ordering::Relaxed),
+        429 => state.http_429.fetch_add(1, Ordering::Relaxed),
+        500 | 503 => state.http_500.fetch_add(1, Ordering::Relaxed),
+        _ => 0,
+    };
+    let extra: &[(&str, &str)] =
+        if code == 429 { &[("Retry-After", "1")] } else { &[] };
+    let _ = write_response(
+        w,
+        code,
+        "application/json",
+        error_json(kind, msg).to_string().as_bytes(),
+        extra,
+    );
+}
+
+fn handle_healthz(w: &mut impl Write, state: &ServerState) {
+    let shared = &state.sched_shared;
+    let body = Json::obj(vec![
+        (
+            "status",
+            Json::str(if shared.draining.load(Ordering::SeqCst) {
+                "draining"
+            } else {
+                "ok"
+            }),
+        ),
+        ("active", Json::usize(shared.active.load(Ordering::Relaxed))),
+        ("pending", Json::usize(shared.pending.load(Ordering::Relaxed))),
+        ("batch", Json::usize(shared.limits.batch)),
+        ("model", Json::str(state.cfg.model.clone())),
+    ]);
+    let _ = write_response(w, 200, "application/json", body.to_string().as_bytes(), &[]);
+}
+
+fn handle_metrics(w: &mut impl Write, state: &ServerState) {
+    let mut text = match state.sched_shared.metrics.lock() {
+        Ok(m) => m.prometheus(),
+        Err(_) => String::new(),
+    };
+    use std::fmt::Write as _;
+    let http = [
+        ("singlequant_http_requests_total", &state.http_requests),
+        ("singlequant_http_responses_400_total", &state.http_400),
+        ("singlequant_http_responses_404_total", &state.http_404),
+        ("singlequant_http_responses_429_total", &state.http_429),
+        ("singlequant_http_responses_5xx_total", &state.http_500),
+        ("singlequant_http_streams_opened_total", &state.streams_opened),
+    ];
+    for (name, v) in http {
+        let _ = writeln!(text, "# TYPE {name} counter");
+        let _ = writeln!(text, "{name} {}", v.load(Ordering::Relaxed));
+    }
+    let _ = write_response(
+        w,
+        200,
+        "text/plain; version=0.0.4",
+        text.as_bytes(),
+        &[],
+    );
+}
+
+fn handle_completions(w: &mut impl Write, req: &HttpRequest, state: &ServerState) {
+    let body = match req.body_str().map_err(|e| e.to_string()).and_then(|s| {
+        Json::parse(s).map_err(|e| format!("invalid JSON: {e:#}"))
+    }) {
+        Ok(b) => b,
+        Err(e) => return respond_error(w, state, 400, "invalid_request_error", &e),
+    };
+    let params = match parse_completion(
+        &body,
+        state.cfg.default_max_tokens,
+        state.cfg.default_deadline_ms,
+    ) {
+        Ok(p) => p,
+        Err(e) => return respond_error(w, state, 400, "invalid_request_error", &e),
+    };
+
+    let id = state.next_id.fetch_add(1, Ordering::Relaxed);
+    let mut request = Request::new(id, tokenizer::encode(&params.prompt))
+        .with_max_new(params.max_tokens);
+    if let Some(t) = params.temperature {
+        request = request.with_temperature(t);
+    }
+    if let Some(ms) = params.deadline_ms {
+        request = request.with_deadline_in(Duration::from_millis(ms));
+    }
+
+    // submit through the scheduler thread; the reply channel carries the
+    // admission verdict (bounded queue -> 429)
+    let (sink, events) = channel::<TokenEvent>();
+    let (reply_tx, reply_rx) = channel();
+    match state.sched_tx.try_send(SchedCmd::Submit {
+        req: request,
+        sink,
+        reply: reply_tx,
+    }) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            return respond_error(
+                w,
+                state,
+                429,
+                "overloaded_error",
+                "command channel full, retry later",
+            )
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            return respond_error(
+                w,
+                state,
+                503,
+                "overloaded_error",
+                "scheduler is down",
+            )
+        }
+    }
+    match reply_rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(Ok(())) => {}
+        Ok(Err(AdmissionError::QueueFull { .. })) => {
+            return respond_error(
+                w,
+                state,
+                429,
+                "overloaded_error",
+                "admission queue full, retry later",
+            )
+        }
+        Ok(Err(e @ AdmissionError::InvalidPrompt { .. })) => {
+            return respond_error(w, state, 400, "invalid_request_error", &e.to_string())
+        }
+        Err(_) => {
+            return respond_error(
+                w,
+                state,
+                500,
+                "internal_error",
+                "no admission verdict from scheduler",
+            )
+        }
+    }
+
+    // generous relay timeout: the engine's own deadline machinery is the
+    // real cutoff; this only guards a wedged scheduler
+    let relay_timeout = Duration::from_millis(
+        params.deadline_ms.map(|ms| ms + 30_000).unwrap_or(120_000),
+    );
+    if params.stream {
+        state.streams_opened.fetch_add(1, Ordering::Relaxed);
+        stream_events(w, state, id, &events, relay_timeout);
+    } else {
+        collect_and_respond(w, state, &events, relay_timeout);
+    }
+}
+
+/// Non-streaming: wait for the terminal event, answer with one JSON body.
+fn collect_and_respond(
+    w: &mut impl Write,
+    state: &ServerState,
+    events: &std::sync::mpsc::Receiver<TokenEvent>,
+    timeout: Duration,
+) {
+    loop {
+        match events.recv_timeout(timeout) {
+            Ok(TokenEvent::Done { response, .. }) => {
+                let body = completion_json(&state.cfg.model, &response).to_string();
+                let _ =
+                    write_response(w, 200, "application/json", body.as_bytes(), &[]);
+                return;
+            }
+            Ok(TokenEvent::Failed { error, .. }) => {
+                return respond_error(w, state, 500, "internal_error", &error);
+            }
+            Ok(_) => continue, // Started / Token
+            Err(_) => {
+                return respond_error(
+                    w,
+                    state,
+                    500,
+                    "internal_error",
+                    "event stream stalled",
+                );
+            }
+        }
+    }
+}
+
+/// Streaming: one SSE frame per token, a finishing chunk with the
+/// `finish_reason`, then `[DONE]`. A failed socket write simply drops the
+/// receiver — the scheduler observes the hangup and cancels the request.
+fn stream_events(
+    w: &mut impl Write,
+    state: &ServerState,
+    id: u64,
+    events: &std::sync::mpsc::Receiver<TokenEvent>,
+    timeout: Duration,
+) {
+    if write_sse_headers(w).is_err() {
+        return;
+    }
+    let model = &state.cfg.model;
+    loop {
+        match events.recv_timeout(timeout) {
+            Ok(TokenEvent::Started { .. }) => {}
+            Ok(TokenEvent::Token { text, .. }) => {
+                let chunk = chunk_json(model, id, &text, None).to_string();
+                if write_sse_data(w, &chunk).is_err() {
+                    return; // client gone; engine will cancel
+                }
+            }
+            Ok(TokenEvent::Done { reason, .. }) => {
+                let last = chunk_json(model, id, "", Some(reason)).to_string();
+                let _ = write_sse_data(w, &last);
+                let _ = write_sse_data(w, "[DONE]");
+                return;
+            }
+            Ok(TokenEvent::Failed { error, .. }) => {
+                let payload = error_json("internal_error", &error).to_string();
+                let _ = write_sse_data(w, &payload);
+                let _ = write_sse_data(w, "[DONE]");
+                return;
+            }
+            Err(_) => {
+                let payload =
+                    error_json("internal_error", "event stream stalled").to_string();
+                let _ = write_sse_data(w, &payload);
+                let _ = write_sse_data(w, "[DONE]");
+                return;
+            }
+        }
+    }
+}

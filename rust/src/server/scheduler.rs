@@ -1,0 +1,233 @@
+//! The scheduler thread: sole owner of the [`ServeEngine`].
+//!
+//! HTTP handler threads never touch the engine; they talk to this thread
+//! over a bounded `std::sync::mpsc` command channel. Each `Submit` carries
+//! the request, a per-token event sink, and a one-shot reply channel the
+//! scheduler answers with the admission verdict — so bounded admission
+//! (HTTP 429) is decided by exactly one authority, the engine's
+//! `try_submit`. The loop ticks the engine while it has work, blocks on
+//! the command channel when idle, and publishes a metrics snapshot the
+//! `/metrics` and `/healthz` handlers read lock-free of the engine.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::AdmissionError;
+use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::{BackendLimits, Request, ServeEngine, TokenEvent};
+
+/// Commands handler threads send the scheduler.
+pub enum SchedCmd {
+    Submit {
+        req: Request,
+        /// Receives Started/Token/Done/Failed for this request.
+        sink: Sender<TokenEvent>,
+        /// Answered once with the admission verdict.
+        reply: Sender<Result<(), AdmissionError>>,
+    },
+    /// Stop admitting, drain in-flight work, then exit the thread.
+    Shutdown,
+}
+
+/// State the scheduler shares with HTTP handlers.
+pub struct SchedulerShared {
+    /// Snapshot of the engine's metrics, refreshed every tick.
+    pub metrics: Mutex<ServeMetrics>,
+    pub limits: BackendLimits,
+    pub active: AtomicUsize,
+    pub pending: AtomicUsize,
+    /// True once shutdown started (health reports "draining").
+    pub draining: AtomicBool,
+}
+
+pub struct SchedulerHandle {
+    pub tx: SyncSender<SchedCmd>,
+    pub thread: JoinHandle<()>,
+    pub shared: Arc<SchedulerShared>,
+}
+
+/// How long the scheduler parks on the command channel when idle.
+const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// Snapshot cadence: cloning the metrics (histogram windows included) on
+/// every tick of a fast backend would spend the hot path on memcpy for a
+/// surface scraped at most every few seconds.
+const PUBLISH_EVERY: Duration = Duration::from_millis(50);
+
+/// Move the engine onto its own named thread. `channel_cap` bounds the
+/// command backlog; handler `try_send` failures are the fast-path 429
+/// under extreme burst, engine `try_submit` the authoritative one.
+pub fn spawn(engine: ServeEngine, channel_cap: usize) -> SchedulerHandle {
+    let shared = Arc::new(SchedulerShared {
+        metrics: Mutex::new(ServeMetrics::default()),
+        limits: engine.limits(),
+        active: AtomicUsize::new(0),
+        pending: AtomicUsize::new(0),
+        draining: AtomicBool::new(false),
+    });
+    let (tx, rx) = sync_channel(channel_cap.max(1));
+    let shared2 = shared.clone();
+    let thread = std::thread::Builder::new()
+        .name("sq-scheduler".into())
+        .spawn(move || run(engine, rx, shared2))
+        .expect("spawn scheduler thread");
+    SchedulerHandle { tx, thread, shared }
+}
+
+fn run(mut engine: ServeEngine, rx: Receiver<SchedCmd>, shared: Arc<SchedulerShared>) {
+    let mut shutting = false;
+    let mut last_publish: Option<Instant> = None;
+    loop {
+        // drain queued commands without blocking
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => handle_cmd(cmd, &mut engine, &mut shutting, &shared),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    shutting = true;
+                    break;
+                }
+            }
+        }
+
+        if engine.has_work() {
+            if let Err(e) = engine.step() {
+                // A backend fault must not kill the serving loop: fail
+                // everything in flight (subscribers get Failed) and keep
+                // accepting — the next tick starts clean.
+                eprintln!("[serve-http] backend error, aborting in-flight work: {e:#}");
+                engine.abort_all(&format!("backend failure: {e:#}"));
+            }
+            if last_publish.map_or(true, |t| t.elapsed() >= PUBLISH_EVERY) {
+                publish(&engine, &shared);
+                last_publish = Some(Instant::now());
+            }
+            continue;
+        }
+
+        if last_publish.map_or(true, |t| t.elapsed() >= PUBLISH_EVERY) {
+            publish(&engine, &shared);
+            last_publish = Some(Instant::now());
+        }
+        if shutting {
+            break;
+        }
+        match rx.recv_timeout(IDLE_POLL) {
+            Ok(cmd) => handle_cmd(cmd, &mut engine, &mut shutting, &shared),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    publish(&engine, &shared);
+}
+
+fn handle_cmd(
+    cmd: SchedCmd,
+    engine: &mut ServeEngine,
+    shutting: &mut bool,
+    shared: &SchedulerShared,
+) {
+    match cmd {
+        SchedCmd::Submit { req, sink, reply } => {
+            let verdict = if *shutting {
+                // refuse new work while draining; 429 tells clients to retry
+                // against a healthy replica
+                engine.metrics.rejected += 1;
+                Err(AdmissionError::QueueFull { cap: 0 })
+            } else {
+                engine.try_submit(req, Some(sink))
+            };
+            let _ = reply.send(verdict);
+        }
+        SchedCmd::Shutdown => {
+            *shutting = true;
+            shared.draining.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+fn publish(engine: &ServeEngine, shared: &SchedulerShared) {
+    shared.active.store(engine.active(), Ordering::Relaxed);
+    shared.pending.store(engine.pending(), Ordering::Relaxed);
+    if let Ok(mut m) = shared.metrics.lock() {
+        *m = engine.metrics.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::channel;
+
+    use super::*;
+    use crate::coordinator::{ServeConfig, SyntheticBackend};
+
+    fn spawn_synthetic(queue_cap: usize) -> SchedulerHandle {
+        let engine = ServeEngine::new(
+            Box::new(SyntheticBackend::new(2).with_seq(32, 64)),
+            ServeConfig { max_new_cap: 8, seed: 3, queue_cap },
+        );
+        spawn(engine, queue_cap + 4)
+    }
+
+    #[test]
+    fn submits_round_trip_through_the_thread() {
+        let h = spawn_synthetic(8);
+        let (sink, events) = channel();
+        let (rtx, rrx) = channel();
+        h.tx.send(SchedCmd::Submit {
+            req: Request::new(1, vec![5, 6]).with_max_new(3),
+            sink,
+            reply: rtx,
+        })
+        .unwrap();
+        rrx.recv_timeout(Duration::from_secs(5))
+            .expect("reply arrives")
+            .expect("admitted");
+        let mut tokens = 0;
+        loop {
+            match events.recv_timeout(Duration::from_secs(5)).expect("event") {
+                TokenEvent::Token { .. } => tokens += 1,
+                TokenEvent::Done { response, .. } => {
+                    assert_eq!(response.tokens.len(), 3);
+                    break;
+                }
+                TokenEvent::Started { .. } => {}
+                TokenEvent::Failed { error, .. } => panic!("failed: {error}"),
+            }
+        }
+        assert_eq!(tokens, 3);
+        h.tx.send(SchedCmd::Shutdown).unwrap();
+        h.thread.join().unwrap();
+        assert!(h.shared.draining.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn shutdown_refuses_new_work() {
+        let h = spawn_synthetic(8);
+        h.tx.send(SchedCmd::Shutdown).unwrap();
+        // the scheduler may already have exited; a refused send is also a
+        // correct outcome
+        let (sink, _events) = channel();
+        let (rtx, rrx) = channel();
+        let sent = h
+            .tx
+            .send(SchedCmd::Submit {
+                req: Request::new(9, vec![1]),
+                sink,
+                reply: rtx,
+            })
+            .is_ok();
+        if sent {
+            if let Ok(verdict) = rrx.recv_timeout(Duration::from_secs(5)) {
+                assert!(verdict.is_err(), "draining scheduler must refuse work");
+            }
+        }
+        drop(h.tx);
+        h.thread.join().unwrap();
+    }
+}

@@ -81,6 +81,31 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    // -- optional-field accessors (the HTTP wire format's bread and butter) --
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.opt(key).and_then(|v| v.as_str().ok())
+    }
+
+    pub fn opt_f64(&self, key: &str) -> Option<f64> {
+        self.opt(key).and_then(|v| v.as_f64().ok())
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.opt(key).and_then(|v| v.as_usize().ok())
+    }
+
+    pub fn opt_bool(&self, key: &str) -> Option<bool> {
+        self.opt(key).and_then(|v| v.as_bool().ok())
+    }
+
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -116,6 +141,19 @@ impl Json {
 
     pub fn arr(v: Vec<Json>) -> Json {
         Json::Arr(v)
+    }
+
+    pub fn bool(b: bool) -> Json {
+        Json::Bool(b)
+    }
+
+    /// Integer-valued number (serialized without a fraction).
+    pub fn int(x: i64) -> Json {
+        Json::Num(x as f64)
+    }
+
+    pub fn usize(x: usize) -> Json {
+        Json::Num(x as f64)
     }
 
     // -- serialization --------------------------------------------------------
@@ -376,5 +414,34 @@ mod tests {
     fn nested_access() {
         let v = Json::parse(r#"{"m": {"n": 7}}"#).unwrap();
         assert_eq!(v.get("m").unwrap().usize_at("n").unwrap(), 7);
+    }
+
+    #[test]
+    fn wire_helpers() {
+        let v = Json::parse(
+            r#"{"stream": true, "max_tokens": 8, "temperature": 0.5, "p": "hi", "n": null}"#,
+        )
+        .unwrap();
+        assert_eq!(v.opt_bool("stream"), Some(true));
+        assert_eq!(v.opt_usize("max_tokens"), Some(8));
+        assert_eq!(v.opt_f64("temperature"), Some(0.5));
+        assert_eq!(v.opt_str("p"), Some("hi"));
+        assert_eq!(v.opt_str("n"), None, "null reads as absent");
+        assert_eq!(v.opt_str("missing"), None);
+
+        let out = Json::obj(vec![
+            ("ok", Json::bool(true)),
+            ("count", Json::int(-3)),
+            ("size", Json::usize(7)),
+        ])
+        .to_string();
+        assert_eq!(out, r#"{"count":-3,"ok":true,"size":7}"#);
+    }
+
+    #[test]
+    fn sse_control_chars_escaped() {
+        // newlines inside a streamed token must never split an SSE frame
+        let s = Json::str("a\nb\u{1}").to_string();
+        assert_eq!(s, "\"a\\nb\\u0001\"");
     }
 }

@@ -1,0 +1,265 @@
+//! HTTP front-end integration: concurrent streaming and non-streaming
+//! completions against a live `server::serve` instance over real sockets.
+//! Runs on the deterministic SyntheticBackend — no artifacts, no PJRT —
+//! so this suite exercises the full network path in plain `cargo test`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use singlequant::coordinator::{ServeConfig, ServeEngine, SyntheticBackend};
+use singlequant::server::{serve, ServerConfig};
+use singlequant::util::json::Json;
+
+/// Minimal HTTP/1.1 client: one request, read to EOF (the server closes
+/// every connection). Returns (status, head, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String, String) {
+    let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5))
+        .expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("write request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {raw:?}"));
+    let (head, payload) = raw.split_once("\r\n\r\n").unwrap_or((raw.as_str(), ""));
+    (status, head.to_string(), payload.to_string())
+}
+
+fn completion_body(prompt: &str, max_tokens: usize, stream: bool) -> String {
+    Json::obj(vec![
+        ("prompt", Json::str(prompt)),
+        ("max_tokens", Json::usize(max_tokens)),
+        ("stream", Json::bool(stream)),
+    ])
+    .to_string()
+}
+
+fn start_server(
+    batch: usize,
+    queue_cap: usize,
+    delay: Duration,
+) -> singlequant::server::ServerHandle {
+    let engine = ServeEngine::new(
+        Box::new(SyntheticBackend::new(batch).with_seq(64, 128).with_delay(delay)),
+        ServeConfig { max_new_cap: 16, seed: 11, queue_cap },
+    );
+    serve(engine, ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        default_max_tokens: 8,
+        default_deadline_ms: None,
+        model: "sq-test".to_string(),
+    })
+    .expect("server starts")
+}
+
+#[test]
+fn eight_plus_concurrent_mixed_clients() {
+    let handle = start_server(4, 32, Duration::from_millis(1));
+    let addr = handle.addr();
+
+    let clients: Vec<_> = (0..10)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let streaming = i % 2 == 1;
+                let body = completion_body(&format!("hello-{i}"), 6, streaming);
+                let (status, head, payload) =
+                    http(addr, "POST", "/v1/completions", Some(&body));
+                assert_eq!(status, 200, "client {i}: {payload}");
+                if streaming {
+                    assert!(
+                        head.contains("text/event-stream"),
+                        "client {i}: not SSE: {head}"
+                    );
+                    let frames: Vec<&str> = payload
+                        .split("\n\n")
+                        .filter(|f| !f.is_empty())
+                        .map(|f| f.strip_prefix("data: ").expect("data frame"))
+                        .collect();
+                    assert_eq!(*frames.last().unwrap(), "[DONE]", "client {i}");
+                    // 6 token chunks + 1 finishing chunk + [DONE]
+                    assert_eq!(frames.len(), 8, "client {i}: {frames:?}");
+                    for f in &frames[..6] {
+                        let j = Json::parse(f).expect("chunk json");
+                        assert_eq!(j.str_at("object").unwrap(), "text_completion.chunk");
+                    }
+                    let last = Json::parse(frames[6]).unwrap();
+                    let choice = &last.get("choices").unwrap().as_arr().unwrap()[0];
+                    assert_eq!(choice.str_at("finish_reason").unwrap(), "length");
+                } else {
+                    let j = Json::parse(&payload).expect("completion json");
+                    assert_eq!(j.str_at("object").unwrap(), "text_completion");
+                    let choice = &j.get("choices").unwrap().as_arr().unwrap()[0];
+                    assert_eq!(choice.str_at("finish_reason").unwrap(), "length");
+                    let usage = j.get("usage").unwrap();
+                    assert_eq!(usage.usize_at("completion_tokens").unwrap(), 6);
+                    assert_eq!(
+                        usage.usize_at("prompt_tokens").unwrap(),
+                        format!("hello-{i}").len()
+                    );
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+
+    // health + metrics reflect the traffic (give the scheduler one idle
+    // publish cycle so the final tick's snapshot is visible)
+    std::thread::sleep(Duration::from_millis(80));
+    let (status, _, health) = http(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    let h = Json::parse(&health).unwrap();
+    assert_eq!(h.str_at("status").unwrap(), "ok");
+    assert_eq!(h.str_at("model").unwrap(), "sq-test");
+
+    let (status, _, metrics) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(metrics.contains("singlequant_requests_completed_total 10"), "{metrics}");
+    assert!(metrics.contains("singlequant_ttft_seconds{quantile=\"0.5\"}"));
+    assert!(metrics.contains("singlequant_per_token_seconds{quantile=\"0.95\"}"));
+    assert!(metrics.contains("singlequant_http_requests_total"));
+    assert!(metrics.contains("singlequant_http_streams_opened_total 5"), "{metrics}");
+
+    handle.shutdown();
+}
+
+#[test]
+fn overload_returns_429_not_hangs() {
+    // one slow slot, queue of one: a burst must bounce with 429s
+    let handle = start_server(1, 1, Duration::from_millis(30));
+    let addr = handle.addr();
+
+    let clients: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = completion_body(&format!("burst-{i}"), 4, false);
+                let (status, head, _) =
+                    http(addr, "POST", "/v1/completions", Some(&body));
+                if status == 429 {
+                    assert!(head.contains("Retry-After"), "429 must advise retry");
+                }
+                status
+            })
+        })
+        .collect();
+    let statuses: Vec<u16> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    assert!(
+        statuses.iter().any(|&s| s == 429),
+        "burst of 8 into queue_cap=1 must shed load: {statuses:?}"
+    );
+    assert!(
+        statuses.iter().any(|&s| s == 200),
+        "some of the burst must be served: {statuses:?}"
+    );
+    assert!(
+        statuses.iter().all(|&s| s == 200 || s == 429),
+        "only 200/429 expected: {statuses:?}"
+    );
+
+    let (_, _, metrics) = http(addr, "GET", "/metrics", None);
+    let rejected: f64 = metrics
+        .lines()
+        .find(|l| l.starts_with("singlequant_requests_rejected_total"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0);
+    let http_429: f64 = metrics
+        .lines()
+        .find(|l| l.starts_with("singlequant_http_responses_429_total"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0);
+    assert!(rejected + http_429 >= 1.0, "rejections must be visible in metrics");
+
+    handle.shutdown();
+}
+
+#[test]
+fn deadline_cuts_off_with_partial_output() {
+    let handle = start_server(1, 8, Duration::from_millis(20));
+    let addr = handle.addr();
+    let body = Json::obj(vec![
+        ("prompt", Json::str("slow")),
+        ("max_tokens", Json::usize(16)),
+        ("deadline_ms", Json::usize(1)),
+    ])
+    .to_string();
+    let (status, _, payload) = http(addr, "POST", "/v1/completions", Some(&body));
+    assert_eq!(status, 200);
+    let j = Json::parse(&payload).unwrap();
+    let choice = &j.get("choices").unwrap().as_arr().unwrap()[0];
+    assert_eq!(choice.str_at("finish_reason").unwrap(), "deadline");
+    assert!(
+        j.get("usage").unwrap().usize_at("completion_tokens").unwrap() < 16,
+        "deadline must stop generation early"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_4xx() {
+    let handle = start_server(2, 8, Duration::ZERO);
+    let addr = handle.addr();
+
+    let (status, _, _) = http(addr, "POST", "/v1/completions", Some("not json"));
+    assert_eq!(status, 400);
+    let (status, _, payload) = http(addr, "POST", "/v1/completions", Some("{}"));
+    assert_eq!(status, 400);
+    assert!(payload.contains("prompt"));
+    let (status, _, _) = http(
+        addr,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt": "x", "stream": "yes"}"#),
+    );
+    assert_eq!(status, 400);
+    // prompt longer than the lowered prefill width
+    let long = "x".repeat(65);
+    let (status, _, _) =
+        http(addr, "POST", "/v1/completions", Some(&completion_body(&long, 2, false)));
+    assert_eq!(status, 400);
+
+    let (status, _, _) = http(addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, _, _) = http(addr, "DELETE", "/healthz", None);
+    assert_eq!(status, 405);
+
+    handle.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_work() {
+    let handle = start_server(2, 8, Duration::from_millis(15));
+    let addr = handle.addr();
+
+    // a request that takes ~8 ticks, launched just before shutdown
+    let client = std::thread::spawn(move || {
+        http(addr, "POST", "/v1/completions", Some(&completion_body("drain", 8, true)))
+    });
+    std::thread::sleep(Duration::from_millis(40)); // let it get admitted
+    handle.shutdown();
+
+    let (status, _, payload) = client.join().unwrap();
+    assert_eq!(status, 200, "in-flight request must finish during drain");
+    assert!(payload.trim_end().ends_with("data: [DONE]"), "{payload:?}");
+
+    // the listener is gone: new connections fail
+    assert!(
+        TcpStream::connect_timeout(&addr, Duration::from_millis(300)).is_err(),
+        "server must stop accepting after shutdown"
+    );
+}

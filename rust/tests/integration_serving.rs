@@ -6,14 +6,25 @@
 use std::sync::Arc;
 
 use singlequant::coordinator::tokenizer::{decode, encode};
-use singlequant::coordinator::{Request, ServeConfig, ServeEngine};
+use singlequant::coordinator::{Request, ServeConfig, ServeEngine, TokenEvent};
 use singlequant::model::Weights;
 use singlequant::pipeline::{quantize, Method, PipelineOptions};
-use singlequant::runtime::{Engine, ModelRunner};
+use singlequant::runtime::{Engine, ModelRunner, RunnerBackend};
 use singlequant::util::sqt::SqtFile;
 
 fn artifacts_dir() -> String {
     format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Collect finished responses out of a tick's event stream.
+fn responses_of(events: Vec<TokenEvent>) -> Vec<singlequant::coordinator::Response> {
+    events
+        .into_iter()
+        .filter_map(|ev| match ev {
+            TokenEvent::Done { response, .. } => Some(response),
+            _ => None,
+        })
+        .collect()
 }
 
 fn have_artifacts() -> bool {
@@ -41,7 +52,10 @@ fn make_engine(method: Method, batch: usize) -> (ServeEngine, Vec<u16>) {
     .unwrap();
     let runner = Arc::new(ModelRunner::new(engine, &qm).unwrap());
     (
-        ServeEngine::new(runner, ServeConfig { batch, max_new_cap: 16, seed: 3 }),
+        ServeEngine::new(
+            Box::new(RunnerBackend::new(runner, batch)),
+            ServeConfig { max_new_cap: 16, seed: 3, ..Default::default() },
+        ),
         corpus,
     )
 }
@@ -57,12 +71,10 @@ fn serves_more_requests_than_slots() {
     for id in 0..10u64 {
         let start = 37 * id as usize % (corpus.len() - 80);
         let len = 8 + (id as usize * 7) % 40;
-        serve.submit(Request {
-            id,
-            prompt_tokens: corpus[start..start + len].to_vec(),
-            max_new_tokens: 4 + (id as usize % 8),
-            temperature: None,
-        });
+        serve.submit(
+            Request::new(id, corpus[start..start + len].to_vec())
+                .with_max_new(4 + (id as usize % 8)),
+        );
     }
     let responses = serve.run_to_completion().unwrap();
     assert_eq!(responses.len(), 10);
@@ -111,34 +123,22 @@ fn batch_isolation_mid_flight_joins() {
     // same request served while other requests join mid-flight.
     let (mut solo, corpus) = make_engine(Method::Fp16, 4);
     let prompt = corpus[500..540].to_vec();
-    solo.submit(Request {
-        id: 0,
-        prompt_tokens: prompt.clone(),
-        max_new_tokens: 8,
-        temperature: None,
-    });
+    solo.submit(Request::new(0, prompt.clone()).with_max_new(8));
     let solo_resp = &solo.run_to_completion().unwrap()[0];
 
     let (mut busy, _) = make_engine(Method::Fp16, 4);
-    busy.submit(Request {
-        id: 0,
-        prompt_tokens: prompt.clone(),
-        max_new_tokens: 8,
-        temperature: None,
-    });
+    busy.submit(Request::new(0, prompt.clone()).with_max_new(8));
     // first tick admits request 0
-    let mut done = busy.step().unwrap();
+    let mut done: Vec<_> = responses_of(busy.step().unwrap());
     // now add competitors that join while request 0 decodes
     for id in 1..6u64 {
-        busy.submit(Request {
-            id,
-            prompt_tokens: corpus[(100 * id as usize)..(100 * id as usize + 20)].to_vec(),
-            max_new_tokens: 6,
-            temperature: None,
-        });
+        busy.submit(
+            Request::new(id, corpus[(100 * id as usize)..(100 * id as usize + 20)].to_vec())
+                .with_max_new(6),
+        );
     }
     while busy.pending() > 0 || busy.active() > 0 {
-        done.extend(busy.step().unwrap());
+        done.extend(responses_of(busy.step().unwrap()));
     }
     let busy_resp = done.iter().find(|r| r.id == 0).unwrap();
     assert_eq!(

@@ -1,0 +1,281 @@
+//! Offline stand-in for the `xla` (PJRT) bindings crate.
+//!
+//! The real dependency is xla-rs over xla_extension 0.5.1, which needs a
+//! native XLA build that is not present in this container. This stub keeps
+//! the whole workspace compiling and lets every host-side data path
+//! (literals, buffers, shapes) behave normally; only `compile`/`execute`
+//! fail, with an error that names the missing runtime. All call sites in
+//! `singlequant` gate on `artifacts/manifest.json` before touching PJRT,
+//! so tests and examples skip cleanly instead of hitting these errors.
+//!
+//! API surface mirrored (the subset `singlequant::runtime` uses):
+//! `PjRtClient` (cpu, platform_name, buffer_from_host_buffer,
+//! buffer_from_host_literal, compile), `PjRtBuffer` (to_literal_sync),
+//! `PjRtLoadedExecutable` (execute, execute_b), `Literal` (vec1, scalar,
+//! reshape, to_vec, decompose_tuple), `HloModuleProto` (from_text_file),
+//! `XlaComputation` (from_proto).
+
+use std::fmt;
+
+/// Error type matching the shape the real bindings expose (an enum-ish
+/// opaque error that is Display + std::error::Error).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the real PJRT runtime; this build uses the offline \
+         xla stub (rust/vendor/xla-stub). Point Cargo.toml's `xla` dependency \
+         at the real bindings to execute AOT artifacts."
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Element types
+// ---------------------------------------------------------------------------
+
+/// Host element types a literal can hold. Public only because the
+/// [`NativeType`] conversion trait mentions it; not part of the real API.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Sealed-ish conversion trait for the element types the runtime uses.
+pub trait NativeType: Copy + 'static {
+    fn wrap(data: Vec<Self>) -> Payload
+    where
+        Self: Sized;
+    fn unwrap(p: &Payload) -> Option<&[Self]>
+    where
+        Self: Sized;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<&[f32]> {
+        match p {
+            Payload::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<&[i32]> {
+        match p {
+            Payload::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal
+// ---------------------------------------------------------------------------
+
+/// A host tensor value (or tuple of them).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(xs: &[T]) -> Literal {
+        Literal { dims: vec![xs.len() as i64], payload: T::wrap(xs.to_vec()) }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { dims: vec![], payload: Payload::F32(vec![v]) }
+    }
+
+    fn elem_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if matches!(self.payload, Payload::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if want as usize != self.elem_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.elem_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    /// Copy out as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.payload, Payload::Tuple(Vec::new())) {
+            Payload::Tuple(parts) => Ok(parts),
+            other => {
+                // A non-tuple "tuple" of one, matching the real bindings'
+                // tolerance for single-output executables.
+                self.payload = other.clone();
+                Ok(vec![Literal { dims: self.dims.clone(), payload: other }])
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Buffers + client + executables
+// ---------------------------------------------------------------------------
+
+/// A "device" buffer; on the stub it is just a host literal.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A compiled executable handle. The stub can never produce one, but the
+/// type must exist for struct fields and signatures.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (PJRT unavailable)".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(PjRtBuffer { lit: Literal::vec1(data).reshape(&dims)? })
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module text (held verbatim; only the real bindings parse it).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn buffers_hold_data() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c.buffer_from_host_buffer(&[7i32, 8], &[2], None).unwrap();
+        assert_eq!(b.to_literal_sync().unwrap().to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn execution_is_gated() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { _text: String::new() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = c.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
