@@ -1,25 +1,185 @@
-//! `cargo bench --bench bench_inference` — Fig. 3's measurement core:
-//! prefill / decode-step latency vs batch size for the fp32 and W4A4
-//! (SingleQuant) runtime graphs, plus the serving coordinator's
-//! end-to-end throughput at each batch width.
+//! `cargo bench --bench bench_inference` — the serving-performance
+//! measurement surface.
+//!
+//! Section 1 (always runs, no artifacts needed): the native CPU kernels —
+//! f32 vs fused-dequant packed matmul across thread counts, and the
+//! native model's prefill vs KV-cached decode tokens/sec — plus an
+//! end-to-end coordinator run over `NativeBackend`. Results are also
+//! written to `BENCH_inference.json` so the perf trajectory is machine-
+//! readable across commits.
+//!
+//! Section 2 (requires `make artifacts`): the Fig. 3 PJRT measurements —
+//! prefill/decode latency vs batch size for fp32 and W4A4 graphs.
+//!
+//! `--smoke` (used by CI) shrinks the timing budget and skips the
+//! artifact-gated section; it exists to catch kernel rot, not to measure.
 
 use std::sync::Arc;
 
 use singlequant::coordinator::{Request, ServeConfig, ServeEngine};
-use singlequant::model::Weights;
+use singlequant::model::{ModelConfig, NativeModel, Weights};
 use singlequant::pipeline::{quantize, Method, PipelineOptions};
-use singlequant::runtime::{Engine, ModelRunner, RunnerBackend};
-use singlequant::util::bench::{bench_for, header};
+use singlequant::quant::repack::RepackedWeight;
+use singlequant::runtime::{Engine, ModelRunner, NativeBackend, RunnerBackend};
+use singlequant::tensor::kernels::{matmul_packed, matmul_threaded};
+use singlequant::tensor::Tensor;
+use singlequant::util::bench::{bench_for, header, BenchStats};
+use singlequant::util::json::Json;
 use singlequant::util::rng::Rng;
 use singlequant::util::sqt::SqtFile;
 
-fn main() {
-    let dir = std::env::var("SQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
-        eprintln!("bench_inference: run `make artifacts` first");
-        return;
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn entry(report: &mut Vec<Json>, s: &BenchStats, extra: Vec<(&str, Json)>) {
+    let mut pairs = vec![
+        ("name", Json::str(s.name.clone())),
+        ("mean_s", Json::num(s.mean_s)),
+        ("p50_s", Json::num(s.p50_s)),
+        ("p95_s", Json::num(s.p95_s)),
+        ("min_s", Json::num(s.min_s)),
+        ("iters", Json::usize(s.iters)),
+    ];
+    pairs.extend(extra);
+    report.push(Json::obj(pairs));
+}
+
+/// f32 vs packed matmul across thread counts on a serving-shaped GEMM.
+fn kernel_section(budget: f64, smoke: bool, report: &mut Vec<Json>) {
+    let (m, k, n) = if smoke { (16, 256, 256) } else { (32, 1024, 1024) };
+    let mut rng = Rng::new(11);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 0.5, &mut rng);
+    let packed = RepackedWeight::pack(&b, 4, 64).unwrap();
+
+    let f32_serial = bench_for(&format!("f32/serial {m}x{k}x{n}"), budget, || {
+        std::hint::black_box(a.matmul(&b).len());
+    });
+    println!("{}", f32_serial.row());
+    entry(report, &f32_serial, vec![("kind", Json::str("f32")), ("threads", Json::usize(1))]);
+
+    let mut packed4_mean = f64::INFINITY;
+    for &t in &THREAD_SWEEP {
+        let s = bench_for(&format!("f32/threads={t} {m}x{k}x{n}"), budget, || {
+            std::hint::black_box(matmul_threaded(&a, &b, t).len());
+        });
+        println!("{}", s.row());
+        entry(report, &s, vec![("kind", Json::str("f32_threaded")), ("threads", Json::usize(t))]);
+
+        let s = bench_for(&format!("packed4/threads={t} {m}x{k}x{n}"), budget, || {
+            std::hint::black_box(matmul_packed(&a, &packed, t).len());
+        });
+        println!("{}", s.row());
+        if t == 4 {
+            packed4_mean = s.mean_s;
+        }
+        entry(report, &s, vec![("kind", Json::str("packed4")), ("threads", Json::usize(t))]);
     }
-    let engine = Arc::new(Engine::new(&dir).expect("engine"));
+    let speedup = f32_serial.mean_s / packed4_mean;
+    println!("packed4@4threads vs f32@1thread: {speedup:.2}x");
+    report.push(Json::obj(vec![
+        ("name", Json::str("speedup/packed4t4_vs_f32t1")),
+        ("kind", Json::str("derived")),
+        ("speedup", Json::num(speedup)),
+    ]));
+}
+
+/// Prefill vs KV-cached decode tokens/sec on the quantized demo model.
+fn serving_section(budget: f64, report: &mut Vec<Json>) {
+    let cfg = ModelConfig::demo();
+    let weights = Weights::random_init(&cfg, 1);
+    let mut rng = Rng::new(3);
+    let calib: Vec<u16> = (0..2048).map(|_| rng.below(256) as u16).collect();
+    let opts = PipelineOptions {
+        method: Method::singlequant(),
+        calib_seqs: 2,
+        calib_len: 32,
+        ..Default::default()
+    };
+    let qm = quantize(&cfg, &weights, &calib, &opts).expect("quantize demo model");
+    let prompt: Vec<u16> = (0..16).map(|_| rng.below(256) as u16).collect();
+    let prefill_prompt: Vec<u16> = (0..48).map(|_| rng.below(256) as u16).collect();
+
+    for &t in &[1usize, 2, 4] {
+        let model = NativeModel::from_quantized(&qm, 4, t).expect("native model");
+
+        let s = bench_for(&format!("native/prefill48 threads={t}"), budget, || {
+            let mut kv = model.new_kv();
+            std::hint::black_box(model.prefill(&mut kv, &prefill_prompt).unwrap().len());
+        });
+        println!("{}  ({:.0} tok/s)", s.row(), 48.0 / s.mean_s);
+        entry(report, &s, vec![
+            ("kind", Json::str("prefill")),
+            ("threads", Json::usize(t)),
+            ("tokens_per_s", Json::num(48.0 / s.mean_s)),
+        ]);
+
+        // cache refills happen outside the timed region so the stats
+        // measure pure decode steps
+        let mut kv = model.new_kv();
+        model.prefill(&mut kv, &prompt).unwrap();
+        let mut times = Vec::new();
+        let start = std::time::Instant::now();
+        while start.elapsed().as_secs_f64() < budget || times.len() < 3 {
+            if kv.pos + 1 >= cfg.max_seq {
+                kv.reset();
+                model.prefill(&mut kv, &prompt).unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(model.decode(&mut kv, 7).unwrap().len());
+            times.push(t0.elapsed().as_secs_f64());
+            if times.len() > 10_000 {
+                break;
+            }
+        }
+        let s = BenchStats::from_times(&format!("native/decode threads={t}"), times);
+        println!("{}  ({:.0} tok/s)", s.row(), 1.0 / s.mean_s);
+        entry(report, &s, vec![
+            ("kind", Json::str("decode")),
+            ("threads", Json::usize(t)),
+            ("tokens_per_s", Json::num(1.0 / s.mean_s)),
+        ]);
+    }
+
+    // end-to-end: continuous batcher over the native backend
+    let model = NativeModel::from_quantized(&qm, 4, 0).expect("native model");
+    let mut serve = ServeEngine::new(
+        Box::new(NativeBackend::new(model, 4)),
+        ServeConfig { max_new_cap: 8, seed: 3, ..Default::default() },
+    );
+    for id in 0..8u64 {
+        let start = (id as usize * 97) % (calib.len() - 32);
+        serve.submit(
+            Request::new(id, calib[start..start + 8 + (id as usize % 16)].to_vec())
+                .with_max_new(8),
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let responses = serve.run_to_completion().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let tput = serve.metrics.generated_tokens as f64 / wall;
+    println!(
+        "native/serve-e2e b=4: {} reqs in {:.2}s -> {:.1} gen tok/s \
+         (prefill/decode split {:.0}%/{:.0}%)",
+        responses.len(),
+        wall,
+        tput,
+        serve.metrics.prefill_time_fraction() * 100.0,
+        (1.0 - serve.metrics.prefill_time_fraction()) * 100.0,
+    );
+    report.push(Json::obj(vec![
+        ("name", Json::str("native/serve-e2e b=4")),
+        ("kind", Json::str("serve_e2e")),
+        ("requests", Json::usize(responses.len())),
+        ("wall_s", Json::num(wall)),
+        ("tokens_per_s", Json::num(tput)),
+        ("decode_tokens_per_s", Json::num(serve.metrics.decode_only_tokens_per_s())),
+        ("prefill_fraction", Json::num(serve.metrics.prefill_time_fraction())),
+    ]));
+}
+
+/// The artifact-gated PJRT section (Fig. 3 shapes).
+fn pjrt_section(dir: &str) {
+    let engine = Arc::new(Engine::new(dir).expect("engine"));
     let model = "sq-m";
     let cfg = engine.config(model).unwrap();
     let weights = Weights::load(&format!("{dir}/ckpt/{model}.sqt")).unwrap();
@@ -31,7 +191,6 @@ fn main() {
         .unwrap()
         .to_vec();
 
-    println!("{}", header());
     let batches: Vec<usize> = engine
         .manifest
         .get("serve_batches")
@@ -87,5 +246,37 @@ fn main() {
             wall,
             serve.metrics.generated_tokens as f64 / wall
         );
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke" || a == "--test");
+    let budget = if smoke { 0.02 } else { 0.5 };
+
+    println!("{}", header());
+    let mut report: Vec<Json> = Vec::new();
+    kernel_section(budget, smoke, &mut report);
+    serving_section(budget, &mut report);
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("inference")),
+        ("smoke", Json::bool(smoke)),
+        ("entries", Json::arr(report)),
+    ]);
+    match std::fs::write("BENCH_inference.json", json.to_string()) {
+        Ok(()) => println!("wrote BENCH_inference.json"),
+        Err(e) => eprintln!("bench_inference: could not write json: {e}"),
+    }
+
+    if smoke {
+        return;
+    }
+    let dir = std::env::var("SQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        pjrt_section(&dir);
+    } else {
+        eprintln!("bench_inference: no artifacts at {dir}; skipped PJRT section \
+                   (run `make artifacts` for Fig. 3 shapes)");
     }
 }

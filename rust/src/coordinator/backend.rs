@@ -42,6 +42,13 @@ pub trait ServeBackend: Send {
     /// `[batch]`, PAD/0 in inactive slots). Returns logits `[batch,
     /// vocab]` and advances the KV cache in place.
     fn decode(&mut self, tokens: &[i32], positions: &[i32]) -> Result<Tensor>;
+
+    /// A slot finished (EOS/length/deadline/cancel/abort): drop any
+    /// per-slot backend state — e.g. the native backend frees the slot's
+    /// KV rows here. Backends whose per-slot state is overwritten on the
+    /// next prefill (the fixed-shape PJRT cache, the synthetic model) keep
+    /// the default no-op.
+    fn retire(&mut self, _slot: usize) {}
 }
 
 /// Deterministic model-free backend: the "token calculator".

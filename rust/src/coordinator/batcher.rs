@@ -30,7 +30,7 @@ use super::backend::{BackendLimits, ServeBackend};
 use super::events::{FinishReason, TokenEvent};
 use super::metrics::ServeMetrics;
 use super::request::{InFlight, Request, Response, MIN_TEMPERATURE};
-use super::tokenizer::{decode as tok_decode, decode_stream, EOS, PAD};
+use super::tokenizer::{decode as tok_decode, decode_stream, BOS, EOS, PAD};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -51,12 +51,17 @@ impl Default for ServeConfig {
     }
 }
 
-/// Why `try_submit` refused a request (the HTTP layer maps these to 429
-/// and 400 respectively).
+/// Why `try_submit` refused a request (the HTTP layer maps `QueueFull`
+/// to 429 and the rest to 400).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum AdmissionError {
     QueueFull { cap: usize },
     InvalidPrompt { len: usize, max: usize },
+    /// Prompt contains a token the backend cannot ingest: out of vocab
+    /// range, or PAD — which doubles as the in-band inactive-slot
+    /// sentinel of the prefill/decode waves, so letting it through would
+    /// truncate the prompt and desync per-slot KV state.
+    InvalidToken { token: u16 },
 }
 
 impl fmt::Display for AdmissionError {
@@ -67,6 +72,9 @@ impl fmt::Display for AdmissionError {
             }
             AdmissionError::InvalidPrompt { len, max } => {
                 write!(f, "prompt length {len} out of range (1..={max})")
+            }
+            AdmissionError::InvalidToken { token } => {
+                write!(f, "prompt token {token} not ingestible (PAD or out of vocab)")
             }
         }
     }
@@ -157,6 +165,15 @@ impl ServeEngine {
             .push_back(Queued { req, sink: Some(sink), enqueued: Instant::now() });
     }
 
+    /// A prompt token the backends cannot ingest: PAD (the in-band
+    /// inactive-slot sentinel) or anything outside the vocab.
+    fn bad_prompt_token(&self, req: &Request) -> Option<u16> {
+        req.prompt_tokens
+            .iter()
+            .copied()
+            .find(|&t| t == PAD || t as usize >= self.limits.vocab_size)
+    }
+
     /// Bounded admission: validates the prompt against graph limits and
     /// enforces `queue_cap`. Also normalizes the sampling temperature —
     /// the single clamp point; the sampler never re-clamps.
@@ -170,6 +187,10 @@ impl ServeEngine {
         if plen == 0 || plen > max {
             self.metrics.failed += 1;
             return Err(AdmissionError::InvalidPrompt { len: plen, max });
+        }
+        if let Some(token) = self.bad_prompt_token(&req) {
+            self.metrics.failed += 1;
+            return Err(AdmissionError::InvalidToken { token });
         }
         if self.queue.len() >= self.cfg.queue_cap {
             self.metrics.rejected += 1;
@@ -196,13 +217,17 @@ impl ServeEngine {
     /// non-finite entries are skipped, ties resolve to the lowest index,
     /// and a row with no finite logit deterministically returns EOS
     /// (ending the request) instead of silently emitting token 0.
+    /// PAD and BOS are never sampled: PAD doubles as the in-band
+    /// inactive-slot sentinel of the decode wave (a sampled PAD would
+    /// desync per-slot KV state), and BOS is not a generable token.
     /// Temperatures arrive pre-clamped from admission.
     fn sample(rng: &mut Rng, logits: &[f32], temperature: Option<f32>) -> u16 {
+        let masked = |i: usize| i == PAD as usize || i == BOS as usize;
         match temperature {
             None => {
                 let mut best: Option<(usize, f32)> = None;
                 for (i, &x) in logits.iter().enumerate() {
-                    if x.is_finite() && best.map_or(true, |(_, bv)| x > bv) {
+                    if x.is_finite() && !masked(i) && best.map_or(true, |(_, bv)| x > bv) {
                         best = Some((i, x));
                     }
                 }
@@ -215,15 +240,22 @@ impl ServeEngine {
                 );
                 let maxv = logits
                     .iter()
-                    .copied()
-                    .filter(|x| x.is_finite())
-                    .fold(f32::NEG_INFINITY, f32::max);
+                    .enumerate()
+                    .filter(|(i, x)| x.is_finite() && !masked(*i))
+                    .fold(f32::NEG_INFINITY, |m, (_, &x)| m.max(x));
                 if !maxv.is_finite() {
                     return EOS;
                 }
                 let probs: Vec<f32> = logits
                     .iter()
-                    .map(|&x| if x.is_finite() { ((x - maxv) / t).exp() } else { 0.0 })
+                    .enumerate()
+                    .map(|(i, &x)| {
+                        if x.is_finite() && !masked(i) {
+                            ((x - maxv) / t).exp()
+                        } else {
+                            0.0
+                        }
+                    })
                     .collect();
                 let total: f32 = probs.iter().sum();
                 if !total.is_finite() || total <= 0.0 {
@@ -308,11 +340,18 @@ impl ServeEngine {
                 let q = loop {
                     let Some(q) = self.queue.pop_front() else { break 'slots };
                     let plen = q.req.prompt_tokens.len();
-                    if plen == 0 || plen > t {
+                    // invalid requests fail loudly instead of poisoning
+                    // the whole tick (same wording as the HTTP 400 path,
+                    // by construction)
+                    let err = if plen == 0 || plen > t {
+                        Some(AdmissionError::InvalidPrompt { len: plen, max: t })
+                    } else {
+                        self.bad_prompt_token(&q.req)
+                            .map(|token| AdmissionError::InvalidToken { token })
+                    };
+                    if let Some(err) = err {
                         self.metrics.failed += 1;
                         let id = q.req.id;
-                        // same wording as the HTTP 400 path, by construction
-                        let err = AdmissionError::InvalidPrompt { len: plen, max: t };
                         emit_unslotted(&q.sink, &mut events, TokenEvent::Failed {
                             id,
                             error: err.to_string(),
@@ -348,7 +387,9 @@ impl ServeEngine {
             if !admitted.is_empty() {
                 let t0 = Instant::now();
                 let logits = self.backend.prefill(&tokens, &admitted)?;
-                self.metrics.prefill_call.record(t0.elapsed().as_secs_f64());
+                let dt = t0.elapsed().as_secs_f64();
+                self.metrics.prefill_call.record(dt);
+                self.metrics.prefill_seconds += dt;
                 self.metrics.prefill_calls += 1;
                 let v = self.limits.vocab_size;
                 for &slot in &admitted {
@@ -402,6 +443,7 @@ impl ServeEngine {
             let logits = self.backend.decode(&toks, &pos)?;
             let wave = t0.elapsed().as_secs_f64();
             self.metrics.decode_step.record(wave);
+            self.metrics.decode_seconds += wave;
             self.metrics.decode_steps += 1;
             let v = self.limits.vocab_size;
             for i in 0..b {
@@ -413,6 +455,7 @@ impl ServeEngine {
                     inf.last_token = tok;
                     inf.pos += 1;
                     self.metrics.generated_tokens += 1;
+                    self.metrics.decode_tokens += 1;
                     self.metrics.per_token.record(wave);
                     if tok != EOS {
                         let id = inf.req.id;
@@ -470,6 +513,7 @@ impl ServeEngine {
 
     fn retire(&mut self, slot: usize, reason: FinishReason, events: &mut Vec<TokenEvent>) {
         let inf = self.slots[slot].take().unwrap();
+        self.backend.retire(slot);
         let now = Instant::now();
         let ttft = inf
             .first_token
@@ -512,6 +556,7 @@ impl ServeEngine {
         let mut events = Vec::new();
         for slot in 0..self.limits.batch {
             if let Some(inf) = self.slots[slot].take() {
+                self.backend.retire(slot);
                 self.metrics.failed += 1;
                 let id = inf.req.id;
                 emit_unslotted(&inf.sink, &mut events, TokenEvent::Failed {
@@ -666,6 +711,28 @@ mod tests {
     }
 
     #[test]
+    fn admission_rejects_uningestible_tokens() {
+        let mut e = engine(1);
+        // PAD in the prompt would be truncated by in-band-sentinel
+        // backends and desync per-slot KV state
+        assert_eq!(
+            e.try_submit(Request::new(0, vec![1, PAD, 2]), None),
+            Err(AdmissionError::InvalidToken { token: PAD })
+        );
+        let over = e.limits().vocab_size as u16;
+        assert_eq!(
+            e.try_submit(Request::new(1, vec![over]), None),
+            Err(AdmissionError::InvalidToken { token: over })
+        );
+        // the legacy unbounded submit path fails it at admit time
+        e.submit(Request::new(2, vec![PAD]).with_max_new(4));
+        let evs = e.step().unwrap();
+        assert!(matches!(evs.first(), Some(TokenEvent::Failed { .. })));
+        assert_eq!(e.active(), 0);
+        assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
     fn queued_deadline_expires_without_serving() {
         let mut e = engine(1);
         // deadline already in the past
@@ -759,6 +826,29 @@ mod tests {
             Some(1.0),
         );
         assert!(t == 0 || t == 2);
+    }
+
+    #[test]
+    fn sample_never_emits_pad_or_bos() {
+        // PAD is the in-band inactive-slot sentinel of the decode wave: a
+        // sampled PAD would desync per-slot backend KV state. BOS is not
+        // generable either. EOS remains a legal (terminating) sample.
+        let mut rng = Rng::new(0);
+        let mut logits = vec![0.0f32; 260];
+        logits[PAD as usize] = 10.0;
+        logits[BOS as usize] = 9.0;
+        logits[42] = 5.0;
+        assert_eq!(ServeEngine::sample(&mut rng, &logits, None), 42);
+        for _ in 0..50 {
+            let t = ServeEngine::sample(&mut rng, &logits, Some(0.7));
+            assert!(t != PAD && t != BOS, "sampled special token {t}");
+        }
+        // a row where only PAD/BOS are finite must end the request
+        let mut only_special = vec![f32::NAN; 260];
+        only_special[PAD as usize] = 1.0;
+        only_special[BOS as usize] = 2.0;
+        assert_eq!(ServeEngine::sample(&mut rng, &only_special, None), EOS);
+        assert_eq!(ServeEngine::sample(&mut rng, &only_special, Some(1.0)), EOS);
     }
 
     #[test]

@@ -63,6 +63,10 @@ pub struct ServeMetrics {
     pub queue_wait: Histogram,
     pub completed: usize,
     pub generated_tokens: usize,
+    /// Tokens sampled from decode waves specifically (first tokens come
+    /// from prefill logits and are excluded — see
+    /// [`decode_only_tokens_per_s`](Self::decode_only_tokens_per_s)).
+    pub decode_tokens: usize,
     pub prefill_tokens: usize,
     pub decode_steps: usize,
     pub prefill_calls: usize,
@@ -75,6 +79,10 @@ pub struct ServeMetrics {
     /// Requests that failed validation or died with the backend.
     pub failed: usize,
     pub wall_s: f64,
+    /// Cumulative wall time spent inside backend prefill calls.
+    pub prefill_seconds: f64,
+    /// Cumulative wall time spent inside backend decode waves.
+    pub decode_seconds: f64,
 }
 
 impl ServeMetrics {
@@ -85,15 +93,39 @@ impl ServeMetrics {
         self.generated_tokens as f64 / self.wall_s
     }
 
+    /// Decode throughput over time actually spent decoding (excludes
+    /// prefill time, prefill-sampled first tokens, queue idle, and
+    /// scheduler overhead) — the kernel-level tokens/sec the native
+    /// backend is tuned against.
+    pub fn decode_only_tokens_per_s(&self) -> f64 {
+        if self.decode_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.decode_tokens as f64 / self.decode_seconds
+    }
+
+    /// Fraction of backend time spent prefilling (vs decoding).
+    pub fn prefill_time_fraction(&self) -> f64 {
+        let total = self.prefill_seconds + self.decode_seconds;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.prefill_seconds / total
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "completed={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
+             decode_tput={:.1} tok/s prefill/decode split={:.0}%/{:.0}% \
              ttft p50={:.1}ms p95={:.1}ms latency p50={:.1}ms decode_step p50={:.2}ms \
              per_token p50={:.2}ms p95={:.2}ms rejected={} timeouts={} cancelled={}",
             self.completed,
             self.generated_tokens,
             self.wall_s,
             self.decode_tokens_per_s(),
+            self.decode_only_tokens_per_s(),
+            self.prefill_time_fraction() * 100.0,
+            (1.0 - self.prefill_time_fraction()) * 100.0,
             self.ttft.percentile(50.0) * 1e3,
             self.ttft.percentile(95.0) * 1e3,
             self.latency.percentile(50.0) * 1e3,
@@ -129,6 +161,9 @@ impl ServeMetrics {
                 "Requests failed by validation or backend errors.", self.failed as f64);
         counter(&mut o, "singlequant_tokens_generated_total",
                 "Tokens sampled across all requests.", self.generated_tokens as f64);
+        counter(&mut o, "singlequant_decode_tokens_total",
+                "Tokens sampled from decode waves (excludes prefill-sampled \
+                 first tokens).", self.decode_tokens as f64);
         counter(&mut o, "singlequant_prefill_tokens_total",
                 "Prompt tokens prefilled.", self.prefill_tokens as f64);
         counter(&mut o, "singlequant_decode_steps_total",
@@ -155,11 +190,21 @@ impl ServeMetrics {
         quantiles(&mut o, "singlequant_queue_wait_seconds",
                   "Admission-queue wait.", &self.queue_wait);
 
+        counter(&mut o, "singlequant_prefill_seconds_total",
+                "Wall time inside backend prefill calls.", self.prefill_seconds);
+        counter(&mut o, "singlequant_decode_seconds_total",
+                "Wall time inside backend decode waves.", self.decode_seconds);
+
         let _ = writeln!(o, "# HELP singlequant_throughput_tokens_per_second \
                              Decode throughput over the engine lifetime.");
         let _ = writeln!(o, "# TYPE singlequant_throughput_tokens_per_second gauge");
         let _ = writeln!(o, "singlequant_throughput_tokens_per_second {}",
                          self.decode_tokens_per_s());
+        let _ = writeln!(o, "# HELP singlequant_decode_tokens_per_second \
+                             Tokens per second of time spent decoding.");
+        let _ = writeln!(o, "# TYPE singlequant_decode_tokens_per_second gauge");
+        let _ = writeln!(o, "singlequant_decode_tokens_per_second {}",
+                         self.decode_only_tokens_per_s());
         o
     }
 }
@@ -197,6 +242,24 @@ mod tests {
         assert_eq!(h.samples.len(), WINDOW, "storage is bounded");
         // quantiles describe the most recent window only
         assert!(h.percentile(0.0) >= WINDOW as f64);
+    }
+
+    #[test]
+    fn decode_split_metrics() {
+        let mut m = ServeMetrics::default();
+        m.generated_tokens = 112;
+        m.decode_tokens = 100;
+        m.prefill_seconds = 1.0;
+        m.decode_seconds = 4.0;
+        assert!((m.decode_only_tokens_per_s() - 25.0).abs() < 1e-9);
+        assert!((m.prefill_time_fraction() - 0.2).abs() < 1e-9);
+        let text = m.prometheus();
+        assert!(text.contains("singlequant_prefill_seconds_total 1"));
+        assert!(text.contains("singlequant_decode_seconds_total 4"));
+        assert!(text.contains("singlequant_decode_tokens_per_second 25"));
+        // zero decode time must not divide by zero
+        assert_eq!(ServeMetrics::default().decode_only_tokens_per_s(), 0.0);
+        assert_eq!(ServeMetrics::default().prefill_time_fraction(), 0.0);
     }
 
     #[test]

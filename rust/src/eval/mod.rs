@@ -9,7 +9,56 @@ pub mod tasks;
 
 use anyhow::Result;
 
+use crate::model::NativeModel;
+use crate::runtime::ModelRunner;
+use crate::tensor::Tensor;
 use crate::util::json::Json;
+
+/// Anything that can score token sequences into per-position logits — the
+/// abstraction `perplexity` and the task suites run over. Implemented by
+/// the PJRT [`ModelRunner`] (AOT graphs) and the pure-CPU [`NativeModel`]
+/// (packed-weight kernels), so every eval runs on either backend.
+pub trait Scorer {
+    /// Per-sequence `[len, V]` logits (len clipped to `max_score_len`).
+    fn score_many(&self, seqs: &[Vec<u16>]) -> Result<Vec<Tensor>>;
+    /// Longest sequence this scorer can handle.
+    fn max_score_len(&self) -> usize;
+}
+
+impl Scorer for ModelRunner {
+    fn score_many(&self, seqs: &[Vec<u16>]) -> Result<Vec<Tensor>> {
+        ModelRunner::score_many(self, seqs)
+    }
+
+    fn max_score_len(&self) -> usize {
+        ModelRunner::max_score_len(self)
+    }
+}
+
+impl Scorer for NativeModel {
+    fn score_many(&self, seqs: &[Vec<u16>]) -> Result<Vec<Tensor>> {
+        seqs.iter()
+            .map(|s| {
+                let len = s.len().min(self.cfg.max_seq);
+                self.forward_full(&s[..len])
+            })
+            .collect()
+    }
+
+    fn max_score_len(&self) -> usize {
+        self.cfg.max_seq
+    }
+}
+
+impl<T: Scorer + ?Sized> Scorer for std::sync::Arc<T> {
+    fn score_many(&self, seqs: &[Vec<u16>]) -> Result<Vec<Tensor>> {
+        (**self).score_many(seqs)
+    }
+
+    fn max_score_len(&self) -> usize {
+        (**self).max_score_len()
+    }
+}
 
 /// One multiple-choice item.
 #[derive(Clone, Debug)]

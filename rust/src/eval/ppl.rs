@@ -1,15 +1,15 @@
-//! Perplexity over a token corpus, scored through the PJRT graphs (the
-//! Table 1/4/5/6/B.3 metric).
+//! Perplexity over a token corpus, scored through any [`Scorer`] — the
+//! PJRT graphs or the native CPU backend (the Table 1/4/5/6/B.3 metric).
 
 use anyhow::Result;
 
-use crate::runtime::ModelRunner;
+use super::Scorer;
 use crate::tensor::Tensor;
 
 /// exp(mean NLL) over non-overlapping windows of `window` tokens, up to
 /// `max_windows` windows.
-pub fn perplexity(
-    runner: &ModelRunner,
+pub fn perplexity<S: Scorer>(
+    runner: &S,
     corpus: &[u16],
     window: usize,
     max_windows: usize,

@@ -5,13 +5,12 @@
 use anyhow::Result;
 
 use super::ppl::token_nll;
-use super::{McItem, MmluSuite, TaskSuite};
+use super::{McItem, MmluSuite, Scorer, TaskSuite};
 use crate::coordinator::tokenizer::encode;
-use crate::runtime::ModelRunner;
 
 /// Accuracy on one item set. `max_items` trims for cheap sweeps.
-pub fn mc_accuracy(
-    runner: &ModelRunner,
+pub fn mc_accuracy<S: Scorer>(
+    runner: &S,
     items: &[McItem],
     max_items: usize,
     shot_prefix: Option<&str>,
@@ -73,8 +72,8 @@ pub fn mc_accuracy(
 }
 
 /// Per-task and average accuracy on the six zero-shot suites.
-pub fn zero_shot_suite(
-    runner: &ModelRunner,
+pub fn zero_shot_suite<S: Scorer>(
+    runner: &S,
     suite: &TaskSuite,
     max_items: usize,
 ) -> Result<(Vec<(String, f64)>, f64)> {
@@ -90,8 +89,8 @@ pub fn zero_shot_suite(
 }
 
 /// Per-domain and average accuracy on the MMLU-like suite.
-pub fn mmlu_suite(
-    runner: &ModelRunner,
+pub fn mmlu_suite<S: Scorer>(
+    runner: &S,
     suite: &MmluSuite,
     max_items: usize,
     five_shot: bool,

@@ -12,8 +12,11 @@
 //!                                  (graceful drain). Flags: --port N (default
 //!                                  8071), --host IP, --batch N, --max-new N,
 //!                                  --queue-cap N (admission bound -> HTTP 429),
-//!                                  --deadline-ms N, --synthetic (model-free
-//!                                  backend, no artifacts needed)
+//!                                  --deadline-ms N, --backend native|pjrt|
+//!                                  synthetic (native = threaded CPU kernels on
+//!                                  packed weights, no artifacts required;
+//!                                  --threads N caps its workers), --synthetic
+//!                                  (alias for --backend synthetic)
 //!   generate                     — one-shot text generation
 //!   reproduce --id <id>          — regenerate a paper table/figure (or `all`)
 //!   analyze-ste                  — the Fig. 2 STE instability study
@@ -30,14 +33,18 @@ use singlequant::coordinator::{
 };
 use singlequant::eval::ppl::perplexity;
 use singlequant::eval::tasks::zero_shot_suite;
+use singlequant::eval::TaskSuite;
 use singlequant::experiments::{run_experiment, EvalBudget, ExpContext};
-use singlequant::pipeline::{Method, PipelineOptions};
+use singlequant::model::{ModelConfig, NativeModel, Weights};
+use singlequant::pipeline::{quantize, Method, PipelineOptions};
 use singlequant::quant::WeightQuantizer;
 use singlequant::rotation::singlequant::SingleQuantConfig;
-use singlequant::runtime::{ModelRunner, RunnerBackend};
+use singlequant::runtime::{ModelRunner, NativeBackend, RunnerBackend};
 use singlequant::server::{serve as serve_http, ServerConfig};
 use singlequant::util::cli::Args;
+use singlequant::util::json::Json;
 use singlequant::util::rng::Rng;
+use singlequant::util::sqt::SqtFile;
 
 fn method_from_name(name: &str) -> Result<Method> {
     Ok(match name.to_lowercase().as_str() {
@@ -141,8 +148,11 @@ usage: singlequant <info|quantize|eval|serve|serve-http|generate|reproduce|analy
   --method NAME     fp16|rtn|smoothquant|awq|quarot|quip|spinquant|duquant|flatquant|singlequant
   --wq NAME         rtn | gptq | gptq-g32 | rtn-g32
   --wbits N --abits N --lct --fast
+  --backend NAME    native (threaded CPU, packed weights; eval + serve-http)
+                    | pjrt (AOT graphs) | synthetic (serve-http only)
+  --threads N       native-backend worker threads (0 = all cores)
   serve-http        --host IP --port N --batch N --max-new N --queue-cap N
-                    --deadline-ms N --synthetic (model-free demo backend)
+                    --deadline-ms N --backend native|pjrt|synthetic
   reproduce --id X  table1..table8 tableb3 fig1a fig1b fig2 fig3 fig4 all
   generate          --prompt TEXT --max-new N";
 
@@ -192,7 +202,64 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Load (config, checkpoint, calibration corpus) for the native backend:
+/// straight from the artifact files when they exist (no PJRT engine is
+/// ever constructed), or a built-in demo model so the native path runs on
+/// a bare machine.
+fn native_model_inputs(args: &Args) -> Result<(ModelConfig, Weights, Vec<u16>)> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest_path = format!("{dir}/manifest.json");
+    if std::path::Path::new(&manifest_path).exists() {
+        let manifest = Json::parse_file(&manifest_path)?;
+        let model = args.get_or("model", "sq-m");
+        let cfg = ModelConfig::from_manifest(&manifest, model)?;
+        let weights = Weights::load(&format!("{dir}/ckpt/{model}.sqt"))?;
+        let calib = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))?
+            .get("tokens")?
+            .as_u16()?
+            .to_vec();
+        Ok((cfg, weights, calib))
+    } else if args.get("model").is_some() || args.get("artifacts").is_some() {
+        // an explicitly requested checkpoint must never silently degrade
+        // to the random-weights demo model
+        bail!(
+            "--backend native: no manifest at {manifest_path}; the requested \
+             checkpoint is unavailable (omit --model/--artifacts to serve the \
+             built-in demo model)"
+        );
+    } else {
+        eprintln!(
+            "[native] no artifacts at {dir}; serving the built-in demo model \
+             (random weights, byte-level vocab)"
+        );
+        let cfg = ModelConfig::demo();
+        let weights = Weights::random_init(&cfg, 0x5142);
+        let mut rng = Rng::new(7);
+        let calib: Vec<u16> = (0..4096).map(|_| rng.below(256) as u16).collect();
+        Ok((cfg, weights, calib))
+    }
+}
+
+/// Quantize and wrap a checkpoint for pure-CPU serving.
+fn native_backend_from_args(
+    args: &Args,
+    batch: usize,
+) -> Result<(Box<dyn ServeBackend>, String)> {
+    let threads = args.usize_or("threads", 0)?;
+    let opts = opts_from_args(args)?;
+    let (cfg, weights, calib) = native_model_inputs(args)?;
+    let qm = quantize(&cfg, &weights, &calib, &opts)?;
+    let label = format!("{}/{}/native", cfg.name, opts.method.label());
+    let model = NativeModel::from_quantized(&qm, opts.weight_bits, threads)?;
+    Ok((Box::new(NativeBackend::new(model, batch)), label))
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
+    match args.get_or("backend", "pjrt") {
+        "native" => return cmd_eval_native(args),
+        "pjrt" => {}
+        other => bail!("unknown --backend {other:?} (native|pjrt)"),
+    }
     let ctx = ctx_from_args(args)?;
     let model = args.get_or("model", "sq-m");
     let opts = opts_from_args(args)?;
@@ -205,6 +272,50 @@ fn cmd_eval(args: &Args) -> Result<()> {
     println!("{model} [{}]: wiki ppl {p1:.3}  web ppl {p2:.3}", opts.method.label());
     let suite = ctx.tasks()?;
     let (per, avg) = zero_shot_suite(&runner, &suite, ctx.budget.task_items)?;
+    for (name, acc) in per {
+        println!("  {name:<14} {:.1}", acc * 100.0);
+    }
+    println!("  zero-shot avg  {:.1}", avg * 100.0);
+    Ok(())
+}
+
+/// Eval through the native CPU backend: artifact *files* only (checkpoint,
+/// corpora, task suites) — no PJRT engine, no lowered graphs.
+fn cmd_eval_native(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    // unlike serve-http, eval has no artifact-free mode: the corpora and
+    // task suites it measures live in the artifacts dir — fail before
+    // spending time quantizing
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        bail!("eval --backend native needs the artifact data files \
+               (checkpoint, corpora, task suites) at {dir}; run `make \
+               artifacts` first");
+    }
+    let model = args.get_or("model", "sq-m");
+    let threads = args.usize_or("threads", 0)?;
+    let opts = opts_from_args(args)?;
+    let budget = if args.flag("fast") {
+        EvalBudget::fast()
+    } else {
+        EvalBudget::full()
+    };
+    let (cfg, weights, calib) = native_model_inputs(args)?;
+    let qm = quantize(&cfg, &weights, &calib, &opts)?;
+    let nm = NativeModel::from_quantized(&qm, opts.weight_bits, threads)?;
+    let corpus = |name: &str| -> Result<Vec<u16>> {
+        Ok(SqtFile::load(&format!("{dir}/data/corpus_{name}.sqt"))?
+            .get("tokens")?
+            .as_u16()?
+            .to_vec())
+    };
+    let wiki = corpus("wiki_eval")?;
+    let web = corpus("web_eval")?;
+    let p1 = perplexity(&nm, &wiki, cfg.score_seq, budget.ppl_windows)?;
+    let p2 = perplexity(&nm, &web, cfg.score_seq, budget.ppl_windows)?;
+    println!("{model} [{} | native]: wiki ppl {p1:.3}  web ppl {p2:.3}",
+             opts.method.label());
+    let suite = TaskSuite::load(&format!("{dir}/data/tasks.json"))?;
+    let (per, avg) = zero_shot_suite(&nm, &suite, budget.task_items)?;
     for (name, acc) in per {
         println!("  {name:<14} {:.1}", acc * 100.0);
     }
@@ -252,18 +363,26 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
     let deadline_ms = args.get("deadline-ms").map(|v| v.parse::<u64>()).transpose()
         .map_err(|e| anyhow!("--deadline-ms: {e}"))?;
 
-    let (backend, model_label): (Box<dyn ServeBackend>, String) = if args.flag("synthetic") {
-        (Box::new(SyntheticBackend::new(batch)), "synthetic".to_string())
+    let kind = if args.flag("synthetic") {
+        "synthetic"
     } else {
-        let ctx = ctx_from_args(args)?;
-        let model = args.get_or("model", "sq-m");
-        let opts = opts_from_args(args)?;
-        let qm = ctx.package(model, &opts)?;
-        let runner = Arc::new(ModelRunner::new(ctx.engine.clone(), &qm)?);
-        (
-            Box::new(RunnerBackend::new(runner, batch)),
-            format!("{model}/{}", opts.method.label()),
-        )
+        args.get_or("backend", "pjrt")
+    };
+    let (backend, model_label): (Box<dyn ServeBackend>, String) = match kind {
+        "synthetic" => (Box::new(SyntheticBackend::new(batch)), "synthetic".to_string()),
+        "native" => native_backend_from_args(args, batch)?,
+        "pjrt" => {
+            let ctx = ctx_from_args(args)?;
+            let model = args.get_or("model", "sq-m");
+            let opts = opts_from_args(args)?;
+            let qm = ctx.package(model, &opts)?;
+            let runner = Arc::new(ModelRunner::new(ctx.engine.clone(), &qm)?);
+            (
+                Box::new(RunnerBackend::new(runner, batch)),
+                format!("{model}/{}", opts.method.label()),
+            )
+        }
+        other => bail!("unknown --backend {other:?} (native|pjrt|synthetic)"),
     };
     let engine = ServeEngine::new(
         backend,

@@ -29,6 +29,26 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// Built-in small configuration for artifact-free native serving:
+    /// lets `serve-http --backend native` and the integration tests run a
+    /// real quantized model without any lowered HLO on disk.
+    pub fn demo() -> ModelConfig {
+        ModelConfig {
+            name: "sq-demo".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 128,
+            vocab_size: 260,
+            max_seq: 160,
+            score_seq: 96,
+            rope_theta: 10000.0,
+            n_experts: 0,
+            top_k: 2,
+            artifact_config: "sq-demo".into(),
+        }
+    }
+
     pub fn d_head(&self) -> usize {
         self.d_model / self.n_heads
     }
@@ -151,19 +171,12 @@ pub mod tests {
     use super::*;
 
     pub fn test_config() -> ModelConfig {
+        // same shape as the demo serving model so the tests pin exactly
+        // what `--backend native` serves artifact-free
         ModelConfig {
             name: "sq-test".into(),
-            d_model: 64,
-            n_layers: 2,
-            n_heads: 4,
-            d_ff: 128,
-            vocab_size: 260,
-            max_seq: 160,
-            score_seq: 96,
-            rope_theta: 10000.0,
-            n_experts: 0,
-            top_k: 2,
             artifact_config: "sq-test".into(),
+            ..ModelConfig::demo()
         }
     }
 

@@ -1,7 +1,8 @@
 //! Pure-Rust reference forward of the Layer-2 model.
 //!
 //! Matches `python/compile/model.py` op-for-op (RMSNorm, RoPE, causal
-//! attention, SwiGLU, Mixtral-style top-k MoE). Three uses:
+//! attention, SwiGLU, Mixtral-style top-k MoE), built on the shared
+//! per-layer primitives in [`super::layers`]. Three uses:
 //!
 //! 1. **Calibration** — the single pass that records per-site activation
 //!    profiles and GPTQ Hessians (`calib::run_calibration`), with a tap
@@ -11,83 +12,21 @@
 //!    w4a4 graphs, letting the pipeline evaluate candidate transforms
 //!    without a PJRT round-trip.
 //! 3. **Cross-checking** — integration tests compare these logits against
-//!    the lowered HLO executed through PJRT.
-
-use std::collections::BTreeMap;
+//!    the lowered HLO executed through PJRT, and `model::native`'s
+//!    KV-cached decode must reproduce them bit-for-bit.
 
 use anyhow::Result;
 
 use super::config::ModelConfig;
+use super::layers::{apply_act_quant, attention_full, rmsnorm, swiglu_inplace, Rope};
 use super::weights::Weights;
-use crate::quant::fake_quant_per_token;
 use crate::rotation::kronecker::kron_rotate_rows;
-use crate::rotation::singlequant::SiteRotation;
 use crate::tensor::Tensor;
 
-const EPS: f32 = 1e-5;
-
-/// Quantized-forward context: per-site rotations + clips, activation bits.
-#[derive(Clone, Debug)]
-pub struct QuantCtx {
-    /// Keyed `l{i:02}.{site}`.
-    pub rots: BTreeMap<String, SiteRotation>,
-    pub clips: BTreeMap<String, f32>,
-    /// 4 for W4A4; 16 disables activation quantization (weight-only).
-    pub act_bits: u32,
-    /// Static per-tensor activation quantization: `clips` carry per-site
-    /// scales Δ instead of clip ratios (SmoothQuant's original form).
-    pub static_act: bool,
-}
-
-impl QuantCtx {
-    pub fn identity(cfg: &ModelConfig, act_bits: u32) -> QuantCtx {
-        let mut rots = BTreeMap::new();
-        let mut clips = BTreeMap::new();
-        for i in 0..cfg.n_layers {
-            for site in super::config::ROT_SITES {
-                let (n, _, _) = cfg.site_dims(site);
-                rots.insert(format!("l{i:02}.{site}"), SiteRotation::identity(n));
-                clips.insert(format!("l{i:02}.{site}"), 1.0);
-            }
-        }
-        QuantCtx { rots, clips, act_bits, static_act: false }
-    }
-}
+pub use super::layers::QuantCtx;
 
 /// Observation tap: called with (layer, site, pre-rotation site input).
 pub type Tap<'a> = &'a mut dyn FnMut(usize, &str, &Tensor);
-
-fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
-    let (t, d) = (x.rows(), x.cols());
-    let mut out = Tensor::zeros(&[t, d]);
-    for i in 0..t {
-        let row = x.row(i);
-        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
-        let inv = 1.0 / (ms + EPS).sqrt();
-        for (j, &v) in row.iter().enumerate() {
-            out.row_mut(i)[j] = v * inv * g.data()[j];
-        }
-    }
-    out
-}
-
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
-/// Activation quantization matching the graphs: dynamic per-token (clip =
-/// ratio) or static per-tensor (clip = scale Δ) — see `QLinearCtx` on the
-/// Python side.
-fn apply_act_quant(xr: &Tensor, q: &QuantCtx, clip: f32) -> Tensor {
-    if q.act_bits >= 16 {
-        return xr.clone();
-    }
-    if q.static_act {
-        let delta = clip.max(1e-8);
-        return xr.map(|v| (v / delta).round().clamp(-8.0, 7.0) * delta);
-    }
-    fake_quant_per_token(&xr.scale(1.0 / clip), q.act_bits, 1.0).scale(clip)
-}
 
 /// Apply the site transform (rotate -> fake-quant) then multiply by each
 /// weight; returns per-weight outputs. `x` is the raw site input.
@@ -115,89 +54,6 @@ fn site_linear(
             ws.iter().map(|w| xq.matmul(w)).collect()
         }
     }
-}
-
-struct Rope {
-    cos: Vec<Vec<f32>>, // [T][dh/2]
-    sin: Vec<Vec<f32>>,
-}
-
-impl Rope {
-    fn new(cfg: &ModelConfig, t: usize) -> Rope {
-        let dh = cfg.d_head();
-        let half = dh / 2;
-        let mut cos = Vec::with_capacity(t);
-        let mut sin = Vec::with_capacity(t);
-        for pos in 0..t {
-            let mut c = Vec::with_capacity(half);
-            let mut s = Vec::with_capacity(half);
-            for i in 0..half {
-                let inv_freq =
-                    1.0 / cfg.rope_theta.powf(2.0 * i as f32 / dh as f32);
-                let ang = pos as f32 * inv_freq;
-                c.push(ang.cos());
-                s.push(ang.sin());
-            }
-            cos.push(c);
-            sin.push(s);
-        }
-        Rope { cos, sin }
-    }
-
-    /// Apply in place to one head vector at position `pos`.
-    fn apply(&self, v: &mut [f32], pos: usize) {
-        let half = v.len() / 2;
-        for i in 0..half {
-            let (x1, x2) = (v[2 * i], v[2 * i + 1]);
-            let (c, s) = (self.cos[pos][i], self.sin[pos][i]);
-            v[2 * i] = x1 * c - x2 * s;
-            v[2 * i + 1] = x2 * c + x1 * s;
-        }
-    }
-}
-
-/// Causal multi-head attention over full sequences.
-/// q,k,v: [T, d] with head-major packing [H, dh] per row.
-fn attention(cfg: &ModelConfig, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
-    let t = q.rows();
-    let (h, dh) = (cfg.n_heads, cfg.d_head());
-    let scale = 1.0 / (dh as f32).sqrt();
-    let mut out = Tensor::zeros(&[t, cfg.d_model]);
-    let mut logits = vec![0.0f32; t];
-    for head in 0..h {
-        let off = head * dh;
-        for ti in 0..t {
-            let qrow = &q.row(ti)[off..off + dh];
-            // scores over keys 0..=ti
-            let mut maxv = f32::NEG_INFINITY;
-            for tj in 0..=ti {
-                let krow = &k.row(tj)[off..off + dh];
-                let mut dot = 0.0f32;
-                for x in 0..dh {
-                    dot += qrow[x] * krow[x];
-                }
-                logits[tj] = dot * scale;
-                maxv = maxv.max(logits[tj]);
-            }
-            let mut denom = 0.0f32;
-            for l in logits.iter_mut().take(ti + 1) {
-                *l = (*l - maxv).exp();
-                denom += *l;
-            }
-            let orow = &mut out.row_mut(ti)[off..off + dh];
-            for tj in 0..=ti {
-                let p = logits[tj] / denom;
-                if p == 0.0 {
-                    continue;
-                }
-                let vrow = &v.row(tj)[off..off + dh];
-                for x in 0..dh {
-                    orow[x] += p * vrow[x];
-                }
-            }
-        }
-    }
-    out
 }
 
 /// Full-sequence forward: tokens -> logits [T, V].
@@ -229,13 +85,10 @@ pub fn forward_score(
         );
         let (mut q, mut k, v) = (qkv[0].clone(), qkv[1].clone(), qkv[2].clone());
         for ti in 0..t {
-            for head in 0..cfg.n_heads {
-                let off = head * cfg.d_head();
-                rope.apply(&mut q.row_mut(ti)[off..off + cfg.d_head()], ti);
-                rope.apply(&mut k.row_mut(ti)[off..off + cfg.d_head()], ti);
-            }
+            rope.apply_row(cfg, q.row_mut(ti), ti);
+            rope.apply_row(cfg, k.row_mut(ti), ti);
         }
-        let att = attention(cfg, &q, &k, &v);
+        let att = attention_full(cfg, &q, &k, &v);
         let o = site_linear(&att, &[w.get(&format!("{p}.wo"))?], &p, quant,
                             layer, "o", &mut tap);
         x = x.add(&o[0]);
@@ -269,27 +122,15 @@ fn dense_mlp(
         prefix, quant, layer, "mlp", tap,
     );
     let mut hidden = gu[0].clone();
-    for (i, u) in gu[1].data().iter().enumerate() {
-        hidden.data_mut()[i] = silu(hidden.data()[i]) * u;
-    }
+    swiglu_inplace(&mut hidden, &gu[1]);
     let out = site_linear(&hidden, &[w.get(&format!("{prefix}.wd"))?], prefix,
                           quant, layer, "down", tap);
     Ok(out[0].clone())
 }
 
-fn moe_mlp(
-    cfg: &ModelConfig,
-    w: &Weights,
-    h2: &Tensor,
-    layer: usize,
-    quant: Option<&QuantCtx>,
-    tap: &mut Option<Tap>,
-) -> Result<Tensor> {
-    let p = format!("l{layer:02}");
-    let t = h2.rows();
-    let router = w.get(&format!("{p}.router"))?;
-    let rl = h2.matmul(router); // [T, E]
-    // top-k softmax weights
+/// Top-k softmax gate over router logits `rl` [T, E].
+pub(crate) fn moe_gate(cfg: &ModelConfig, rl: &Tensor) -> Tensor {
+    let t = rl.rows();
     let mut gate = Tensor::zeros(&[t, cfg.n_experts]);
     for ti in 0..t {
         let row = rl.row(ti);
@@ -307,6 +148,22 @@ fn moe_mlp(
             gate.set(ti, e, exps[j] / denom);
         }
     }
+    gate
+}
+
+fn moe_mlp(
+    cfg: &ModelConfig,
+    w: &Weights,
+    h2: &Tensor,
+    layer: usize,
+    quant: Option<&QuantCtx>,
+    tap: &mut Option<Tap>,
+) -> Result<Tensor> {
+    let p = format!("l{layer:02}");
+    let t = h2.rows();
+    let router = w.get(&format!("{p}.router"))?;
+    let rl = h2.matmul(router); // [T, E]
+    let gate = moe_gate(cfg, &rl);
 
     // The mlp/down site transforms are shared across experts: tap once on
     // the site input, then compute the quantized input once per site.
@@ -333,10 +190,8 @@ fn moe_mlp(
         let wd = w.get(&format!("{p}.x{e}.wd"))?;
         let g = xq.matmul(wg);
         let u = xq.matmul(wu);
-        let mut hidden = g.clone();
-        for (i, uv) in u.data().iter().enumerate() {
-            hidden.data_mut()[i] = silu(hidden.data()[i]) * uv;
-        }
+        let mut hidden = g;
+        swiglu_inplace(&mut hidden, &u);
         if let Some(tp) = tap.as_mut() {
             if !tapped_down {
                 tp(layer, "down", &hidden);

@@ -1,0 +1,269 @@
+//! Per-layer primitives shared by every execution path: the full-sequence
+//! reference forward (`forward::forward_score`), the KV-cached incremental
+//! decode (`native::NativeModel`), and the calibration taps.
+//!
+//! Everything here is written so that a row's result depends only on that
+//! row (plus, for attention, the cached K/V rows at earlier positions) and
+//! accumulates in a fixed order — which is what lets the cached decode
+//! path reproduce the full-sequence forward bit-for-bit.
+
+use std::collections::BTreeMap;
+
+use super::config::ModelConfig;
+use crate::quant::fake_quant_per_token;
+use crate::rotation::singlequant::SiteRotation;
+use crate::tensor::Tensor;
+
+pub const EPS: f32 = 1e-5;
+
+/// Quantized-forward context: per-site rotations + clips, activation bits.
+#[derive(Clone, Debug)]
+pub struct QuantCtx {
+    /// Keyed `l{i:02}.{site}`.
+    pub rots: BTreeMap<String, SiteRotation>,
+    pub clips: BTreeMap<String, f32>,
+    /// 4 for W4A4; 16 disables activation quantization (weight-only).
+    pub act_bits: u32,
+    /// Static per-tensor activation quantization: `clips` carry per-site
+    /// scales Δ instead of clip ratios (SmoothQuant's original form).
+    pub static_act: bool,
+}
+
+impl QuantCtx {
+    pub fn identity(cfg: &ModelConfig, act_bits: u32) -> QuantCtx {
+        let mut rots = BTreeMap::new();
+        let mut clips = BTreeMap::new();
+        for i in 0..cfg.n_layers {
+            for site in super::config::ROT_SITES {
+                let (n, _, _) = cfg.site_dims(site);
+                rots.insert(format!("l{i:02}.{site}"), SiteRotation::identity(n));
+                clips.insert(format!("l{i:02}.{site}"), 1.0);
+            }
+        }
+        QuantCtx { rots, clips, act_bits, static_act: false }
+    }
+}
+
+pub fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
+    let (t, d) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(&[t, d]);
+    for i in 0..t {
+        let row = x.row(i);
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for (j, &v) in row.iter().enumerate() {
+            out.row_mut(i)[j] = v * inv * g.data()[j];
+        }
+    }
+    out
+}
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// The SwiGLU combine, in place: hidden ← silu(hidden) ⊙ u. Every
+/// execution path (reference forward, native prefill/decode, dense and
+/// MoE MLPs) must share this exact loop — the decode == reference
+/// bit-equality invariant depends on it.
+pub fn swiglu_inplace(hidden: &mut Tensor, u: &Tensor) {
+    assert_eq!(hidden.shape(), u.shape(), "swiglu shape mismatch");
+    for (h, &uv) in hidden.data_mut().iter_mut().zip(u.data()) {
+        *h = silu(*h) * uv;
+    }
+}
+
+/// Activation quantization matching the graphs: dynamic per-token (clip =
+/// ratio) or static per-tensor (clip = scale Δ) — see `QLinearCtx` on the
+/// Python side.
+pub fn apply_act_quant(xr: &Tensor, q: &QuantCtx, clip: f32) -> Tensor {
+    if q.act_bits >= 16 {
+        return xr.clone();
+    }
+    if q.static_act {
+        let delta = clip.max(1e-8);
+        return xr.map(|v| (v / delta).round().clamp(-8.0, 7.0) * delta);
+    }
+    fake_quant_per_token(&xr.scale(1.0 / clip), q.act_bits, 1.0).scale(clip)
+}
+
+/// RoPE tables for positions `0..t`.
+pub struct Rope {
+    cos: Vec<Vec<f32>>, // [T][dh/2]
+    sin: Vec<Vec<f32>>,
+}
+
+impl Rope {
+    pub fn new(cfg: &ModelConfig, t: usize) -> Rope {
+        let dh = cfg.d_head();
+        let half = dh / 2;
+        let mut cos = Vec::with_capacity(t);
+        let mut sin = Vec::with_capacity(t);
+        for pos in 0..t {
+            let mut c = Vec::with_capacity(half);
+            let mut s = Vec::with_capacity(half);
+            for i in 0..half {
+                let inv_freq =
+                    1.0 / cfg.rope_theta.powf(2.0 * i as f32 / dh as f32);
+                let ang = pos as f32 * inv_freq;
+                c.push(ang.cos());
+                s.push(ang.sin());
+            }
+            cos.push(c);
+            sin.push(s);
+        }
+        Rope { cos, sin }
+    }
+
+    /// Apply in place to one head vector at position `pos`.
+    pub fn apply(&self, v: &mut [f32], pos: usize) {
+        let half = v.len() / 2;
+        for i in 0..half {
+            let (x1, x2) = (v[2 * i], v[2 * i + 1]);
+            let (c, s) = (self.cos[pos][i], self.sin[pos][i]);
+            v[2 * i] = x1 * c - x2 * s;
+            v[2 * i + 1] = x2 * c + x1 * s;
+        }
+    }
+
+    /// Apply to every head of a `[d_model]` token row at position `pos`.
+    pub fn apply_row(&self, cfg: &ModelConfig, row: &mut [f32], pos: usize) {
+        let dh = cfg.d_head();
+        for head in 0..cfg.n_heads {
+            self.apply(&mut row[head * dh..(head + 1) * dh], pos);
+        }
+    }
+}
+
+/// Causal multi-head attention over full sequences.
+/// q,k,v: [T, d] with head-major packing [H, dh] per row.
+pub fn attention_full(cfg: &ModelConfig, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let t = q.rows();
+    let (h, dh) = (cfg.n_heads, cfg.d_head());
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = Tensor::zeros(&[t, cfg.d_model]);
+    let mut logits = vec![0.0f32; t];
+    for head in 0..h {
+        let off = head * dh;
+        for ti in 0..t {
+            let qrow = &q.row(ti)[off..off + dh];
+            // scores over keys 0..=ti
+            let mut maxv = f32::NEG_INFINITY;
+            for tj in 0..=ti {
+                let krow = &k.row(tj)[off..off + dh];
+                let mut dot = 0.0f32;
+                for x in 0..dh {
+                    dot += qrow[x] * krow[x];
+                }
+                logits[tj] = dot * scale;
+                maxv = maxv.max(logits[tj]);
+            }
+            let mut denom = 0.0f32;
+            for l in logits.iter_mut().take(ti + 1) {
+                *l = (*l - maxv).exp();
+                denom += *l;
+            }
+            let orow = &mut out.row_mut(ti)[off..off + dh];
+            for tj in 0..=ti {
+                let p = logits[tj] / denom;
+                if p == 0.0 {
+                    continue;
+                }
+                let vrow = &v.row(tj)[off..off + dh];
+                for x in 0..dh {
+                    orow[x] += p * vrow[x];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One query row attending over `len` cached K/V rows (the query sits at
+/// position `len - 1`). `k`/`v` are flattened `[len, d_model]` row-major
+/// with the same head-major packing as the full-sequence tensors; the
+/// per-element math and accumulation order are identical to
+/// [`attention_full`]'s row `len - 1`.
+pub fn attention_step(
+    cfg: &ModelConfig,
+    qrow: &[f32],
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+) -> Vec<f32> {
+    let (h, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    let mut logits = vec![0.0f32; len];
+    for head in 0..h {
+        let off = head * dh;
+        let q = &qrow[off..off + dh];
+        let mut maxv = f32::NEG_INFINITY;
+        for tj in 0..len {
+            let krow = &k[tj * d + off..tj * d + off + dh];
+            let mut dot = 0.0f32;
+            for x in 0..dh {
+                dot += q[x] * krow[x];
+            }
+            logits[tj] = dot * scale;
+            maxv = maxv.max(logits[tj]);
+        }
+        let mut denom = 0.0f32;
+        for l in logits.iter_mut().take(len) {
+            *l = (*l - maxv).exp();
+            denom += *l;
+        }
+        let orow = &mut out[off..off + dh];
+        for tj in 0..len {
+            let p = logits[tj] / denom;
+            if p == 0.0 {
+                continue;
+            }
+            let vrow = &v[tj * d + off..tj * d + off + dh];
+            for x in 0..dh {
+                orow[x] += p * vrow[x];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn attention_step_matches_full_rows() {
+        let cfg = test_config();
+        let mut rng = Rng::new(1);
+        let t = 6;
+        let q = Tensor::randn(&[t, cfg.d_model], 1.0, &mut rng);
+        let k = Tensor::randn(&[t, cfg.d_model], 1.0, &mut rng);
+        let v = Tensor::randn(&[t, cfg.d_model], 1.0, &mut rng);
+        let full = attention_full(&cfg, &q, &k, &v);
+        for ti in 0..t {
+            let len = ti + 1;
+            let got = attention_step(&cfg, q.row(ti),
+                                     &k.data()[..len * cfg.d_model],
+                                     &v.data()[..len * cfg.d_model], len);
+            assert_eq!(got.as_slice(), full.row(ti), "row {ti} must be exact");
+        }
+    }
+
+    #[test]
+    fn rope_row_matches_per_head_apply() {
+        let cfg = test_config();
+        let mut rng = Rng::new(2);
+        let rope = Rope::new(&cfg, 8);
+        let mut a = rng.normal_vec(cfg.d_model, 1.0);
+        let mut b = a.clone();
+        rope.apply_row(&cfg, &mut a, 5);
+        for head in 0..cfg.n_heads {
+            let dh = cfg.d_head();
+            rope.apply(&mut b[head * dh..(head + 1) * dh], 5);
+        }
+        assert_eq!(a, b);
+    }
+}

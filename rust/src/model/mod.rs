@@ -1,11 +1,16 @@
 //! Model definitions on the Rust side: configuration (mirroring
 //! `python/compile/model.py` via `artifacts/manifest.json`), checkpoint
-//! weights, parameter layout, and the pure-Rust reference forward used by
-//! calibration and GPTQ.
+//! weights, parameter layout, the shared per-layer primitives
+//! ([`layers`]), the pure-Rust reference forward used by calibration and
+//! GPTQ ([`forward`]), and the packed-weight KV-cached execution engine
+//! behind the native serving backend ([`native`]).
 
 pub mod config;
 pub mod forward;
+pub mod layers;
+pub mod native;
 pub mod weights;
 
 pub use config::ModelConfig;
+pub use native::{NativeModel, SlotKv};
 pub use weights::Weights;

@@ -1,0 +1,444 @@
+//! NativeModel: direct multi-threaded CPU execution of a (quantized)
+//! checkpoint — full-sequence prefill plus KV-cached incremental decode —
+//! with the quantized linears held as packed low-bit codes
+//! (`quant::repack::RepackedWeight`) and dequantized only inside the
+//! matmul inner loop. No PJRT, no XLA, no f32 weight materialization.
+//!
+//! Built on the same per-layer primitives (`model::layers`) as the
+//! reference forward, with the same per-row accumulation order, so the
+//! dense configuration reproduces `forward::forward_score` bit-for-bit at
+//! every decode step — the invariant `tests` pin down and the serving
+//! backend (`runtime::NativeBackend`) relies on.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::config::ModelConfig;
+use super::forward::moe_gate;
+use super::layers::{apply_act_quant, attention_step, rmsnorm, swiglu_inplace, QuantCtx, Rope};
+use super::weights::Weights;
+use crate::pipeline::QuantizedModel;
+use crate::quant::pack::PackedWeight;
+use crate::quant::repack::RepackedWeight;
+use crate::rotation::kronecker::kron_rotate_rows;
+use crate::tensor::kernels::{matmul_packed, matmul_threaded, resolve_threads};
+use crate::tensor::Tensor;
+
+/// One linear weight as the execution engine holds it.
+pub enum LinearOp {
+    Dense(Tensor),
+    Packed(RepackedWeight),
+}
+
+impl LinearOp {
+    fn matmul(&self, x: &Tensor, threads: usize) -> Tensor {
+        match self {
+            LinearOp::Dense(w) => matmul_threaded(x, w, threads),
+            LinearOp::Packed(w) => matmul_packed(x, w, threads),
+        }
+    }
+
+    fn nbytes(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.len() * 4,
+            LinearOp::Packed(w) => w.nbytes(),
+        }
+    }
+}
+
+/// Per-slot KV cache: post-RoPE K/V rows per layer, appended as positions
+/// fill. Grows lazily to at most `max_seq · d_model` floats per side per
+/// layer; `reset` keeps the allocation for the slot's next request.
+pub struct SlotKv {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Number of cached positions (== rows per layer).
+    pub pos: usize,
+}
+
+impl SlotKv {
+    fn new(n_layers: usize) -> SlotKv {
+        SlotKv {
+            k: (0..n_layers).map(|_| Vec::new()).collect(),
+            v: (0..n_layers).map(|_| Vec::new()).collect(),
+            pos: 0,
+        }
+    }
+
+    /// Drop the cached sequence (retire/reuse); capacity is kept.
+    pub fn reset(&mut self) {
+        for side in self.k.iter_mut().chain(self.v.iter_mut()) {
+            side.clear();
+        }
+        self.pos = 0;
+    }
+
+    /// Resident bytes currently held by this slot's cache.
+    pub fn nbytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|s| s.len() * 4).sum::<usize>()
+    }
+}
+
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    /// Non-quantized parameters: embeddings, norms, router, output head.
+    fp: Weights,
+    /// Site-quantized linears (packed) or their dense f32 form.
+    linears: BTreeMap<String, LinearOp>,
+    /// Site rotations + activation quantization; `None` = fp forward.
+    quant: Option<QuantCtx>,
+    /// RoPE tables precomputed to `max_seq`.
+    rope: Rope,
+    pub threads: usize,
+}
+
+impl NativeModel {
+    fn build(
+        cfg: ModelConfig,
+        weights: &Weights,
+        quant: Option<QuantCtx>,
+        pack_bits: Option<u32>,
+        threads: usize,
+    ) -> Result<NativeModel> {
+        let site_names: BTreeSet<String> = (0..cfg.n_layers)
+            .flat_map(|l| {
+                super::config::ROT_SITES
+                    .iter()
+                    .flat_map(move |s| cfg.site_weights(l, s))
+            })
+            .collect();
+        let mut fp = Weights::default();
+        let mut linears = BTreeMap::new();
+        for (name, t) in &weights.map {
+            if site_names.contains(name) {
+                let op = match pack_bits {
+                    Some(bits) => LinearOp::Packed(RepackedWeight::from_packed(
+                        &PackedWeight::pack(t, bits)?,
+                    )?),
+                    None => LinearOp::Dense(t.clone()),
+                };
+                linears.insert(name.clone(), op);
+            } else {
+                fp.insert(name, t.clone());
+            }
+        }
+        let rope = Rope::new(&cfg, cfg.max_seq);
+        Ok(NativeModel {
+            fp,
+            linears,
+            quant,
+            rope,
+            threads: resolve_threads(threads),
+            cfg,
+        })
+    }
+
+    /// Dense execution of raw weights (fp when `quant` is `None`, the
+    /// fake-quant emulation path otherwise). Bit-identical to
+    /// `forward_score` under the same `quant`.
+    pub fn from_weights(
+        cfg: &ModelConfig,
+        weights: &Weights,
+        quant: Option<QuantCtx>,
+        threads: usize,
+    ) -> Result<NativeModel> {
+        Self::build(cfg.clone(), weights, quant, None, threads)
+    }
+
+    /// Packed execution of a quantized package: the site linears (already
+    /// on the `weight_bits` grid) are bit-packed and dequantize inside the
+    /// matmul kernel. Grouped/GPTQ packages re-pack per output channel,
+    /// which can move a code by one step at the grid edge — within the
+    /// quantizer's own error floor.
+    pub fn from_quantized(
+        qm: &QuantizedModel,
+        weight_bits: u32,
+        threads: usize,
+    ) -> Result<NativeModel> {
+        let pack = if qm.graph_mode() == "fp" { None } else { Some(weight_bits) };
+        Self::build(qm.cfg.clone(), &qm.weights, qm.quant_ctx(), pack, threads)
+    }
+
+    pub fn new_kv(&self) -> SlotKv {
+        SlotKv::new(self.cfg.n_layers)
+    }
+
+    /// Total resident weight bytes (packed codes + scales + fp params).
+    pub fn weight_nbytes(&self) -> usize {
+        self.linears.values().map(|op| op.nbytes()).sum::<usize>()
+            + self.fp.n_params() * 4
+    }
+
+    fn linear(&self, name: &str) -> Result<&LinearOp> {
+        self.linears
+            .get(name)
+            .ok_or_else(|| anyhow!("missing linear {name:?}"))
+    }
+
+    /// Rotate + activation-quantize a site input (identity when fp).
+    fn site_input(&self, x: &Tensor, layer: usize, site: &str) -> Tensor {
+        match &self.quant {
+            None => x.clone(),
+            Some(q) => {
+                let skey = format!("l{layer:02}.{site}");
+                let rot = &q.rots[&skey];
+                let clip = q.clips[&skey];
+                let xr = kron_rotate_rows(x, &rot.r1, &rot.r2);
+                apply_act_quant(&xr, q, clip)
+            }
+        }
+    }
+
+    /// Prefill a fresh slot with a prompt; returns logits `[len, V]` (the
+    /// scheduler samples from the last row).
+    pub fn prefill(&self, kv: &mut SlotKv, tokens: &[u16]) -> Result<Tensor> {
+        if tokens.is_empty() {
+            bail!("prefill: empty prompt");
+        }
+        if kv.pos != 0 {
+            bail!("prefill: slot already holds {} positions", kv.pos);
+        }
+        self.step_rows(kv, tokens)
+    }
+
+    /// One incremental decode step: append `token` at position `kv.pos`,
+    /// return its logits row `[V]`.
+    pub fn decode(&self, kv: &mut SlotKv, token: u16) -> Result<Vec<f32>> {
+        if kv.pos == 0 {
+            bail!("decode before prefill");
+        }
+        Ok(self.step_rows(kv, &[token])?.into_data())
+    }
+
+    /// Full-sequence forward through a scratch cache: logits `[T, V]`.
+    pub fn forward_full(&self, tokens: &[u16]) -> Result<Tensor> {
+        let mut kv = self.new_kv();
+        self.step_rows(&mut kv, tokens)
+    }
+
+    /// Process `t` new token rows at positions `kv.pos ..`, appending
+    /// their K/V rows; the shared core of prefill and decode.
+    fn step_rows(&self, kv: &mut SlotKv, tokens: &[u16]) -> Result<Tensor> {
+        let t = tokens.len();
+        let d = self.cfg.d_model;
+        let start = kv.pos;
+        if start + t > self.cfg.max_seq {
+            bail!("kv cache capacity exceeded: {} + {t} > {}", start, self.cfg.max_seq);
+        }
+        let emb = self.fp.get("emb.tok")?;
+        let mut x = Tensor::zeros(&[t, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            if tok as usize >= self.cfg.vocab_size {
+                bail!("token {tok} out of vocab range {}", self.cfg.vocab_size);
+            }
+            x.row_mut(i).copy_from_slice(emb.row(tok as usize));
+        }
+
+        for layer in 0..self.cfg.n_layers {
+            let p = format!("l{layer:02}");
+            // -- attention ----------------------------------------------------
+            let h = rmsnorm(&x, self.fp.get(&format!("{p}.an"))?);
+            let hq = self.site_input(&h, layer, "qkv");
+            let mut q = self.linear(&format!("{p}.wq"))?.matmul(&hq, self.threads);
+            let mut k = self.linear(&format!("{p}.wk"))?.matmul(&hq, self.threads);
+            let vv = self.linear(&format!("{p}.wv"))?.matmul(&hq, self.threads);
+            for ti in 0..t {
+                self.rope.apply_row(&self.cfg, q.row_mut(ti), start + ti);
+                self.rope.apply_row(&self.cfg, k.row_mut(ti), start + ti);
+            }
+            kv.k[layer].extend_from_slice(k.data());
+            kv.v[layer].extend_from_slice(vv.data());
+            let kc = &kv.k[layer];
+            let vc = &kv.v[layer];
+            let mut att = Tensor::zeros(&[t, d]);
+            for ti in 0..t {
+                let len = start + ti + 1;
+                let row = attention_step(&self.cfg, q.row(ti),
+                                         &kc[..len * d], &vc[..len * d], len);
+                att.row_mut(ti).copy_from_slice(&row);
+            }
+            let aq = self.site_input(&att, layer, "o");
+            let o = self.linear(&format!("{p}.wo"))?.matmul(&aq, self.threads);
+            x = x.add(&o);
+
+            // -- MLP ----------------------------------------------------------
+            let h2 = rmsnorm(&x, self.fp.get(&format!("{p}.mn"))?);
+            let y = if self.cfg.is_moe() {
+                self.moe(&h2, layer)?
+            } else {
+                self.mlp(&h2, layer)?
+            };
+            x = x.add(&y);
+        }
+        kv.pos = start + t;
+
+        let xf = rmsnorm(&x, self.fp.get("out.norm")?);
+        Ok(matmul_threaded(&xf, self.fp.get("out.head")?, self.threads))
+    }
+
+    fn mlp(&self, h2: &Tensor, layer: usize) -> Result<Tensor> {
+        let p = format!("l{layer:02}");
+        let xq = self.site_input(h2, layer, "mlp");
+        let g = self.linear(&format!("{p}.wg"))?.matmul(&xq, self.threads);
+        let u = self.linear(&format!("{p}.wu"))?.matmul(&xq, self.threads);
+        let mut hidden = g;
+        swiglu_inplace(&mut hidden, &u);
+        let hq = self.site_input(&hidden, layer, "down");
+        Ok(self.linear(&format!("{p}.wd"))?.matmul(&hq, self.threads))
+    }
+
+    fn moe(&self, h2: &Tensor, layer: usize) -> Result<Tensor> {
+        let p = format!("l{layer:02}");
+        let t = h2.rows();
+        let router = self.fp.get(&format!("{p}.router"))?;
+        let rl = h2.matmul(router);
+        let gate = moe_gate(&self.cfg, &rl);
+        let xq = self.site_input(h2, layer, "mlp");
+        let mut out = Tensor::zeros(&[t, self.cfg.d_model]);
+        for e in 0..self.cfg.n_experts {
+            let g = self.linear(&format!("{p}.x{e}.wg"))?.matmul(&xq, self.threads);
+            let u = self.linear(&format!("{p}.x{e}.wu"))?.matmul(&xq, self.threads);
+            let mut hidden = g;
+            swiglu_inplace(&mut hidden, &u);
+            let hq = self.site_input(&hidden, layer, "down");
+            let y = self.linear(&format!("{p}.x{e}.wd"))?.matmul(&hq, self.threads);
+            for ti in 0..t {
+                let gw = gate.at(ti, e);
+                if gw == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(ti);
+                for (j, &v) in y.row(ti).iter().enumerate() {
+                    orow[j] += gw * v;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+    use crate::model::forward::forward_score;
+    use crate::pipeline::{quantize, PipelineOptions};
+
+    fn toks(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| rng.below(260) as u16).collect()
+    }
+
+    /// Prefill a prompt prefix then decode the rest; every logits row must
+    /// equal the full-sequence reference bit-for-bit.
+    fn check_exact(cfg: &ModelConfig, w: &Weights, quant: Option<QuantCtx>) {
+        let tokens = toks(11, 3);
+        let full = forward_score(cfg, w, &tokens, quant.as_ref(), None).unwrap();
+        let nm = NativeModel::from_weights(cfg, w, quant, 2).unwrap();
+        let mut kv = nm.new_kv();
+        let plen = 5;
+        let prefill = nm.prefill(&mut kv, &tokens[..plen]).unwrap();
+        for i in 0..plen {
+            assert_eq!(prefill.row(i), full.row(i), "prefill row {i}");
+        }
+        for (i, &tok) in tokens.iter().enumerate().skip(plen) {
+            let row = nm.decode(&mut kv, tok).unwrap();
+            assert_eq!(row.as_slice(), full.row(i), "decode row {i}");
+        }
+        assert_eq!(kv.pos, tokens.len());
+    }
+
+    #[test]
+    fn decode_matches_reference_forward_exactly_fp() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        check_exact(&cfg, &w, None);
+    }
+
+    #[test]
+    fn decode_matches_reference_forward_exactly_w4a4() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        check_exact(&cfg, &w, Some(QuantCtx::identity(&cfg, 4)));
+    }
+
+    #[test]
+    fn decode_matches_reference_forward_exactly_moe() {
+        let mut cfg = test_config();
+        cfg.n_experts = 3;
+        cfg.top_k = 2;
+        let w = Weights::random_init(&cfg, 2);
+        check_exact(&cfg, &w, None);
+    }
+
+    #[test]
+    fn packed_decode_is_self_consistent_and_near_reference() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let opts = PipelineOptions { calib_seqs: 2, calib_len: 24, ..Default::default() };
+        let qm = quantize(&cfg, &w, &toks(400, 9), &opts).unwrap();
+        let nm = NativeModel::from_quantized(&qm, opts.weight_bits, 2).unwrap();
+        let tokens = toks(9, 4);
+
+        // packed prefill+decode must equal packed full forward exactly
+        let full = nm.forward_full(&tokens).unwrap();
+        let mut kv = nm.new_kv();
+        let pre = nm.prefill(&mut kv, &tokens[..4]).unwrap();
+        for i in 0..4 {
+            assert_eq!(pre.row(i), full.row(i), "packed prefill row {i}");
+        }
+        for (i, &tok) in tokens.iter().enumerate().skip(4) {
+            let row = nm.decode(&mut kv, tok).unwrap();
+            assert_eq!(row.as_slice(), full.row(i), "packed decode row {i}");
+        }
+
+        // and stay within kernel-rounding distance of the fake-quant
+        // reference forward over the same package
+        let ctx = qm.quant_ctx().unwrap();
+        let reference =
+            forward_score(&qm.cfg, &qm.weights, &tokens, Some(&ctx), None).unwrap();
+        let diff = full.sub(&reference).max_abs();
+        assert!(diff < 5e-2, "packed vs fake-quant drift {diff}");
+        assert!(full.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn kv_reset_reuses_slot() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let nm = NativeModel::from_weights(&cfg, &w, None, 1).unwrap();
+        let mut kv = nm.new_kv();
+        let a = nm.prefill(&mut kv, &toks(6, 5)).unwrap();
+        assert!(kv.nbytes() > 0);
+        kv.reset();
+        assert_eq!(kv.pos, 0);
+        let b = nm.prefill(&mut kv, &toks(6, 5)).unwrap();
+        assert_eq!(a.data(), b.data(), "reset slot must replay identically");
+    }
+
+    #[test]
+    fn capacity_and_misuse_errors() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let nm = NativeModel::from_weights(&cfg, &w, None, 1).unwrap();
+        let mut kv = nm.new_kv();
+        assert!(nm.decode(&mut kv, 1).is_err(), "decode before prefill");
+        assert!(nm.prefill(&mut kv, &[]).is_err(), "empty prompt");
+        let long = toks(cfg.max_seq + 1, 6);
+        assert!(nm.prefill(&mut kv, &long).is_err(), "over capacity");
+    }
+
+    #[test]
+    fn packed_weights_are_smaller_than_dense() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let opts = PipelineOptions { calib_seqs: 2, calib_len: 24, ..Default::default() };
+        let qm = quantize(&cfg, &w, &toks(400, 7), &opts).unwrap();
+        let packed = NativeModel::from_quantized(&qm, 4, 1).unwrap();
+        let dense = NativeModel::from_weights(&cfg, &qm.weights, None, 1).unwrap();
+        assert!(packed.weight_nbytes() * 2 < dense.weight_nbytes(),
+                "packed {} vs dense {}", packed.weight_nbytes(),
+                dense.weight_nbytes());
+    }
+}

@@ -8,6 +8,7 @@ pub mod awq;
 pub mod clip;
 pub mod gptq;
 pub mod pack;
+pub mod repack;
 
 use crate::tensor::Tensor;
 

@@ -70,6 +70,14 @@ impl PackedWeight {
         out
     }
 
+    /// Signed code at (row i, col j) — read path for the kernel repack
+    /// (`quant::repack::RepackedWeight::from_packed`).
+    pub fn code_at(&self, i: usize, j: usize) -> i32 {
+        let (qmin, _) = qlevels(self.bits);
+        let bitpos = (i * self.cols + j) * self.bits as usize;
+        read_bits(&self.codes, bitpos, self.bits) as i32 + qmin as i32
+    }
+
     /// Serialized footprint in bytes (codes + scales + header).
     pub fn nbytes(&self) -> usize {
         self.codes.len() + self.scales.len() * 4 + 16

@@ -1,0 +1,261 @@
+//! Kernel-friendly repack of [`PackedWeight`]: the storage format the
+//! native CPU matmul executes on directly.
+//!
+//! [`PackedWeight`] is the *serialized* format: row-major bit-packed codes,
+//! optimized for footprint accounting. A dot-product kernel wants the
+//! opposite layout — codes **column-major** (one output channel's input dim
+//! contiguous), int4 pairs nibble-interleaved in a single byte, and scales
+//! grouped along the input dimension so the scale multiply hoists out of
+//! the inner loop. [`RepackedWeight`] is that layout; `tensor::kernels::
+//! matmul_packed` consumes it with dequantization fused into the k-loop.
+
+use anyhow::{bail, Result};
+
+use super::pack::PackedWeight;
+use super::qlevels;
+use crate::tensor::Tensor;
+
+/// A `[in, out]` weight stored column-major as signed codes + group scales.
+#[derive(Clone, Debug)]
+pub struct RepackedWeight {
+    pub bits: u32,
+    /// Input dimension (k of the matmul).
+    pub rows: usize,
+    /// Output dimension (columns of the matmul result).
+    pub cols: usize,
+    /// Scale-group length along the input dimension (`rows` when the
+    /// source was per-output-channel quantized).
+    pub group: usize,
+    /// ceil(rows / group) scale groups per column.
+    pub n_groups: usize,
+    /// `scales[c * n_groups + g]` — per (column, input-group) scale.
+    pub scales: Vec<f32>,
+    /// Column-major codes. bits ≤ 4: two codes per byte, nibble-interleaved
+    /// (row k even → low nibble of byte k/2, odd → high nibble). bits 5..8:
+    /// one sign-extended byte per code.
+    pub codes: Vec<u8>,
+    /// Bytes per column in `codes`.
+    col_stride: usize,
+    /// Bias added when storing codes unsigned in nibbles.
+    offset: i32,
+}
+
+impl RepackedWeight {
+    fn layout(bits: u32, rows: usize, group: usize) -> Result<(usize, usize, i32)> {
+        if !(2..=8).contains(&bits) {
+            bail!("repack: bits {bits} out of range");
+        }
+        if group == 0 {
+            bail!("repack: zero group");
+        }
+        let n_groups = rows.div_ceil(group);
+        let col_stride = if bits <= 4 { rows.div_ceil(2) } else { rows };
+        let (qmin, _) = qlevels(bits);
+        Ok((n_groups, col_stride, -qmin as i32))
+    }
+
+    /// Repack a serialized [`PackedWeight`] (per-output-channel scales, so
+    /// one scale group spanning the whole input dim).
+    pub fn from_packed(p: &PackedWeight) -> Result<RepackedWeight> {
+        let (n_groups, col_stride, offset) = Self::layout(p.bits, p.rows, p.rows)?;
+        let mut out = RepackedWeight {
+            bits: p.bits,
+            rows: p.rows,
+            cols: p.cols,
+            group: p.rows,
+            n_groups,
+            scales: Vec::with_capacity(p.cols * n_groups),
+            codes: vec![0u8; p.cols * col_stride],
+            col_stride,
+            offset,
+        };
+        for &s in &p.scales {
+            out.scales.push(s);
+        }
+        for k in 0..p.rows {
+            for c in 0..p.cols {
+                out.store(k, c, p.code_at(k, c));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Quantize a dense weight directly with input-dim scale groups of
+    /// `group` rows (`fake_quant_grouped` semantics; `group >= rows` is
+    /// plain per-output-channel).
+    pub fn pack(w: &Tensor, bits: u32, group: usize) -> Result<RepackedWeight> {
+        let (n, c) = (w.rows(), w.cols());
+        let group = group.min(n).max(1);
+        let (n_groups, col_stride, offset) = Self::layout(bits, n, group)?;
+        let (qmin, qmax) = qlevels(bits);
+        let mut out = RepackedWeight {
+            bits,
+            rows: n,
+            cols: c,
+            group,
+            n_groups,
+            scales: vec![0.0f32; c * n_groups],
+            codes: vec![0u8; c * col_stride],
+            col_stride,
+            offset,
+        };
+        for g in 0..n_groups {
+            let (k0, k1) = (g * group, ((g + 1) * group).min(n));
+            let mut absmax = vec![0.0f32; c];
+            for k in k0..k1 {
+                for (j, &v) in w.row(k).iter().enumerate() {
+                    absmax[j] = absmax[j].max(v.abs());
+                }
+            }
+            for (j, &m) in absmax.iter().enumerate() {
+                out.scales[j * n_groups + g] = (m / qmax).max(1e-8);
+            }
+            for k in k0..k1 {
+                for j in 0..c {
+                    let s = out.scales[j * n_groups + g];
+                    let q = (w.at(k, j) / s).round().clamp(qmin, qmax) as i32;
+                    out.store(k, j, q);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    #[inline]
+    fn store(&mut self, k: usize, c: usize, signed: i32) {
+        if self.bits <= 4 {
+            let u = (signed + self.offset) as u8; // 0..2^bits-1, fits a nibble
+            let byte = &mut self.codes[c * self.col_stride + k / 2];
+            if k % 2 == 0 {
+                *byte = (*byte & 0xF0) | (u & 0x0F);
+            } else {
+                *byte = (*byte & 0x0F) | (u << 4);
+            }
+        } else {
+            self.codes[c * self.col_stride + k] = signed as i8 as u8;
+        }
+    }
+
+    /// Signed code at (input row k, output column c) — test/kernel helper.
+    #[inline]
+    pub fn code_at(&self, k: usize, c: usize) -> i32 {
+        if self.bits <= 4 {
+            let byte = self.codes[c * self.col_stride + k / 2];
+            let u = if k % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            u as i32 - self.offset
+        } else {
+            self.codes[c * self.col_stride + k] as i8 as i32
+        }
+    }
+
+    /// One column's code bytes (contiguous along the input dim).
+    #[inline]
+    pub fn col_codes(&self, c: usize) -> &[u8] {
+        &self.codes[c * self.col_stride..(c + 1) * self.col_stride]
+    }
+
+    /// Unsigned-nibble bias (bits ≤ 4 layout).
+    #[inline]
+    pub fn nibble_offset(&self) -> i32 {
+        self.offset
+    }
+
+    /// Scales of one column, one per input group.
+    #[inline]
+    pub fn col_scales(&self, c: usize) -> &[f32] {
+        &self.scales[c * self.n_groups..(c + 1) * self.n_groups]
+    }
+
+    /// Dense f32 form (reference for the fused kernel).
+    pub fn dequantize(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        for k in 0..self.rows {
+            let g = k / self.group;
+            for c in 0..self.cols {
+                let s = self.scales[c * self.n_groups + g];
+                out.set(k, c, self.code_at(k, c) as f32 * s);
+            }
+        }
+        out
+    }
+
+    /// Resident footprint in bytes (codes + scales + header).
+    pub fn nbytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4 + 24
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{fake_quant_grouped, fake_quant_per_channel};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn from_packed_preserves_values() {
+        let mut rng = Rng::new(1);
+        for bits in [2u32, 3, 4, 5, 8] {
+            let w = Tensor::randn(&[19, 7], 0.8, &mut rng);
+            let p = PackedWeight::pack(&w, bits).unwrap();
+            let r = RepackedWeight::from_packed(&p).unwrap();
+            let a = p.unpack();
+            let b = r.dequantize();
+            assert!(a.sub(&b).max_abs() < 1e-6, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn direct_pack_matches_fake_quant_grouped() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[33, 11], 0.6, &mut rng);
+        for (bits, group) in [(4u32, 8usize), (3, 16), (8, 33)] {
+            let r = RepackedWeight::pack(&w, bits, group).unwrap();
+            let reference = fake_quant_grouped(&w, bits, group, 1.0);
+            assert!(r.dequantize().sub(&reference).max_abs() < 1e-5,
+                    "bits {bits} group {group}");
+        }
+    }
+
+    #[test]
+    fn whole_column_group_matches_per_channel() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&[17, 5], 0.5, &mut rng);
+        let r = RepackedWeight::pack(&w, 4, 17).unwrap();
+        assert_eq!(r.n_groups, 1);
+        let reference = fake_quant_per_channel(&w, 4, 1.0);
+        assert!(r.dequantize().sub(&reference).max_abs() < 1e-5);
+    }
+
+    #[test]
+    fn int4_columns_pack_two_codes_per_byte() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&[10, 4], 0.5, &mut rng);
+        let r = RepackedWeight::pack(&w, 4, 10).unwrap();
+        assert_eq!(r.col_codes(0).len(), 5);
+        // int8 stays one byte per code
+        let r8 = RepackedWeight::pack(&w, 8, 10).unwrap();
+        assert_eq!(r8.col_codes(0).len(), 10);
+    }
+
+    #[test]
+    fn odd_row_count_roundtrips() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(&[7, 3], 1.0, &mut rng);
+        let r = RepackedWeight::pack(&w, 4, 4).unwrap();
+        for k in 0..7 {
+            for c in 0..3 {
+                let g = k / 4;
+                let s = r.col_scales(c)[g];
+                let got = r.code_at(k, c) as f32 * s;
+                assert!((got - r.dequantize().at(k, c)).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_bits() {
+        let w = Tensor::zeros(&[2, 2]);
+        assert!(RepackedWeight::pack(&w, 1, 2).is_err());
+        assert!(RepackedWeight::pack(&w, 9, 2).is_err());
+    }
+}

@@ -7,6 +7,7 @@
 //! O(n) construction, O(n log n) total via the chain representation.
 
 use crate::rotation::givens::{map_to_e1, GivensChain};
+use crate::tensor::kernels::givens_rotate_rows;
 use crate::tensor::{stats, Tensor};
 
 pub struct UrtResult {
@@ -50,11 +51,12 @@ pub fn urt_rotation(v: &[f32]) -> UrtResult {
     let v_chain = map_to_e1(v);
     let u_chain = map_to_e1(&u);
     // Dense form: rows of Rᵁ are e_r -> apply v_chain -> apply u_chain⁻¹.
+    // The forward chain fans out across cores (O(n−1) per row); the
+    // inverse has no bulk kernel yet, so it stays a per-row loop.
     let mut rot = Tensor::eye(n);
+    givens_rotate_rows(&mut rot, &v_chain, 0);
     for r in 0..n {
-        let row = rot.row_mut(r);
-        v_chain.apply_row(row);
-        u_chain.apply_row_inverse(row);
+        u_chain.apply_row_inverse(rot.row_mut(r));
     }
     UrtResult { rotation: rot, target: u, v_chain, u_chain }
 }

@@ -2,9 +2,11 @@
 //! the Rust hot path. Python is never involved here.
 
 pub mod engine;
+pub mod native_backend;
 pub mod runner;
 pub mod serve_backend;
 
 pub use engine::{Artifact, Engine};
+pub use native_backend::NativeBackend;
 pub use runner::{KvCache, ModelRunner};
 pub use serve_backend::RunnerBackend;

@@ -402,7 +402,10 @@ fn handle_completions(w: &mut impl Write, req: &HttpRequest, state: &ServerState
                 "admission queue full, retry later",
             )
         }
-        Ok(Err(e @ AdmissionError::InvalidPrompt { .. })) => {
+        Ok(Err(
+            e @ (AdmissionError::InvalidPrompt { .. }
+            | AdmissionError::InvalidToken { .. }),
+        )) => {
             return respond_error(w, state, 400, "invalid_request_error", &e.to_string())
         }
         Err(_) => {

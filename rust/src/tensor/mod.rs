@@ -1,11 +1,12 @@
 //! Dense f32 tensors + the linear algebra the quantization pipeline needs.
 //!
 //! Row-major, shape-checked, deliberately simple: models in this repo are
-//! ≤ a few million parameters and all heavy inference math runs inside XLA;
-//! this module serves the *pipeline* (calibration, rotation construction,
-//! GPTQ) and the Rust reference forward used for calibration capture.
+//! ≤ a few million parameters. This module serves the *pipeline*
+//! (calibration, rotation construction, GPTQ) and the Rust reference
+//! forward; the threaded serving kernels live in [`kernels`].
 
 pub mod decomp;
+pub mod kernels;
 pub mod stats;
 
 use anyhow::{bail, Result};

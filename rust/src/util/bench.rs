@@ -18,6 +18,13 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// Stats over hand-collected times — for loops where setup work must
+    /// stay outside the timed region (`bench`/`bench_for` time the whole
+    /// closure).
+    pub fn from_times(name: &str, mut times: Vec<f64>) -> BenchStats {
+        stats_from(name, &mut times)
+    }
+
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean_s
     }

@@ -2,7 +2,10 @@
 //! `util::prop`): the mathematical guarantees the paper's constructions
 //! rest on, checked over randomized inputs.
 
+use singlequant::model::forward::{forward_score, QuantCtx};
+use singlequant::model::{ModelConfig, NativeModel, Weights};
 use singlequant::quant::pack::PackedWeight;
+use singlequant::quant::repack::RepackedWeight;
 use singlequant::quant::{fake_quant_per_channel, fake_quant_per_token, qlevels};
 use singlequant::rotation::art::{art_rotation, art_rotation_pure};
 use singlequant::rotation::baselines::{duquant_rotation, quarot_rotation};
@@ -11,8 +14,9 @@ use singlequant::rotation::hadamard::{fwht_row, hadamard_matrix};
 use singlequant::rotation::kronecker::{kron_factor, kron_rotate_rows, kron_rotate_weight};
 use singlequant::rotation::singlequant::{build_site_rotation, SingleQuantConfig, SiteProfile};
 use singlequant::rotation::urt::{uniform_target, urt_rotation};
+use singlequant::tensor::kernels::{givens_rotate_rows, matmul_packed, matmul_threaded};
 use singlequant::tensor::{decomp, stats, Tensor};
-use singlequant::util::prop::{ensure, forall};
+use singlequant::util::prop::{close, ensure, forall};
 use singlequant::util::rng::Rng;
 
 fn rand_profile(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -328,5 +332,104 @@ fn prop_singlequant_rotation_improves_outlier_quantization() {
         let e1 = fake_quant_per_token(&xr, 4, 1.0).matmul(&wr).sub(&y_ref).frob_norm()
             / y_ref.frob_norm().max(1e-9);
         ensure(e1 < 0.85 * e0, format!("no improvement: {e1} vs {e0}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Native serving kernels (tensor::kernels + quant::repack + model::native)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_matmul_packed_matches_dequantize_then_matmul() {
+    // The ISSUE-2 kernel contract: fused dequant-in-inner-loop matmul agrees
+    // with dequantize-then-f32-matmul within 1e-4 relative tolerance across
+    // bits 2..=8, odd shapes, arbitrary scale groups, and thread counts.
+    forall("matmul-packed", 40, 0x5171, |rng| {
+        let bits = 2 + rng.below(7) as u32; // 2..=8
+        let k = 3 + rng.below(40);
+        let n = 1 + rng.below(24);
+        let m = 1 + rng.below(6);
+        let group = 1 + rng.below(k);
+        let w = Tensor::randn(&[k, n], 0.7, rng);
+        let x = Tensor::randn(&[m, k], 1.0, rng);
+        (bits, group, w, x, 1 + rng.below(4))
+    }, |(bits, group, w, x, threads)| {
+        let rw = RepackedWeight::pack(w, *bits, *group).map_err(|e| e.to_string())?;
+        let reference = x.matmul(&rw.dequantize());
+        let got = matmul_packed(x, &rw, *threads);
+        for (i, (a, b)) in got.data().iter().zip(reference.data()).enumerate() {
+            ensure(
+                (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                format!("elem {i}: {a} vs {b} (bits {bits} group {group})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threaded_matmul_is_bit_identical_to_reference() {
+    forall("matmul-threaded", 30, 0x5172, |rng| {
+        let m = 1 + rng.below(12);
+        let k = 1 + rng.below(48);
+        let n = 1 + rng.below(48);
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        (a, b, 1 + rng.below(6))
+    }, |(a, b, threads)| {
+        let reference = a.matmul(b);
+        let got = matmul_threaded(a, b, *threads);
+        ensure(got.data() == reference.data(),
+               format!("threaded matmul diverged at {threads} threads"))
+    });
+}
+
+#[test]
+fn prop_givens_chain_rows_match_dense_rotation() {
+    forall("givens-rows", 40, 0x5173, |rng| {
+        let n = 2 + rng.below(30);
+        let chain = map_to_e1(&rng.normal_vec(n, 1.0));
+        let x = Tensor::randn(&[1 + rng.below(8), n], 1.0, rng);
+        (chain, x, 1 + rng.below(4))
+    }, |(chain, x, threads)| {
+        let dense = x.matmul(&chain.to_matrix(x.cols()));
+        let mut got = x.clone();
+        givens_rotate_rows(&mut got, chain, *threads);
+        close(got.data(), dense.data(), 1e-3)
+    });
+}
+
+#[test]
+fn prop_kv_cached_decode_matches_full_forward_exactly() {
+    // The ISSUE-2 decode contract: prefill a prefix, decode the rest token
+    // by token — every logits row equals the full-sequence reference
+    // forward bit-for-bit, on both the fp and the fake-quant path.
+    let cfg = ModelConfig::demo();
+    let w = Weights::random_init(&cfg, 5);
+    let ctx = QuantCtx::identity(&cfg, 4);
+    let nm_fp = NativeModel::from_weights(&cfg, &w, None, 2).unwrap();
+    let nm_q = NativeModel::from_weights(&cfg, &w, Some(ctx.clone()), 2).unwrap();
+    forall("kv-decode-exact", 6, 0x5174, |rng| {
+        let t = 2 + rng.below(10);
+        let plen = 1 + rng.below(t - 1);
+        let toks: Vec<u16> = (0..t).map(|_| rng.below(260) as u16).collect();
+        (toks, plen)
+    }, |(toks, plen)| {
+        for (nm, quant) in [(&nm_fp, None), (&nm_q, Some(&ctx))] {
+            let full = forward_score(&cfg, &w, toks, quant, None)
+                .map_err(|e| e.to_string())?;
+            let mut kv = nm.new_kv();
+            let pre = nm.prefill(&mut kv, &toks[..*plen]).map_err(|e| e.to_string())?;
+            for i in 0..*plen {
+                ensure(pre.row(i) == full.row(i),
+                       format!("prefill row {i} diverged"))?;
+            }
+            for i in *plen..toks.len() {
+                let row = nm.decode(&mut kv, toks[i]).map_err(|e| e.to_string())?;
+                ensure(row.as_slice() == full.row(i),
+                       format!("decode row {i} diverged"))?;
+            }
+        }
+        Ok(())
     });
 }
