@@ -16,9 +16,9 @@
 
 use std::sync::Arc;
 
-use singlequant::coordinator::{Request, ServeConfig, ServeEngine};
+use singlequant::coordinator::{Request, ServeBackend, ServeConfig, ServeEngine};
 use singlequant::model::{ModelConfig, NativeModel, Weights};
-use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::pipeline::{quantize, Method, PipelineOptions, QuantizedModel};
 use singlequant::quant::repack::RepackedWeight;
 use singlequant::runtime::{Engine, ModelRunner, NativeBackend, RunnerBackend};
 use singlequant::tensor::kernels::{matmul_packed, matmul_threaded};
@@ -84,7 +84,8 @@ fn kernel_section(budget: f64, smoke: bool, report: &mut Vec<Json>) {
 }
 
 /// Prefill vs KV-cached decode tokens/sec on the quantized demo model.
-fn serving_section(budget: f64, report: &mut Vec<Json>) {
+/// Returns the quantized package so later sections reuse it.
+fn serving_section(budget: f64, report: &mut Vec<Json>) -> QuantizedModel {
     let cfg = ModelConfig::demo();
     let weights = Weights::random_init(&cfg, 1);
     let mut rng = Rng::new(3);
@@ -175,6 +176,87 @@ fn serving_section(budget: f64, report: &mut Vec<Json>) {
         ("decode_tokens_per_s", Json::num(serve.metrics.decode_only_tokens_per_s())),
         ("prefill_fraction", Json::num(serve.metrics.prefill_time_fraction())),
     ]));
+    qm
+}
+
+/// Drive a fixed request trace through one backend configuration and
+/// record concurrency + throughput.
+fn kv_budget_run(
+    label: &str,
+    backend: Box<dyn ServeBackend>,
+    n_requests: usize,
+    prompt_len: usize,
+    max_new: usize,
+    report: &mut Vec<Json>,
+) {
+    let mut serve = ServeEngine::new(
+        backend,
+        ServeConfig { max_new_cap: max_new, seed: 5, queue_cap: 64 },
+    );
+    let mut rng = Rng::new(17);
+    for id in 0..n_requests as u64 {
+        let prompt: Vec<u16> = (0..prompt_len).map(|_| rng.below(256) as u16).collect();
+        serve.submit(Request::new(id, prompt).with_max_new(max_new));
+    }
+    let t0 = std::time::Instant::now();
+    let mut max_active = 0;
+    while serve.has_work() {
+        serve.step().expect("kv-budget bench step");
+        max_active = max_active.max(serve.active());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = &serve.metrics;
+    println!(
+        "kv-budget/{label}: {} reqs in {:.2}s, max {} concurrent, \
+         {:.0} decode tok/s, {} preemptions",
+        m.completed, wall, max_active, m.decode_only_tokens_per_s(), m.preemptions,
+    );
+    report.push(Json::obj(vec![
+        ("name", Json::str(format!("kv-budget/{label}"))),
+        ("kind", Json::str("kv_budget")),
+        ("requests", Json::usize(m.completed)),
+        ("wall_s", Json::num(wall)),
+        ("max_concurrent", Json::usize(max_active)),
+        ("decode_tokens_per_s", Json::num(m.decode_only_tokens_per_s())),
+        ("preemptions", Json::usize(m.preemptions)),
+        ("kv_pages_total", Json::usize(m.kv_pages_total)),
+    ]));
+}
+
+/// Serving concurrency at a fixed KV byte budget: contiguous slots each
+/// pin `max_seq` rows up front, so the budget caps the batch at the
+/// worst case; a paged pool spends the same bytes on demand and admits
+/// by actual page need (preempting if it overcommits).
+fn paged_kv_section(qm: &QuantizedModel, smoke: bool, report: &mut Vec<Json>) {
+    let (n_requests, max_new) = if smoke { (6, 4) } else { (16, 12) };
+    let prompt_len = 12;
+    let model = NativeModel::from_quantized(qm, 4, 0).expect("native model");
+    let cfg = model.cfg.clone();
+    // fp32 K+V rows across all layers
+    let bytes_per_token = 2 * cfg.n_layers * cfg.d_model * 4;
+    let budget = 2 * cfg.max_seq * bytes_per_token; // two worst-case slots
+    println!(
+        "kv-budget: {} KiB for KV ({} B/token, max_seq {})",
+        budget / 1024, bytes_per_token, cfg.max_seq
+    );
+
+    // naive sizing: batch limited to the slots that can reach max_seq
+    let contig_batch = budget / (cfg.max_seq * bytes_per_token);
+    kv_budget_run(
+        "contig",
+        Box::new(NativeBackend::new(model, contig_batch)),
+        n_requests, prompt_len, max_new, report,
+    );
+
+    for pt in [8usize, 32] {
+        let pages = budget / (pt * bytes_per_token);
+        let model = NativeModel::from_quantized(qm, 4, 0).expect("native model");
+        kv_budget_run(
+            &format!("paged-pt{pt}"),
+            Box::new(NativeBackend::with_paged_kv(model, 8, pt, pages)),
+            n_requests, prompt_len, max_new, report,
+        );
+    }
 }
 
 /// The artifact-gated PJRT section (Fig. 3 shapes).
@@ -257,7 +339,8 @@ fn main() {
     println!("{}", header());
     let mut report: Vec<Json> = Vec::new();
     kernel_section(budget, smoke, &mut report);
-    serving_section(budget, &mut report);
+    let qm = serving_section(budget, &mut report);
+    paged_kv_section(&qm, smoke, &mut report);
 
     let json = Json::obj(vec![
         ("bench", Json::str("inference")),

@@ -25,6 +25,29 @@ pub struct BackendLimits {
     pub max_seq: usize,
 }
 
+/// Snapshot of a backend's paged KV pool, read by the batcher's
+/// admission gate and exported as gauges. `None` from
+/// [`ServeBackend::kv_pool`] means the backend has no KV budget (its
+/// caches are sized for the worst case) and the gate is a no-op.
+#[derive(Clone, Copy, Debug)]
+pub struct KvPoolStatus {
+    /// Positions per page.
+    pub page_tokens: usize,
+    pub pages_total: usize,
+    pub pages_free: usize,
+}
+
+impl KvPoolStatus {
+    pub fn pages_used(&self) -> usize {
+        self.pages_total - self.pages_free
+    }
+
+    /// Pages needed to hold `tokens` positions.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+}
+
 /// A model the batcher can drive: one padded prefill per admission wave,
 /// one decode step per tick. Implementations own their KV state; the
 /// scheduler only tracks per-slot positions.
@@ -45,10 +68,28 @@ pub trait ServeBackend: Send {
 
     /// A slot finished (EOS/length/deadline/cancel/abort): drop any
     /// per-slot backend state — e.g. the native backend frees the slot's
-    /// KV rows here. Backends whose per-slot state is overwritten on the
-    /// next prefill (the fixed-shape PJRT cache, the synthetic model) keep
-    /// the default no-op.
+    /// KV rows here (returning its pages to the pool in paged mode).
+    /// Backends whose per-slot state is overwritten on the next prefill
+    /// (the fixed-shape PJRT cache, the synthetic model) keep the default
+    /// no-op.
     fn retire(&mut self, _slot: usize) {}
+
+    /// Paged-KV pool status; `None` disables KV admission gating.
+    fn kv_pool(&self) -> Option<KvPoolStatus> {
+        None
+    }
+
+    /// Reserve KV capacity for `extra` more positions in `slot` ahead of
+    /// the prefill/decode that will write them. Returns `false` when the
+    /// pool cannot cover the reservation *right now* (nothing is
+    /// allocated in that case); backends without a KV budget always
+    /// succeed. The batcher reserves prompt pages at admission and one
+    /// position per slot before each decode wave, so pool exhaustion
+    /// surfaces here — as admission backpressure or preemption — and
+    /// never as a step error.
+    fn kv_reserve(&mut self, _slot: usize, _extra: usize) -> bool {
+        true
+    }
 }
 
 /// Deterministic model-free backend: the "token calculator".
@@ -61,6 +102,37 @@ pub trait ServeBackend: Send {
 pub struct SyntheticBackend {
     limits: BackendLimits,
     step_delay: Duration,
+    pool: Option<SynthKvPool>,
+}
+
+/// Book-keeping-only KV pool (no storage): tracks pages per slot with
+/// the same all-or-nothing reserve semantics as `kv::BlockPool`, so
+/// batcher admission/preemption logic is testable without a model.
+struct SynthKvPool {
+    page_tokens: usize,
+    pages_total: usize,
+    pages_free: usize,
+    slot_pages: Vec<usize>,
+    slot_pos: Vec<usize>,
+}
+
+impl SynthKvPool {
+    fn reserve(&mut self, slot: usize, extra: usize) -> bool {
+        let needed = (self.slot_pos[slot] + extra).div_ceil(self.page_tokens);
+        let missing = needed.saturating_sub(self.slot_pages[slot]);
+        if missing > self.pages_free {
+            return false;
+        }
+        self.pages_free -= missing;
+        self.slot_pages[slot] += missing;
+        true
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.pages_free += self.slot_pages[slot];
+        self.slot_pages[slot] = 0;
+        self.slot_pos[slot] = 0;
+    }
 }
 
 impl SyntheticBackend {
@@ -73,7 +145,22 @@ impl SyntheticBackend {
                 max_seq: 160,
             },
             step_delay: Duration::ZERO,
+            pool: None,
         }
+    }
+
+    /// Attach a book-keeping KV pool so the batcher's admission gate and
+    /// preemption path run against this backend.
+    pub fn with_kv_pool(mut self, page_tokens: usize, pages: usize) -> SyntheticBackend {
+        let batch = self.limits.batch;
+        self.pool = Some(SynthKvPool {
+            page_tokens,
+            pages_total: pages,
+            pages_free: pages,
+            slot_pages: vec![0; batch],
+            slot_pos: vec![0; batch],
+        });
+        self
     }
 
     /// Simulated per-call latency (applied to prefill and decode alike).
@@ -105,11 +192,24 @@ impl ServeBackend for SyntheticBackend {
         self.limits
     }
 
-    fn prefill(&mut self, tokens: &[i32], _admitted: &[usize]) -> Result<Tensor> {
+    fn prefill(&mut self, tokens: &[i32], admitted: &[usize]) -> Result<Tensor> {
         let BackendLimits { batch, score_seq: t, vocab_size: v, .. } = self.limits;
         anyhow::ensure!(tokens.len() == batch * t, "prefill shape mismatch");
         if !self.step_delay.is_zero() {
             std::thread::sleep(self.step_delay);
+        }
+        if let Some(pool) = &mut self.pool {
+            // strict accounting: the batcher must have reserved prompt
+            // pages at admission; a shortfall here is a scheduler bug
+            for &slot in admitted {
+                let plen = tokens[slot * t..(slot + 1) * t]
+                    .iter()
+                    .take_while(|&&tok| tok != PAD as i32)
+                    .count();
+                anyhow::ensure!(pool.reserve(slot, plen),
+                                "prefill without a KV reservation in slot {slot}");
+                pool.slot_pos[slot] = plen;
+            }
         }
         let mut logits = Tensor::zeros(&[batch, t, v]);
         for slot in 0..batch {
@@ -140,10 +240,36 @@ impl ServeBackend for SyntheticBackend {
             if tok == PAD as i32 {
                 continue;
             }
+            if let Some(pool) = &mut self.pool {
+                anyhow::ensure!(pool.reserve(slot, 1),
+                                "decode without a KV reservation in slot {slot}");
+                pool.slot_pos[slot] += 1;
+            }
             let arg = Self::next_token(tok as u16) as usize;
             logits.data_mut()[slot * v + arg] = 1.0;
         }
         Ok(logits)
+    }
+
+    fn retire(&mut self, slot: usize) {
+        if let Some(pool) = &mut self.pool {
+            pool.release(slot);
+        }
+    }
+
+    fn kv_pool(&self) -> Option<KvPoolStatus> {
+        self.pool.as_ref().map(|p| KvPoolStatus {
+            page_tokens: p.page_tokens,
+            pages_total: p.pages_total,
+            pages_free: p.pages_free,
+        })
+    }
+
+    fn kv_reserve(&mut self, slot: usize, extra: usize) -> bool {
+        match &mut self.pool {
+            Some(pool) => pool.reserve(slot, extra),
+            None => true,
+        }
     }
 }
 

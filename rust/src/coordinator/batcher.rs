@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::backend::{BackendLimits, ServeBackend};
+use super::backend::{BackendLimits, KvPoolStatus, ServeBackend};
 use super::events::{FinishReason, TokenEvent};
 use super::metrics::ServeMetrics;
 use super::request::{InFlight, Request, Response, MIN_TEMPERATURE};
@@ -52,7 +52,7 @@ impl Default for ServeConfig {
 }
 
 /// Why `try_submit` refused a request (the HTTP layer maps `QueueFull`
-/// to 429 and the rest to 400).
+/// and `KvBudget` to 429 and the rest to 400).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum AdmissionError {
     QueueFull { cap: usize },
@@ -62,6 +62,12 @@ pub enum AdmissionError {
     /// sentinel of the prefill/decode waves, so letting it through would
     /// truncate the prompt and desync per-slot KV state.
     InvalidToken { token: u16 },
+    /// The request's worst-case KV demand (prompt + capped generation,
+    /// clamped to `max_seq`) exceeds the *entire* page pool: it could
+    /// never run, no matter how long it waits, so it is refused up
+    /// front (429 — a client retry against a bigger replica can serve
+    /// it, waiting here cannot).
+    KvBudget { needed_pages: usize, pool_pages: usize },
 }
 
 impl fmt::Display for AdmissionError {
@@ -76,17 +82,32 @@ impl fmt::Display for AdmissionError {
             AdmissionError::InvalidToken { token } => {
                 write!(f, "prompt token {token} not ingestible (PAD or out of vocab)")
             }
+            AdmissionError::KvBudget { needed_pages, pool_pages } => {
+                write!(
+                    f,
+                    "request needs {needed_pages} KV page(s) worst-case but the pool \
+                     has only {pool_pages}"
+                )
+            }
         }
     }
 }
 
 impl std::error::Error for AdmissionError {}
 
-/// A submitted request waiting for a slot.
+/// A submitted request waiting for a slot. A preempted request comes
+/// back here with its already-generated tokens in `resumed`: on
+/// re-admission the backend prefills `prompt ++ resumed` (exact replay,
+/// by the bit-identity of the cached decode path) and generation
+/// continues where it stopped — the tokens are not re-emitted.
 struct Queued {
     req: Request,
     sink: Option<Sender<TokenEvent>>,
     enqueued: Instant,
+    resumed: Vec<u16>,
+    /// Carried streaming state: bytes of a UTF-8 sequence cut by
+    /// preemption mid-character.
+    utf8_pending: Vec<u8>,
 }
 
 pub struct ServeEngine {
@@ -155,14 +176,35 @@ impl ServeEngine {
     /// [`try_submit`]: ServeEngine::try_submit
     pub fn submit(&mut self, mut req: Request) {
         req.normalize();
-        self.queue.push_back(Queued { req, sink: None, enqueued: Instant::now() });
+        self.queue.push_back(Queued {
+            req,
+            sink: None,
+            enqueued: Instant::now(),
+            resumed: Vec::new(),
+            utf8_pending: Vec::new(),
+        });
     }
 
     /// Unbounded enqueue with a per-token event subscriber.
     pub fn submit_streaming(&mut self, mut req: Request, sink: Sender<TokenEvent>) {
         req.normalize();
-        self.queue
-            .push_back(Queued { req, sink: Some(sink), enqueued: Instant::now() });
+        self.queue.push_back(Queued {
+            req,
+            sink: Some(sink),
+            enqueued: Instant::now(),
+            resumed: Vec::new(),
+            utf8_pending: Vec::new(),
+        });
+    }
+
+    /// Worst-case page demand of a request: prompt plus the capped
+    /// generation length, clamped to the cache horizon (`finish_reason`
+    /// stops generation at `max_seq` regardless). Replay does not change
+    /// this — resumed tokens count against the same cap.
+    fn kv_worst_pages(&self, req: &Request, pool: &KvPoolStatus) -> usize {
+        let cap = req.max_new_tokens.min(self.cfg.max_new_cap);
+        let worst = (req.prompt_tokens.len() + cap).min(self.limits.max_seq);
+        pool.pages_for(worst)
     }
 
     /// A prompt token the backends cannot ingest: PAD (the in-band
@@ -196,8 +238,24 @@ impl ServeEngine {
             self.metrics.rejected += 1;
             return Err(AdmissionError::QueueFull { cap: self.cfg.queue_cap });
         }
+        if let Some(pool) = self.backend.kv_pool() {
+            let needed = self.kv_worst_pages(&req, &pool);
+            if needed > pool.pages_total {
+                self.metrics.kv_rejected += 1;
+                return Err(AdmissionError::KvBudget {
+                    needed_pages: needed,
+                    pool_pages: pool.pages_total,
+                });
+            }
+        }
         req.normalize();
-        self.queue.push_back(Queued { req, sink, enqueued: Instant::now() });
+        self.queue.push_back(Queued {
+            req,
+            sink,
+            enqueued: Instant::now(),
+            resumed: Vec::new(),
+            utf8_pending: Vec::new(),
+        });
         Ok(())
     }
 
@@ -345,9 +403,22 @@ impl ServeEngine {
                     // by construction)
                     let err = if plen == 0 || plen > t {
                         Some(AdmissionError::InvalidPrompt { len: plen, max: t })
+                    } else if let Some(token) = self.bad_prompt_token(&q.req) {
+                        Some(AdmissionError::InvalidToken { token })
+                    } else if let Some(pool) = self.backend.kv_pool() {
+                        // a request whose worst case exceeds the whole
+                        // pool can never run (legacy `submit` path; the
+                        // bounded path refuses it in `try_submit`)
+                        let needed = self.kv_worst_pages(&q.req, &pool);
+                        (needed > pool.pages_total).then(|| {
+                            self.metrics.kv_rejected += 1;
+                            AdmissionError::KvBudget {
+                                needed_pages: needed,
+                                pool_pages: pool.pages_total,
+                            }
+                        })
                     } else {
-                        self.bad_prompt_token(&q.req)
-                            .map(|token| AdmissionError::InvalidToken { token })
+                        None
                     };
                     if let Some(err) = err {
                         self.metrics.failed += 1;
@@ -358,30 +429,48 @@ impl ServeEngine {
                         });
                         continue;
                     }
+                    // eager page reservation for the (replayed) prompt:
+                    // if the pool cannot hold it right now, the head of
+                    // the queue waits for retirements to free pages —
+                    // deliberate head-of-line blocking, so an old large
+                    // request is not starved by younger small ones
+                    let plen_total = q.req.prompt_tokens.len() + q.resumed.len();
+                    if !self.backend.kv_reserve(slot, plen_total) {
+                        self.queue.push_front(q);
+                        break 'slots;
+                    }
                     break q;
                 };
-                for (j, &tok) in q.req.prompt_tokens.iter().enumerate() {
+                let fresh = q.resumed.is_empty();
+                for (j, &tok) in
+                    q.req.prompt_tokens.iter().chain(q.resumed.iter()).enumerate()
+                {
                     tokens[slot * t + j] = tok as i32;
                 }
                 let now = Instant::now();
-                self.metrics
-                    .queue_wait
-                    .record(now.duration_since(q.enqueued).as_secs_f64());
+                if fresh {
+                    self.metrics
+                        .queue_wait
+                        .record(now.duration_since(q.enqueued).as_secs_f64());
+                }
                 self.slots[slot] = Some(InFlight {
                     enqueued: q.enqueued,
                     admitted: now,
                     first_token: None,
-                    generated: Vec::new(),
+                    generated: q.resumed,
                     pos: 0,
                     last_token: PAD,
                     sink: q.sink,
                     cancelled: false,
-                    utf8_pending: Vec::new(),
+                    utf8_pending: q.utf8_pending,
                     req: q.req,
                 });
                 let inf = self.slots[slot].as_mut().unwrap();
                 let id = inf.req.id;
-                emit(inf, &mut events, TokenEvent::Started { id });
+                if fresh {
+                    // a replayed request already announced itself
+                    emit(inf, &mut events, TokenEvent::Started { id });
+                }
                 admitted.push(slot);
             }
             if !admitted.is_empty() {
@@ -394,13 +483,16 @@ impl ServeEngine {
                 let v = self.limits.vocab_size;
                 for &slot in &admitted {
                     let inf = self.slots[slot].as_mut().unwrap();
-                    let plen = inf.req.prompt_tokens.len();
+                    // replayed tokens are part of the prefill, so the
+                    // next token is sampled at the combined last index
+                    let plen = inf.req.prompt_tokens.len() + inf.generated.len();
                     let temperature = inf.req.temperature;
                     let id = inf.req.id;
                     let row = row3(&logits, slot, plen - 1, v);
                     let tok = Self::sample(&mut self.rng, row, temperature);
                     let inf = self.slots[slot].as_mut().unwrap();
                     inf.first_token = Some(Instant::now());
+                    let index = inf.generated.len();
                     inf.generated.push(tok);
                     inf.last_token = tok;
                     inf.pos = plen;
@@ -408,7 +500,7 @@ impl ServeEngine {
                     self.metrics.generated_tokens += 1;
                     if tok != EOS {
                         let text = decode_stream(&mut inf.utf8_pending, tok);
-                        let ev = TokenEvent::Token { id, index: 0, token: tok, text };
+                        let ev = TokenEvent::Token { id, index, token: tok, text };
                         emit(inf, &mut events, ev);
                     }
                 }
@@ -425,6 +517,29 @@ impl ServeEngine {
         for slot in 0..self.limits.batch {
             if self.slots[slot].is_some() {
                 self.maybe_retire(slot, now, &mut events);
+            }
+        }
+
+        // ---- KV reservation + preemption (paged backends) ------------------
+        // Every active slot needs room for the position the decode wave
+        // will append. Reserve oldest-first; when the pool runs dry,
+        // evict the lowest-priority (youngest) slot and requeue it with
+        // its generated tokens — pool pressure surfaces as preemption or
+        // admission backpressure, never as a backend step error.
+        if self.backend.kv_pool().is_some() && self.active() > 0 {
+            let mut order: Vec<usize> = (0..self.limits.batch)
+                .filter(|&i| self.slots[i].is_some())
+                .collect();
+            order.sort_by_key(|&i| self.slots[i].as_ref().unwrap().enqueued);
+            for &slot in &order {
+                while self.slots[slot].is_some() && !self.backend.kv_reserve(slot, 1) {
+                    let victim = self
+                        .pick_victim()
+                        .expect("an active slot exists while reserving");
+                    self.preempt(victim, &mut events);
+                    // if `slot` itself was the victim the loop exits via
+                    // the is_some() guard
+                }
             }
         }
 
@@ -474,8 +589,51 @@ impl ServeEngine {
             }
         }
 
+        if let Some(pool) = self.backend.kv_pool() {
+            self.metrics.kv_pages_total = pool.pages_total;
+            self.metrics.kv_pages_used = pool.pages_used();
+        }
         self.metrics.wall_s = self.started.unwrap().elapsed().as_secs_f64();
         Ok(events)
+    }
+
+    /// The slot to evict under pool pressure: lowest priority = latest
+    /// `enqueued` (ties to the highest index). The caller may receive
+    /// the very slot it is reserving for — preempting it is still
+    /// correct (it requeues at the front and re-admits first).
+    fn pick_victim(&self) -> Option<usize> {
+        (0..self.limits.batch)
+            .filter(|&i| self.slots[i].is_some())
+            .max_by_key(|&i| (self.slots[i].as_ref().unwrap().enqueued, i))
+    }
+
+    /// Evict `slot` to relieve KV pressure. Replayable requests (prompt
+    /// + generated still fits the prefill window) requeue at the *front*
+    /// with their tokens saved — re-admission prefills `prompt ++
+    /// generated`, which the bit-exact cached path replays identically.
+    /// A request that outgrew the window finishes gracefully with the
+    /// partial output instead.
+    fn preempt(&mut self, slot: usize, events: &mut Vec<TokenEvent>) {
+        self.metrics.preemptions += 1;
+        let plen_total = {
+            let inf = self.slots[slot].as_ref().expect("preempt of empty slot");
+            inf.req.prompt_tokens.len() + inf.generated.len()
+        };
+        if plen_total > self.limits.score_seq {
+            self.retire(slot, FinishReason::Length, events);
+            return;
+        }
+        let inf = self.slots[slot].take().unwrap();
+        self.backend.retire(slot);
+        self.queue.push_front(Queued {
+            req: inf.req,
+            sink: inf.sink,
+            // keep the original arrival time: the replay outranks every
+            // younger request at the next admission
+            enqueued: inf.enqueued,
+            resumed: inf.generated,
+            utf8_pending: inf.utf8_pending,
+        });
     }
 
     fn finish_reason(&self, slot: usize, now: Instant) -> Option<FinishReason> {
@@ -863,6 +1021,95 @@ mod tests {
         assert_eq!(resp.tokens, want);
         assert_eq!(resp.finish, FinishReason::Length);
         assert!(resp.latency_s >= resp.ttft_s);
+    }
+
+    #[test]
+    fn kv_budget_rejects_impossible_requests() {
+        let mut e = ServeEngine::new(
+            Box::new(SyntheticBackend::new(1).with_seq(32, 64).with_kv_pool(4, 4)),
+            ServeConfig { max_new_cap: 16, seed: 1, queue_cap: 8 },
+        );
+        // worst case 8 prompt + 16 capped new = 24 tokens -> 6 pages > 4:
+        // could never run on this pool, refused up front
+        assert_eq!(
+            e.try_submit(Request::new(0, vec![1; 8]).with_max_new(16), None),
+            Err(AdmissionError::KvBudget { needed_pages: 6, pool_pages: 4 })
+        );
+        assert_eq!(e.metrics.kv_rejected, 1);
+        // the legacy unbounded submit path fails it at admit time instead
+        e.submit(Request::new(1, vec![1; 8]).with_max_new(16));
+        let evs = e.step().unwrap();
+        match evs.first() {
+            Some(TokenEvent::Failed { error, .. }) => {
+                assert!(error.contains("KV page"), "unexpected error {error:?}");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(e.metrics.kv_rejected, 2);
+        // a request that fits runs to completion and returns its pages
+        assert!(e
+            .try_submit(Request::new(2, vec![1, 2]).with_max_new(4), None)
+            .is_ok());
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 4);
+        assert_eq!(e.metrics.kv_pages_total, 4);
+        assert_eq!(e.metrics.kv_pages_used, 0, "retirement frees the pages");
+    }
+
+    #[test]
+    fn pool_pressure_preempts_and_replays_to_completion() {
+        // 3 pages x 4 tokens = 12 positions, but two 4-token prompts each
+        // generating 8 need 2 x 12 = 24 at peak: the pool admits both and
+        // must preempt the younger slot, requeue it with its generated
+        // tokens, and replay it once the older request retires.
+        let mut e = ServeEngine::new(
+            Box::new(SyntheticBackend::new(2).with_seq(32, 64).with_kv_pool(4, 3)),
+            ServeConfig { max_new_cap: 16, seed: 1, queue_cap: 8 },
+        );
+        let mut rxs = Vec::new();
+        for id in 0..2u64 {
+            let (tx, rx) = channel();
+            let prompt = vec![10 + id as u16; 4];
+            e.try_submit(Request::new(id, prompt).with_max_new(8), Some(tx))
+                .unwrap();
+            rxs.push(rx);
+        }
+        let mut done = 0;
+        let mut ticks = 0;
+        while e.has_work() {
+            ticks += 1;
+            assert!(ticks < 100, "pool pressure must not livelock");
+            for ev in e.step().expect("pool pressure must never error a step") {
+                if let TokenEvent::Done { reason, response, .. } = ev {
+                    assert_eq!(reason, FinishReason::Length);
+                    assert_eq!(response.tokens.len(), 8);
+                    done += 1;
+                }
+            }
+        }
+        assert_eq!(done, 2, "every request completes despite preemption");
+        assert!(e.metrics.preemptions >= 1, "3 pages cannot hold both slots");
+        assert_eq!(e.metrics.kv_pages_used, 0, "all pages returned");
+        // each subscriber saw exactly one Started and a gapless token
+        // index sequence: replay must not re-emit delivered tokens
+        for (id, rx) in rxs.iter().enumerate() {
+            let evs: Vec<TokenEvent> = rx.try_iter().collect();
+            let starts = evs
+                .iter()
+                .filter(|ev| matches!(ev, TokenEvent::Started { .. }))
+                .count();
+            assert_eq!(starts, 1, "req {id}: replay must not re-announce");
+            let idxs: Vec<usize> = evs
+                .iter()
+                .filter_map(|ev| match ev {
+                    TokenEvent::Token { index, .. } => Some(*index),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(idxs, (0..8).collect::<Vec<_>>(),
+                       "req {id}: token stream has gaps or repeats");
+        }
     }
 
     #[test]

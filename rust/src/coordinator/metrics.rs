@@ -72,6 +72,16 @@ pub struct ServeMetrics {
     pub prefill_calls: usize,
     /// Requests refused by bounded admission (HTTP 429).
     pub rejected: usize,
+    /// Requests refused because their worst-case KV demand exceeds the
+    /// whole page pool (HTTP 429).
+    pub kv_rejected: usize,
+    /// Slots evicted under KV pool pressure (requeued with saved tokens,
+    /// or finished with partial output when no longer replayable).
+    pub preemptions: usize,
+    /// Paged-KV pool gauges (zero when the backend has no page pool),
+    /// refreshed every scheduler tick.
+    pub kv_pages_total: usize,
+    pub kv_pages_used: usize,
     /// Requests cut off by their deadline (queued or in flight).
     pub timeouts: usize,
     /// Requests whose subscriber disconnected mid-generation.
@@ -113,12 +123,21 @@ impl ServeMetrics {
         self.prefill_seconds / total
     }
 
+    /// Live KV pool utilization in [0, 1]; 0 when there is no pool.
+    pub fn kv_utilization(&self) -> f64 {
+        if self.kv_pages_total == 0 {
+            return 0.0;
+        }
+        self.kv_pages_used as f64 / self.kv_pages_total as f64
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "completed={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
              decode_tput={:.1} tok/s prefill/decode split={:.0}%/{:.0}% \
              ttft p50={:.1}ms p95={:.1}ms latency p50={:.1}ms decode_step p50={:.2}ms \
-             per_token p50={:.2}ms p95={:.2}ms rejected={} timeouts={} cancelled={}",
+             per_token p50={:.2}ms p95={:.2}ms rejected={} timeouts={} cancelled={} \
+             kv_pages={}/{} preemptions={} kv_rejected={}",
             self.completed,
             self.generated_tokens,
             self.wall_s,
@@ -135,6 +154,10 @@ impl ServeMetrics {
             self.rejected,
             self.timeouts,
             self.cancelled,
+            self.kv_pages_used,
+            self.kv_pages_total,
+            self.preemptions,
+            self.kv_rejected,
         )
     }
 
@@ -170,6 +193,25 @@ impl ServeMetrics {
                 "Decode waves executed.", self.decode_steps as f64);
         counter(&mut o, "singlequant_prefill_calls_total",
                 "Prefill batches executed.", self.prefill_calls as f64);
+        counter(&mut o, "singlequant_preemptions_total",
+                "Slots evicted under KV pool pressure.", self.preemptions as f64);
+        counter(&mut o, "singlequant_kv_admission_rejected_total",
+                "Requests refused because their worst-case KV demand exceeds \
+                 the page pool (429).", self.kv_rejected as f64);
+
+        let gauge = |o: &mut String, name: &str, help: &str, v: f64| {
+            let _ = writeln!(o, "# HELP {name} {help}");
+            let _ = writeln!(o, "# TYPE {name} gauge");
+            let _ = writeln!(o, "{name} {v}");
+        };
+        gauge(&mut o, "singlequant_kv_pages_total",
+              "Pages in the KV block pool (0 = contiguous KV, no pool).",
+              self.kv_pages_total as f64);
+        gauge(&mut o, "singlequant_kv_pages_used",
+              "KV pool pages currently held by slots.",
+              self.kv_pages_used as f64);
+        gauge(&mut o, "singlequant_kv_pool_utilization",
+              "Used fraction of the KV page pool.", self.kv_utilization());
 
         let quantiles = |o: &mut String, name: &str, help: &str, h: &Histogram| {
             let _ = writeln!(o, "# HELP {name} {help}");
@@ -271,9 +313,19 @@ mod tests {
         m.ttft.record(0.010);
         m.ttft.record(0.030);
         m.per_token.record(0.002);
+        m.kv_pages_total = 8;
+        m.kv_pages_used = 2;
+        m.preemptions = 5;
+        m.kv_rejected = 4;
         let text = m.prometheus();
         assert!(text.contains("singlequant_requests_completed_total 3"));
         assert!(text.contains("singlequant_requests_rejected_total 1"));
+        assert!(text.contains("singlequant_kv_pages_total 8"));
+        assert!(text.contains("singlequant_kv_pages_used 2"));
+        assert!(text.contains("singlequant_kv_pool_utilization 0.25"));
+        assert!(text.contains("singlequant_preemptions_total 5"));
+        assert!(text.contains("singlequant_kv_admission_rejected_total 4"));
+        assert!(text.contains("# TYPE singlequant_kv_pages_used gauge"));
         assert!(text.contains("singlequant_ttft_seconds{quantile=\"0.5\"}"));
         assert!(text.contains("singlequant_per_token_seconds{quantile=\"0.95\"}"));
         assert!(text.contains("# TYPE singlequant_tokens_generated_total counter"));

@@ -1,0 +1,97 @@
+//! The contiguous per-slot cache: one growable `Vec<f32>` per layer per
+//! side. This is the original `SlotKv` layout — kept as the default for
+//! single-request tools (eval, generate, bench) and as the bit-exact
+//! reference the paged view is property-tested against.
+
+use super::{KvCache, KvError, KvRows};
+
+/// Per-slot KV cache: post-RoPE K/V rows per layer, appended as
+/// positions fill. Grows lazily to at most `max_seq · d_model` floats
+/// per side per layer; `reset` keeps the allocation for the slot's next
+/// request.
+pub struct SlotKv {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Number of cached positions (== rows per layer).
+    pub pos: usize,
+    /// Row width (`d_model`).
+    d: usize,
+}
+
+impl SlotKv {
+    pub fn new(n_layers: usize, d_model: usize) -> SlotKv {
+        SlotKv {
+            k: (0..n_layers).map(|_| Vec::new()).collect(),
+            v: (0..n_layers).map(|_| Vec::new()).collect(),
+            pos: 0,
+            d: d_model,
+        }
+    }
+
+    /// Drop the cached sequence (retire/reuse); capacity is kept.
+    pub fn reset(&mut self) {
+        for side in self.k.iter_mut().chain(self.v.iter_mut()) {
+            side.clear();
+        }
+        self.pos = 0;
+    }
+
+    /// Resident bytes currently held by this slot's cache.
+    pub fn nbytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|s| s.len() * 4).sum::<usize>()
+    }
+}
+
+impl KvRows for SlotKv {
+    fn rows(&self, layer: usize, pos: usize) -> (&[f32], &[f32]) {
+        let (a, b) = (pos * self.d, (pos + 1) * self.d);
+        (&self.k[layer][a..b], &self.v[layer][a..b])
+    }
+}
+
+impl KvCache for SlotKv {
+    fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn reserve(&mut self, _extra: usize) -> Result<(), KvError> {
+        Ok(()) // contiguous slots grow on demand; max_seq is checked upstream
+    }
+
+    fn append_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(pos * self.d, self.k[layer].len(), "non-sequential append");
+        debug_assert_eq!(k.len(), self.d);
+        self.k[layer].extend_from_slice(k);
+        self.v[layer].extend_from_slice(v);
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.pos += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_read_reset_cycle() {
+        let d = 4;
+        let mut kv = SlotKv::new(2, d);
+        kv.reserve(3).unwrap();
+        for pos in 0..3 {
+            for layer in 0..2 {
+                kv.append_row(layer, pos, &vec![pos as f32; d], &vec![-(pos as f32); d]);
+            }
+        }
+        kv.advance(3);
+        assert_eq!(kv.pos, 3);
+        let (k, v) = kv.rows(1, 2);
+        assert!(k.iter().all(|&x| x == 2.0));
+        assert!(v.iter().all(|&x| x == -2.0));
+        assert_eq!(kv.nbytes(), 2 * 2 * 3 * d * 4);
+        kv.reset();
+        assert_eq!(kv.pos, 0);
+        assert_eq!(kv.nbytes(), 0);
+    }
+}

@@ -1,0 +1,80 @@
+//! Paged KV-cache subsystem: a fixed-size page pool, per-slot page
+//! tables, and the cache traits the native execution engine reads and
+//! writes through.
+//!
+//! The contiguous per-slot cache ([`SlotKv`]) sizes every slot for the
+//! worst case (`max_seq` rows), so a batcher running `B` slots must
+//! budget `B × max_seq` rows even though most requests finish far
+//! shorter. The paged layout ([`BlockPool`] + [`PageTable`]) instead
+//! hands out fixed-size pages — each holding `page_tokens` positions of
+//! every layer's K and V rows — from one shared free list, so memory
+//! follows the *actual* live token count and the batcher can safely
+//! overcommit, falling back to preemption when the pool runs dry.
+//!
+//! Both implementations expose the same [`KvCache`] interface and
+//! produce bit-identical reads: a cached row is the same `d_model` f32
+//! slice whether it lives in a slot-owned `Vec` or inside a pool page,
+//! and `model::layers::attention_step_kv` consumes rows position by
+//! position in the same order either way. The property tests in
+//! `model::native` pin this down across page sizes.
+
+mod contig;
+mod paged;
+mod pool;
+
+pub use contig::SlotKv;
+pub use paged::{PageTable, PagedSlot};
+pub use pool::BlockPool;
+
+use std::error::Error;
+use std::fmt;
+
+/// KV allocation failure. Carried through `anyhow` so callers up the
+/// stack (the serving backend, the batcher) can downcast and translate
+/// pool pressure into admission control instead of an engine abort.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvError {
+    /// The free list cannot cover an allocation of `needed` more pages.
+    PoolExhausted { needed: usize, free: usize },
+}
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvError::PoolExhausted { needed, free } => write!(
+                f,
+                "kv pool exhausted: need {needed} page(s), {free} free"
+            ),
+        }
+    }
+}
+
+impl Error for KvError {}
+
+/// Read access to cached K/V rows. `rows(layer, pos)` returns the
+/// post-RoPE K and V rows (each `d_model` floats) cached at `pos` —
+/// the only lookup the attention read path needs.
+pub trait KvRows {
+    fn rows(&self, layer: usize, pos: usize) -> (&[f32], &[f32]);
+}
+
+/// A per-request KV cache the step functions write into. `reserve`
+/// must be called (and succeed) before `append_row` touches positions
+/// beyond the current capacity; contiguous caches always succeed while
+/// paged caches may report [`KvError::PoolExhausted`] — *before* any
+/// state changes, so a failed reservation leaves the cache replayable.
+pub trait KvCache: KvRows {
+    /// Number of cached positions.
+    fn pos(&self) -> usize;
+
+    /// Ensure capacity for `extra` positions beyond `pos()`.
+    fn reserve(&mut self, extra: usize) -> Result<(), KvError>;
+
+    /// Write the K and V rows for `(layer, pos)`; `pos` must be inside
+    /// the reserved capacity and `>= self.pos()` (rows are appended
+    /// layer by layer before `advance` commits them).
+    fn append_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+
+    /// Commit `n` appended positions: `pos()` grows by `n`.
+    fn advance(&mut self, n: usize);
+}

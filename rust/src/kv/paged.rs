@@ -1,0 +1,178 @@
+//! Per-slot page tables and the paged cache view the model executes
+//! against.
+//!
+//! A [`PageTable`] is just the slot's ordered list of pool pages plus
+//! the committed position count: position `p` lives in
+//! `pages[p / page_tokens]` at in-page index `p % page_tokens`. The
+//! table owns no storage — pages go back to the pool on `release`
+//! (retire/preempt), making eviction O(pages).
+//!
+//! [`PagedSlot`] borrows the pool and one table for the duration of a
+//! prefill/decode call and implements [`KvCache`] over them; the model
+//! never sees pages, only `rows(layer, pos)`.
+
+use super::pool::BlockPool;
+use super::{KvCache, KvError, KvRows};
+
+/// One slot's page list + committed length. Default state holds no
+/// pages and zero positions.
+#[derive(Default)]
+pub struct PageTable {
+    pages: Vec<u32>,
+    pos: usize,
+}
+
+impl PageTable {
+    pub fn new() -> PageTable {
+        PageTable::default()
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Positions the held pages can store.
+    pub fn capacity(&self, pool: &BlockPool) -> usize {
+        self.pages.len() * pool.page_tokens()
+    }
+
+    /// Grow the page list (all-or-nothing) so `pos + extra` positions
+    /// fit. Idempotent: already-held pages are never re-allocated.
+    pub fn reserve(&mut self, pool: &mut BlockPool, extra: usize) -> Result<(), KvError> {
+        let needed = pool.pages_for(self.pos + extra);
+        if needed > self.pages.len() {
+            pool.alloc(needed - self.pages.len(), &mut self.pages)?;
+        }
+        Ok(())
+    }
+
+    /// Return every page to the pool and forget the sequence.
+    pub fn release(&mut self, pool: &mut BlockPool) {
+        for page in self.pages.drain(..) {
+            pool.release(page);
+        }
+        self.pos = 0;
+    }
+}
+
+/// Borrowed (pool, table) pair implementing the cache interface for one
+/// model call.
+pub struct PagedSlot<'a> {
+    pub pool: &'a mut BlockPool,
+    pub table: &'a mut PageTable,
+}
+
+impl<'a> PagedSlot<'a> {
+    #[inline]
+    fn locate(&self, pos: usize) -> (u32, usize) {
+        let pt = self.pool.page_tokens();
+        let page = *self
+            .table
+            .pages
+            .get(pos / pt)
+            .expect("kv position outside reserved pages");
+        (page, pos % pt)
+    }
+}
+
+impl KvRows for PagedSlot<'_> {
+    fn rows(&self, layer: usize, pos: usize) -> (&[f32], &[f32]) {
+        let (page, idx) = self.locate(pos);
+        (self.pool.row(page, layer, 0, idx), self.pool.row(page, layer, 1, idx))
+    }
+}
+
+impl KvCache for PagedSlot<'_> {
+    fn pos(&self) -> usize {
+        self.table.pos
+    }
+
+    fn reserve(&mut self, extra: usize) -> Result<(), KvError> {
+        self.table.reserve(self.pool, extra)
+    }
+
+    fn append_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let (page, idx) = self.locate(pos);
+        self.pool.row_mut(page, layer, 0, idx).copy_from_slice(k);
+        self.pool.row_mut(page, layer, 1, idx).copy_from_slice(v);
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.table.pos += n;
+        debug_assert!(
+            self.table.pos <= self.table.capacity(self.pool),
+            "advance past reserved capacity"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_is_idempotent_and_all_or_nothing() {
+        let mut pool = BlockPool::new(1, 4, 4, 3);
+        let mut table = PageTable::new();
+        table.reserve(&mut pool, 5).unwrap(); // 2 pages
+        assert_eq!(table.n_pages(), 2);
+        table.reserve(&mut pool, 5).unwrap(); // no growth needed
+        assert_eq!(table.n_pages(), 2);
+        assert_eq!(pool.pages_free(), 1);
+        // 13 positions would need 4 pages; only 1 more exists
+        let err = table.reserve(&mut pool, 13).unwrap_err();
+        assert_eq!(err, KvError::PoolExhausted { needed: 2, free: 1 });
+        assert_eq!(table.n_pages(), 2, "failed reserve must not grow the table");
+        table.release(&mut pool);
+        assert_eq!(pool.pages_free(), 3);
+        assert_eq!(table.pos(), 0);
+    }
+
+    #[test]
+    fn rows_round_trip_across_page_boundaries() {
+        let (layers, d, pt) = (2, 4, 3);
+        let mut pool = BlockPool::new(layers, d, pt, 4);
+        let mut table = PageTable::new();
+        let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+        let n = 8; // spans 3 pages of 3 tokens
+        slot.reserve(n).unwrap();
+        for pos in 0..n {
+            for layer in 0..layers {
+                let k = vec![(pos * 10 + layer) as f32; d];
+                let v = vec![(pos * 10 + layer) as f32 + 0.5; d];
+                slot.append_row(layer, pos, &k, &v);
+            }
+        }
+        slot.advance(n);
+        assert_eq!(slot.pos(), n);
+        for pos in 0..n {
+            for layer in 0..layers {
+                let (k, v) = slot.rows(layer, pos);
+                assert!(k.iter().all(|&x| x == (pos * 10 + layer) as f32));
+                assert!(v.iter().all(|&x| x == (pos * 10 + layer) as f32 + 0.5));
+            }
+        }
+        assert_eq!(table.n_pages(), 3);
+    }
+
+    #[test]
+    fn no_leak_after_churn() {
+        let mut pool = BlockPool::new(2, 4, 2, 6);
+        let mut tables: Vec<PageTable> = (0..3).map(|_| PageTable::new()).collect();
+        for round in 0..10 {
+            for (i, table) in tables.iter_mut().enumerate() {
+                let want = 1 + (round + i) % 4;
+                table.reserve(&mut pool, want).unwrap();
+                table.pos += want.min(table.capacity(&pool) - table.pos);
+            }
+            for table in tables.iter_mut() {
+                table.release(&mut pool);
+            }
+            assert_eq!(pool.pages_free(), pool.pages_total(), "round {round} leaked");
+        }
+    }
+}

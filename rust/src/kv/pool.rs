@@ -1,0 +1,188 @@
+//! The shared page pool: one flat f32 arena split into fixed-size pages
+//! plus a stack free list, so alloc and free are O(1) pushes/pops.
+//!
+//! One page holds `page_tokens` positions of *every* layer's K and V
+//! rows — a request's whole transformer state for a token span lives in
+//! one page, so a slot's page table is a single `Vec<u32>` indexed by
+//! `pos / page_tokens` regardless of layer count. Within a page the
+//! layout is `[layer][side][token][d_model]` (side 0 = K, 1 = V).
+
+use super::KvError;
+
+pub struct BlockPool {
+    page_tokens: usize,
+    n_layers: usize,
+    d_model: usize,
+    /// Floats per page: `2 · n_layers · page_tokens · d_model`.
+    page_floats: usize,
+    storage: Vec<f32>,
+    /// Free page indices; top of the stack is handed out next.
+    free: Vec<u32>,
+    pages: usize,
+}
+
+impl BlockPool {
+    /// A pool of `pages` pages sized for a model with `n_layers` layers
+    /// of `d_model`-wide K/V rows, `page_tokens` positions per page.
+    pub fn new(n_layers: usize, d_model: usize, page_tokens: usize, pages: usize) -> BlockPool {
+        assert!(page_tokens > 0, "page_tokens must be positive");
+        assert!(n_layers > 0 && d_model > 0, "degenerate model shape");
+        let page_floats = 2 * n_layers * page_tokens * d_model;
+        BlockPool {
+            page_tokens,
+            n_layers,
+            d_model,
+            page_floats,
+            storage: vec![0.0; page_floats * pages],
+            // reversed so page 0 is handed out first (cosmetic, but it
+            // makes pool traces easy to read)
+            free: (0..pages as u32).rev().collect(),
+            pages,
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn pages_total(&self) -> usize {
+        self.pages
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn pages_used(&self) -> usize {
+        self.pages - self.free.len()
+    }
+
+    /// Bytes of one page (K+V across all layers).
+    pub fn page_nbytes(&self) -> usize {
+        self.page_floats * 4
+    }
+
+    /// Bytes of the whole arena (allocated up front).
+    pub fn nbytes(&self) -> usize {
+        self.storage.len() * 4
+    }
+
+    /// Pages needed to hold `tokens` positions.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Pop `n` pages off the free list, all-or-nothing: on exhaustion
+    /// nothing is allocated, so callers can requeue/preempt and retry.
+    pub(super) fn alloc(&mut self, n: usize, out: &mut Vec<u32>) -> Result<(), KvError> {
+        if self.free.len() < n {
+            return Err(KvError::PoolExhausted { needed: n, free: self.free.len() });
+        }
+        for _ in 0..n {
+            out.push(self.free.pop().expect("free list length checked above"));
+        }
+        Ok(())
+    }
+
+    /// Return a page to the free list.
+    pub(super) fn release(&mut self, page: u32) {
+        debug_assert!((page as usize) < self.pages, "release of foreign page");
+        debug_assert!(!self.free.contains(&page), "double free of page {page}");
+        self.free.push(page);
+    }
+
+    #[inline]
+    fn offset(&self, page: u32, layer: usize, side: usize, idx: usize) -> usize {
+        debug_assert!(layer < self.n_layers && side < 2 && idx < self.page_tokens);
+        page as usize * self.page_floats
+            + ((layer * 2 + side) * self.page_tokens + idx) * self.d_model
+    }
+
+    /// The `d_model`-float row at (`layer`, side, token-in-page).
+    #[inline]
+    pub(super) fn row(&self, page: u32, layer: usize, side: usize, idx: usize) -> &[f32] {
+        let o = self.offset(page, layer, side, idx);
+        &self.storage[o..o + self.d_model]
+    }
+
+    #[inline]
+    pub(super) fn row_mut(
+        &mut self,
+        page: u32,
+        layer: usize,
+        side: usize,
+        idx: usize,
+    ) -> &mut [f32] {
+        let o = self.offset(page, layer, side, idx);
+        &mut self.storage[o..o + self.d_model]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip_is_exact() {
+        let mut pool = BlockPool::new(2, 8, 4, 3);
+        assert_eq!(pool.pages_total(), 3);
+        assert_eq!(pool.pages_free(), 3);
+        let mut pages = Vec::new();
+        pool.alloc(2, &mut pages).unwrap();
+        assert_eq!(pages.len(), 2);
+        assert_eq!(pool.pages_used(), 2);
+        // exhaustion is all-or-nothing: asking for 2 with 1 free
+        // allocates nothing
+        let mut more = Vec::new();
+        let err = pool.alloc(2, &mut more).unwrap_err();
+        assert_eq!(err, KvError::PoolExhausted { needed: 2, free: 1 });
+        assert!(more.is_empty());
+        assert_eq!(pool.pages_free(), 1);
+        for p in pages {
+            pool.release(p);
+        }
+        assert_eq!(pool.pages_free(), 3);
+    }
+
+    #[test]
+    fn page_rows_are_disjoint_per_layer_side_and_token() {
+        let (layers, d, pt) = (2, 4, 3);
+        let mut pool = BlockPool::new(layers, d, pt, 2);
+        let mut pages = Vec::new();
+        pool.alloc(2, &mut pages).unwrap();
+        // stamp every row with a unique value, then read all back
+        let mut stamp = 1.0f32;
+        for &pg in &pages {
+            for layer in 0..layers {
+                for side in 0..2 {
+                    for idx in 0..pt {
+                        pool.row_mut(pg, layer, side, idx).fill(stamp);
+                        stamp += 1.0;
+                    }
+                }
+            }
+        }
+        let mut expect = 1.0f32;
+        for &pg in &pages {
+            for layer in 0..layers {
+                for side in 0..2 {
+                    for idx in 0..pt {
+                        assert!(pool.row(pg, layer, side, idx).iter().all(|&v| v == expect));
+                        expect += 1.0;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sizing_helpers() {
+        let pool = BlockPool::new(3, 16, 8, 5);
+        assert_eq!(pool.pages_for(0), 0);
+        assert_eq!(pool.pages_for(1), 1);
+        assert_eq!(pool.pages_for(8), 1);
+        assert_eq!(pool.pages_for(9), 2);
+        assert_eq!(pool.page_nbytes(), 2 * 3 * 8 * 16 * 4);
+        assert_eq!(pool.nbytes(), pool.page_nbytes() * 5);
+    }
+}

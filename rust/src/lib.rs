@@ -29,6 +29,7 @@ pub mod calib;
 pub mod coordinator;
 pub mod eval;
 pub mod experiments;
+pub mod kv;
 pub mod model;
 pub mod pipeline;
 pub mod quant;

@@ -153,6 +153,10 @@ usage: singlequant <info|quantize|eval|serve|serve-http|generate|reproduce|analy
   --threads N       native-backend worker threads (0 = all cores)
   serve-http        --host IP --port N --batch N --max-new N --queue-cap N
                     --deadline-ms N --backend native|pjrt|synthetic
+                    --kv-page-tokens N (native; 0 = contiguous KV, default 16)
+                    --kv-pool-pages N  (native; 0 = worst-case auto-size; a
+                    smaller pool overcommits: admission gates on worst-case
+                    page demand and decode preempts+replays under pressure)
   reproduce --id X  table1..table8 tableb3 fig1a fig1b fig2 fig3 fig4 all
   generate          --prompt TEXT --max-new N";
 
@@ -246,12 +250,20 @@ fn native_backend_from_args(
     batch: usize,
 ) -> Result<(Box<dyn ServeBackend>, String)> {
     let threads = args.usize_or("threads", 0)?;
+    let page_tokens = args.usize_or("kv-page-tokens", 16)?;
+    let pool_pages = args.usize_or("kv-pool-pages", 0)?;
     let opts = opts_from_args(args)?;
     let (cfg, weights, calib) = native_model_inputs(args)?;
     let qm = quantize(&cfg, &weights, &calib, &opts)?;
     let label = format!("{}/{}/native", cfg.name, opts.method.label());
     let model = NativeModel::from_quantized(&qm, opts.weight_bits, threads)?;
-    Ok((Box::new(NativeBackend::new(model, batch)), label))
+    let backend: Box<dyn ServeBackend> = if page_tokens == 0 {
+        // legacy contiguous KV: one growable max_seq cache per slot
+        Box::new(NativeBackend::new(model, batch))
+    } else {
+        Box::new(NativeBackend::with_paged_kv(model, batch, page_tokens, pool_pages))
+    };
+    Ok((backend, label))
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

@@ -10,6 +10,7 @@
 use std::collections::BTreeMap;
 
 use super::config::ModelConfig;
+use crate::kv::KvRows;
 use crate::quant::fake_quant_per_token;
 use crate::rotation::singlequant::SiteRotation;
 use crate::tensor::Tensor;
@@ -179,16 +180,17 @@ pub fn attention_full(cfg: &ModelConfig, q: &Tensor, k: &Tensor, v: &Tensor) -> 
     out
 }
 
-/// One query row attending over `len` cached K/V rows (the query sits at
-/// position `len - 1`). `k`/`v` are flattened `[len, d_model]` row-major
-/// with the same head-major packing as the full-sequence tensors; the
-/// per-element math and accumulation order are identical to
-/// [`attention_full`]'s row `len - 1`.
-pub fn attention_step(
+/// One query row attending over `len` cached K/V rows fetched through
+/// any [`KvRows`] store — contiguous vectors or pool pages. The query
+/// sits at position `len - 1`; the per-element math and accumulation
+/// order are identical to [`attention_full`]'s row `len - 1`, which is
+/// what keeps cached decode (paged or not) bit-equal to the
+/// full-sequence reference.
+pub fn attention_step_kv<K: KvRows + ?Sized>(
     cfg: &ModelConfig,
     qrow: &[f32],
-    k: &[f32],
-    v: &[f32],
+    kv: &K,
+    layer: usize,
     len: usize,
 ) -> Vec<f32> {
     let (h, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
@@ -200,7 +202,7 @@ pub fn attention_step(
         let q = &qrow[off..off + dh];
         let mut maxv = f32::NEG_INFINITY;
         for tj in 0..len {
-            let krow = &k[tj * d + off..tj * d + off + dh];
+            let krow = &kv.rows(layer, tj).0[off..off + dh];
             let mut dot = 0.0f32;
             for x in 0..dh {
                 dot += q[x] * krow[x];
@@ -219,13 +221,41 @@ pub fn attention_step(
             if p == 0.0 {
                 continue;
             }
-            let vrow = &v[tj * d + off..tj * d + off + dh];
+            let vrow = &kv.rows(layer, tj).1[off..off + dh];
             for x in 0..dh {
                 orow[x] += p * vrow[x];
             }
         }
     }
     out
+}
+
+/// Flat `[len, d_model]` K/V slices viewed as a single-layer row store,
+/// so [`attention_step`] shares [`attention_step_kv`]'s one code path.
+struct FlatKv<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    d: usize,
+}
+
+impl KvRows for FlatKv<'_> {
+    fn rows(&self, _layer: usize, pos: usize) -> (&[f32], &[f32]) {
+        let (a, b) = (pos * self.d, (pos + 1) * self.d);
+        (&self.k[a..b], &self.v[a..b])
+    }
+}
+
+/// One query row attending over `len` cached K/V rows (the query sits at
+/// position `len - 1`). `k`/`v` are flattened `[len, d_model]` row-major
+/// with the same head-major packing as the full-sequence tensors.
+pub fn attention_step(
+    cfg: &ModelConfig,
+    qrow: &[f32],
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+) -> Vec<f32> {
+    attention_step_kv(cfg, qrow, &FlatKv { k, v, d: cfg.d_model }, 0, len)
 }
 
 #[cfg(test)]

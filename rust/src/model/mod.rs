@@ -12,5 +12,7 @@ pub mod native;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use native::{NativeModel, SlotKv};
+pub use native::NativeModel;
+// Re-exported for back-compat: the slot cache moved to the kv subsystem.
+pub use crate::kv::SlotKv;
 pub use weights::Weights;

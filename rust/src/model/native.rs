@@ -16,8 +16,11 @@ use anyhow::{anyhow, bail, Result};
 
 use super::config::ModelConfig;
 use super::forward::moe_gate;
-use super::layers::{apply_act_quant, attention_step, rmsnorm, swiglu_inplace, QuantCtx, Rope};
+use super::layers::{
+    apply_act_quant, attention_step_kv, rmsnorm, swiglu_inplace, QuantCtx, Rope,
+};
 use super::weights::Weights;
+use crate::kv::{KvCache, SlotKv};
 use crate::pipeline::QuantizedModel;
 use crate::quant::pack::PackedWeight;
 use crate::quant::repack::RepackedWeight;
@@ -47,39 +50,6 @@ impl LinearOp {
     }
 }
 
-/// Per-slot KV cache: post-RoPE K/V rows per layer, appended as positions
-/// fill. Grows lazily to at most `max_seq · d_model` floats per side per
-/// layer; `reset` keeps the allocation for the slot's next request.
-pub struct SlotKv {
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    /// Number of cached positions (== rows per layer).
-    pub pos: usize,
-}
-
-impl SlotKv {
-    fn new(n_layers: usize) -> SlotKv {
-        SlotKv {
-            k: (0..n_layers).map(|_| Vec::new()).collect(),
-            v: (0..n_layers).map(|_| Vec::new()).collect(),
-            pos: 0,
-        }
-    }
-
-    /// Drop the cached sequence (retire/reuse); capacity is kept.
-    pub fn reset(&mut self) {
-        for side in self.k.iter_mut().chain(self.v.iter_mut()) {
-            side.clear();
-        }
-        self.pos = 0;
-    }
-
-    /// Resident bytes currently held by this slot's cache.
-    pub fn nbytes(&self) -> usize {
-        self.k.iter().chain(self.v.iter()).map(|s| s.len() * 4).sum::<usize>()
-    }
-}
-
 pub struct NativeModel {
     pub cfg: ModelConfig,
     /// Non-quantized parameters: embeddings, norms, router, output head.
@@ -99,6 +69,7 @@ impl NativeModel {
         weights: &Weights,
         quant: Option<QuantCtx>,
         pack_bits: Option<u32>,
+        pack_group: Option<usize>,
         threads: usize,
     ) -> Result<NativeModel> {
         let site_names: BTreeSet<String> = (0..cfg.n_layers)
@@ -113,9 +84,13 @@ impl NativeModel {
         for (name, t) in &weights.map {
             if site_names.contains(name) {
                 let op = match pack_bits {
-                    Some(bits) => LinearOp::Packed(RepackedWeight::from_packed(
-                        &PackedWeight::pack(t, bits)?,
-                    )?),
+                    // Grouped packages re-quantize on their exact
+                    // input-dim group grid; per-channel packages keep the
+                    // original PackedWeight route.
+                    Some(bits) => LinearOp::Packed(match pack_group {
+                        Some(g) if g < t.rows() => RepackedWeight::pack(t, bits, g)?,
+                        _ => RepackedWeight::from_packed(&PackedWeight::pack(t, bits)?)?,
+                    }),
                     None => LinearOp::Dense(t.clone()),
                 };
                 linears.insert(name.clone(), op);
@@ -143,25 +118,27 @@ impl NativeModel {
         quant: Option<QuantCtx>,
         threads: usize,
     ) -> Result<NativeModel> {
-        Self::build(cfg.clone(), weights, quant, None, threads)
+        Self::build(cfg.clone(), weights, quant, None, None, threads)
     }
 
     /// Packed execution of a quantized package: the site linears (already
     /// on the `weight_bits` grid) are bit-packed and dequantize inside the
-    /// matmul kernel. Grouped/GPTQ packages re-pack per output channel,
-    /// which can move a code by one step at the grid edge — within the
-    /// quantizer's own error floor.
+    /// matmul kernel. Grouped packages (GPTQ-g32, RTN-g32, ...) carry their
+    /// group size and are re-packed on that exact input-dim grid; ungrouped
+    /// ones re-pack per output channel, which can move a code by one step
+    /// at the grid edge — within the quantizer's own error floor.
     pub fn from_quantized(
         qm: &QuantizedModel,
         weight_bits: u32,
         threads: usize,
     ) -> Result<NativeModel> {
         let pack = if qm.graph_mode() == "fp" { None } else { Some(weight_bits) };
-        Self::build(qm.cfg.clone(), &qm.weights, qm.quant_ctx(), pack, threads)
+        Self::build(qm.cfg.clone(), &qm.weights, qm.quant_ctx(), pack,
+                    qm.weight_group, threads)
     }
 
     pub fn new_kv(&self) -> SlotKv {
-        SlotKv::new(self.cfg.n_layers)
+        SlotKv::new(self.cfg.n_layers, self.cfg.d_model)
     }
 
     /// Total resident weight bytes (packed codes + scales + fp params).
@@ -192,20 +169,20 @@ impl NativeModel {
 
     /// Prefill a fresh slot with a prompt; returns logits `[len, V]` (the
     /// scheduler samples from the last row).
-    pub fn prefill(&self, kv: &mut SlotKv, tokens: &[u16]) -> Result<Tensor> {
+    pub fn prefill<K: KvCache>(&self, kv: &mut K, tokens: &[u16]) -> Result<Tensor> {
         if tokens.is_empty() {
             bail!("prefill: empty prompt");
         }
-        if kv.pos != 0 {
-            bail!("prefill: slot already holds {} positions", kv.pos);
+        if kv.pos() != 0 {
+            bail!("prefill: slot already holds {} positions", kv.pos());
         }
         self.step_rows(kv, tokens)
     }
 
     /// One incremental decode step: append `token` at position `kv.pos`,
     /// return its logits row `[V]`.
-    pub fn decode(&self, kv: &mut SlotKv, token: u16) -> Result<Vec<f32>> {
-        if kv.pos == 0 {
+    pub fn decode<K: KvCache>(&self, kv: &mut K, token: u16) -> Result<Vec<f32>> {
+        if kv.pos() == 0 {
             bail!("decode before prefill");
         }
         Ok(self.step_rows(kv, &[token])?.into_data())
@@ -219,13 +196,20 @@ impl NativeModel {
 
     /// Process `t` new token rows at positions `kv.pos ..`, appending
     /// their K/V rows; the shared core of prefill and decode.
-    fn step_rows(&self, kv: &mut SlotKv, tokens: &[u16]) -> Result<Tensor> {
+    ///
+    /// All KV capacity is reserved up front, before any row is written:
+    /// a paged cache that cannot cover the step fails here with
+    /// [`crate::kv::KvError::PoolExhausted`] (downcastable through the
+    /// returned `anyhow::Error`) and the slot state is untouched, so the
+    /// batcher can preempt or requeue and replay the request later.
+    fn step_rows<K: KvCache>(&self, kv: &mut K, tokens: &[u16]) -> Result<Tensor> {
         let t = tokens.len();
         let d = self.cfg.d_model;
-        let start = kv.pos;
+        let start = kv.pos();
         if start + t > self.cfg.max_seq {
             bail!("kv cache capacity exceeded: {} + {t} > {}", start, self.cfg.max_seq);
         }
+        kv.reserve(t).map_err(anyhow::Error::new)?;
         let emb = self.fp.get("emb.tok")?;
         let mut x = Tensor::zeros(&[t, d]);
         for (i, &tok) in tokens.iter().enumerate() {
@@ -247,15 +231,13 @@ impl NativeModel {
                 self.rope.apply_row(&self.cfg, q.row_mut(ti), start + ti);
                 self.rope.apply_row(&self.cfg, k.row_mut(ti), start + ti);
             }
-            kv.k[layer].extend_from_slice(k.data());
-            kv.v[layer].extend_from_slice(vv.data());
-            let kc = &kv.k[layer];
-            let vc = &kv.v[layer];
+            for ti in 0..t {
+                kv.append_row(layer, start + ti, k.row(ti), vv.row(ti));
+            }
             let mut att = Tensor::zeros(&[t, d]);
             for ti in 0..t {
                 let len = start + ti + 1;
-                let row = attention_step(&self.cfg, q.row(ti),
-                                         &kc[..len * d], &vc[..len * d], len);
+                let row = attention_step_kv(&self.cfg, q.row(ti), &*kv, layer, len);
                 att.row_mut(ti).copy_from_slice(&row);
             }
             let aq = self.site_input(&att, layer, "o");
@@ -271,7 +253,7 @@ impl NativeModel {
             };
             x = x.add(&y);
         }
-        kv.pos = start + t;
+        kv.advance(t);
 
         let xf = rmsnorm(&x, self.fp.get("out.norm")?);
         Ok(matmul_threaded(&xf, self.fp.get("out.head")?, self.threads))
@@ -321,9 +303,11 @@ impl NativeModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kv::{BlockPool, KvError, PageTable, PagedSlot};
     use crate::model::config::tests::test_config;
     use crate::model::forward::forward_score;
     use crate::pipeline::{quantize, PipelineOptions};
+    use crate::quant::WeightQuantizer;
 
     fn toks(n: usize, seed: u64) -> Vec<u16> {
         let mut rng = crate::util::rng::Rng::new(seed);
@@ -427,6 +411,127 @@ mod tests {
         assert!(nm.prefill(&mut kv, &[]).is_err(), "empty prompt");
         let long = toks(cfg.max_seq + 1, 6);
         assert!(nm.prefill(&mut kv, &long).is_err(), "over capacity");
+    }
+
+    /// Property: paged prefill + decode is bit-identical to the
+    /// contiguous SlotKv path, for every page size, including sizes that
+    /// split the prompt mid-page (1, 7) and one that doesn't (16).
+    fn check_paged_exact(nm: &NativeModel) {
+        let tokens = toks(11, 3);
+        let plen = 5;
+        let mut kv = nm.new_kv();
+        let ref_pre = nm.prefill(&mut kv, &tokens[..plen]).unwrap();
+        let mut ref_rows: Vec<Vec<f32>> = Vec::new();
+        for &tok in &tokens[plen..] {
+            ref_rows.push(nm.decode(&mut kv, tok).unwrap());
+        }
+        for page_tokens in [1usize, 7, 16] {
+            let mut pool = BlockPool::new(
+                nm.cfg.n_layers, nm.cfg.d_model, page_tokens,
+                tokens.len().div_ceil(page_tokens),
+            );
+            let mut table = PageTable::new();
+            let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+            let pre = nm.prefill(&mut slot, &tokens[..plen]).unwrap();
+            assert_eq!(pre.data(), ref_pre.data(), "prefill pt={page_tokens}");
+            for (i, &tok) in tokens.iter().enumerate().skip(plen) {
+                let row = nm.decode(&mut slot, tok).unwrap();
+                assert_eq!(row, ref_rows[i - plen],
+                           "decode row {i} pt={page_tokens}");
+            }
+            assert_eq!(slot.pos(), tokens.len());
+        }
+    }
+
+    #[test]
+    fn paged_matches_contiguous_bit_exact_fp() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        check_paged_exact(&NativeModel::from_weights(&cfg, &w, None, 2).unwrap());
+    }
+
+    #[test]
+    fn paged_matches_contiguous_bit_exact_w4a4() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let quant = Some(QuantCtx::identity(&cfg, 4));
+        check_paged_exact(&NativeModel::from_weights(&cfg, &w, quant, 2).unwrap());
+    }
+
+    #[test]
+    fn paged_matches_contiguous_bit_exact_packed() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let opts = PipelineOptions { calib_seqs: 2, calib_len: 24, ..Default::default() };
+        let qm = quantize(&cfg, &w, &toks(400, 9), &opts).unwrap();
+        check_paged_exact(&NativeModel::from_quantized(&qm, opts.weight_bits, 2).unwrap());
+    }
+
+    #[test]
+    fn paged_pool_exhaustion_fails_cleanly_and_is_replayable() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let nm = NativeModel::from_weights(&cfg, &w, None, 1).unwrap();
+        let tokens = toks(9, 8);
+        // 2 pages of 4 = 8 positions: prefill of 8 fits, decode must fail
+        let mut pool = BlockPool::new(cfg.n_layers, cfg.d_model, 4, 2);
+        let mut table = PageTable::new();
+        let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+        nm.prefill(&mut slot, &tokens[..8]).unwrap();
+        let err = nm.decode(&mut slot, tokens[8]).unwrap_err();
+        let kv_err = err.downcast_ref::<KvError>().expect("typed kv error");
+        assert_eq!(*kv_err, KvError::PoolExhausted { needed: 1, free: 0 });
+        // the failed step must not have touched the slot: freeing one
+        // page's worth elsewhere is not possible here, so instead verify
+        // the cache still decodes correctly once capacity appears
+        assert_eq!(table.pos(), 8, "failed reserve must not corrupt pos");
+        let mut bigger = BlockPool::new(cfg.n_layers, cfg.d_model, 4, 3);
+        let mut table2 = PageTable::new();
+        let mut slot2 = PagedSlot { pool: &mut bigger, table: &mut table2 };
+        nm.prefill(&mut slot2, &tokens[..8]).unwrap();
+        let row = nm.decode(&mut slot2, tokens[8]).unwrap();
+        let mut kv = nm.new_kv();
+        nm.prefill(&mut kv, &tokens[..8]).unwrap();
+        assert_eq!(row, nm.decode(&mut kv, tokens[8]).unwrap());
+    }
+
+    #[test]
+    fn grouped_package_packs_on_its_exact_grid() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let opts = PipelineOptions {
+            weight_quantizer: WeightQuantizer::RtnGrouped(8),
+            calib_seqs: 2,
+            calib_len: 24,
+            ..Default::default()
+        };
+        let qm = quantize(&cfg, &w, &toks(400, 9), &opts).unwrap();
+        assert_eq!(qm.weight_group, Some(8));
+        // the pipeline's dequantized weights sit exactly on the g=8 grid,
+        // so a grouped re-pack reproduces them (scale recovery from the
+        // absmax element is exact for RTN); the per-channel re-pack the
+        // old path used cannot
+        let wq = qm.weights.get("l00.wq").unwrap();
+        let grouped = RepackedWeight::pack(wq, opts.weight_bits, 8).unwrap();
+        let g_err = grouped.dequantize().sub(wq).max_abs();
+        assert!(g_err < 1e-5, "grouped re-pack drift {g_err}");
+        let per_chan = RepackedWeight::from_packed(
+            &PackedWeight::pack(wq, opts.weight_bits).unwrap(),
+        )
+        .unwrap();
+        let c_err = per_chan.dequantize().sub(wq).max_abs();
+        assert!(g_err <= c_err, "grouped {g_err} must not lose to per-channel {c_err}");
+
+        // end to end: the packed model runs and matches the fake-quant
+        // reference within kernel rounding
+        let nm = NativeModel::from_quantized(&qm, opts.weight_bits, 2).unwrap();
+        let tokens = toks(9, 4);
+        let full = nm.forward_full(&tokens).unwrap();
+        let ctx = qm.quant_ctx().unwrap();
+        let reference =
+            forward_score(&qm.cfg, &qm.weights, &tokens, Some(&ctx), None).unwrap();
+        let diff = full.sub(&reference).max_abs();
+        assert!(diff < 5e-2, "grouped packed vs fake-quant drift {diff}");
     }
 
     #[test]

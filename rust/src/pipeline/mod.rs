@@ -141,6 +141,10 @@ pub struct QuantizedModel {
     /// quantizer form): the clip values carry per-site scales Δ.
     pub static_act: bool,
     pub method_label: String,
+    /// Input-dim scale-group size of the weight quantizer (`None` =
+    /// per-channel). The native engine packs grouped packages on this
+    /// exact grid instead of re-deriving per-channel scales.
+    pub weight_group: Option<usize>,
     /// Exact packed-int weight bytes (quantized linears) + f32 bytes (rest):
     /// the Table 8 storage model.
     pub packed_bytes: usize,
@@ -363,6 +367,7 @@ pub fn quantize(
         static_act: matches!(opts.method, Method::SmoothQuant { .. })
             && opts.act_bits < 16,
         method_label: opts.method.label(),
+        weight_group: opts.weight_quantizer.group(),
         packed_bytes,
         fp_bytes,
         calib_seconds,
@@ -382,6 +387,7 @@ fn fp16_package(cfg: &ModelConfig, weights: &Weights) -> QuantizedModel {
         act_bits: 16,
         static_act: false,
         method_label: "FP16".into(),
+        weight_group: None,
         packed_bytes: 0,
         fp_bytes,
         calib_seconds: 0.0,

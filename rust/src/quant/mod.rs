@@ -133,6 +133,16 @@ impl WeightQuantizer {
             WeightQuantizer::RtnGrouped(g) => format!("RTN-g{g}"),
         }
     }
+
+    /// Input-dim scale-group size, `None` for per-channel quantizers.
+    /// Threaded through the quantized package so the native engine packs
+    /// grouped checkpoints on their exact grid.
+    pub fn group(&self) -> Option<usize> {
+        match self {
+            WeightQuantizer::GptqGrouped(g) | WeightQuantizer::RtnGrouped(g) => Some(*g),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,44 +1,88 @@
 //! [`ServeBackend`] over [`NativeModel`]: pure-CPU serving of packed
 //! quantized checkpoints — no PJRT, no XLA stub, no artifacts on disk.
 //!
-//! Owns one [`SlotKv`] per batcher slot. Prefill runs each admitted
-//! prompt through the full-sequence path (multi-threaded matmuls over the
-//! packed weights) and leaves the slot's KV rows resident; decode advances
-//! each active slot one position; retire clears the slot's cache so the
-//! allocation is reused by the next admission.
+//! Two KV layouts behind one backend:
+//!
+//! * **Contiguous** (default): one growable [`SlotKv`] per batcher slot,
+//!   each able to reach `max_seq` rows — simple, but the memory budget
+//!   must assume every slot hits the worst case.
+//! * **Paged** (`with_paged_kv`): one shared [`BlockPool`] plus a
+//!   [`PageTable`] per slot. Memory follows the live token count, the
+//!   batcher reads the pool through [`ServeBackend::kv_pool`] /
+//!   [`ServeBackend::kv_reserve`] to gate admission and trigger
+//!   preemption, and `retire(slot)` returns the slot's pages to the free
+//!   list. Reads are bit-identical to the contiguous layout (pinned by
+//!   the property tests in `model::native`).
 
 use anyhow::{ensure, Result};
 
-use crate::coordinator::backend::{BackendLimits, ServeBackend};
+use crate::coordinator::backend::{BackendLimits, KvPoolStatus, ServeBackend};
 use crate::coordinator::tokenizer::PAD;
-use crate::model::{NativeModel, SlotKv};
+use crate::kv::{BlockPool, PageTable, PagedSlot, SlotKv};
+use crate::model::NativeModel;
 use crate::tensor::Tensor;
+
+enum KvSlots {
+    Contig(Vec<SlotKv>),
+    Paged { pool: BlockPool, tables: Vec<PageTable> },
+}
 
 pub struct NativeBackend {
     model: NativeModel,
-    slots: Vec<SlotKv>,
+    kv: KvSlots,
     limits: BackendLimits,
 }
 
 impl NativeBackend {
     pub fn new(model: NativeModel, batch: usize) -> NativeBackend {
-        let limits = BackendLimits {
+        let limits = Self::limits_for(&model, batch);
+        let slots = (0..batch).map(|_| model.new_kv()).collect();
+        NativeBackend { model, kv: KvSlots::Contig(slots), limits }
+    }
+
+    /// Paged-KV backend: `pool_pages` pages of `page_tokens` positions
+    /// shared by all `batch` slots. `pool_pages = 0` auto-sizes the pool
+    /// to the contiguous worst case (`batch × ⌈max_seq / page_tokens⌉`),
+    /// which can never reject or preempt — pass an explicit smaller pool
+    /// to actually overcommit.
+    pub fn with_paged_kv(
+        model: NativeModel,
+        batch: usize,
+        page_tokens: usize,
+        pool_pages: usize,
+    ) -> NativeBackend {
+        let limits = Self::limits_for(&model, batch);
+        let pages = if pool_pages == 0 {
+            batch * model.cfg.max_seq.div_ceil(page_tokens)
+        } else {
+            pool_pages
+        };
+        let pool = BlockPool::new(model.cfg.n_layers, model.cfg.d_model,
+                                  page_tokens, pages);
+        let tables = (0..batch).map(|_| PageTable::new()).collect();
+        NativeBackend { model, kv: KvSlots::Paged { pool, tables }, limits }
+    }
+
+    fn limits_for(model: &NativeModel, batch: usize) -> BackendLimits {
+        BackendLimits {
             batch,
             score_seq: model.cfg.score_seq,
             vocab_size: model.cfg.vocab_size,
             max_seq: model.cfg.max_seq,
-        };
-        let slots = (0..batch).map(|_| model.new_kv()).collect();
-        NativeBackend { model, slots, limits }
+        }
     }
 
     pub fn model(&self) -> &NativeModel {
         &self.model
     }
 
-    /// Resident KV bytes across all slots (capacity currently in use).
+    /// Resident KV bytes: rows held by contiguous slots, or used pages
+    /// (the arena is allocated up front; this reports the live share).
     pub fn kv_nbytes(&self) -> usize {
-        self.slots.iter().map(|s| s.nbytes()).sum()
+        match &self.kv {
+            KvSlots::Contig(slots) => slots.iter().map(|s| s.nbytes()).sum(),
+            KvSlots::Paged { pool, .. } => pool.pages_used() * pool.page_nbytes(),
+        }
     }
 }
 
@@ -60,8 +104,20 @@ impl ServeBackend for NativeBackend {
                 .map(|&tok| tok as u16)
                 .collect();
             ensure!(!prompt.is_empty(), "empty prompt in slot {slot}");
-            self.slots[slot].reset();
-            let lg = self.model.prefill(&mut self.slots[slot], &prompt)?;
+            let lg = match &mut self.kv {
+                KvSlots::Contig(slots) => {
+                    slots[slot].reset();
+                    self.model.prefill(&mut slots[slot], &prompt)?
+                }
+                KvSlots::Paged { pool, tables } => {
+                    let table = &mut tables[slot];
+                    if table.pos() != 0 {
+                        table.release(pool);
+                    }
+                    let mut view = PagedSlot { pool, table };
+                    self.model.prefill(&mut view, &prompt)?
+                }
+            };
             for p in 0..prompt.len() {
                 let base = (slot * t + p) * v;
                 logits.data_mut()[base..base + v].copy_from_slice(lg.row(p));
@@ -80,19 +136,61 @@ impl ServeBackend for NativeBackend {
             if tok == PAD as i32 {
                 continue;
             }
-            let kv = &mut self.slots[slot];
-            ensure!(kv.pos == positions[slot] as usize,
-                    "slot {slot}: cache holds {} positions but scheduler is at {}",
-                    kv.pos, positions[slot]);
-            let row = self.model.decode(kv, tok as u16)?;
+            let row = match &mut self.kv {
+                KvSlots::Contig(slots) => {
+                    let kv = &mut slots[slot];
+                    ensure!(kv.pos == positions[slot] as usize,
+                            "slot {slot}: cache holds {} positions but scheduler is at {}",
+                            kv.pos, positions[slot]);
+                    self.model.decode(kv, tok as u16)?
+                }
+                KvSlots::Paged { pool, tables } => {
+                    let table = &mut tables[slot];
+                    ensure!(table.pos() == positions[slot] as usize,
+                            "slot {slot}: cache holds {} positions but scheduler is at {}",
+                            table.pos(), positions[slot]);
+                    let mut view = PagedSlot { pool, table };
+                    self.model.decode(&mut view, tok as u16)?
+                }
+            };
             logits.data_mut()[slot * v..(slot + 1) * v].copy_from_slice(&row);
         }
         Ok(logits)
     }
 
     fn retire(&mut self, slot: usize) {
-        if let Some(kv) = self.slots.get_mut(slot) {
-            kv.reset();
+        match &mut self.kv {
+            KvSlots::Contig(slots) => {
+                if let Some(kv) = slots.get_mut(slot) {
+                    kv.reset();
+                }
+            }
+            KvSlots::Paged { pool, tables } => {
+                if let Some(table) = tables.get_mut(slot) {
+                    table.release(pool);
+                }
+            }
+        }
+    }
+
+    fn kv_pool(&self) -> Option<KvPoolStatus> {
+        match &self.kv {
+            KvSlots::Contig(_) => None,
+            KvSlots::Paged { pool, .. } => Some(KvPoolStatus {
+                page_tokens: pool.page_tokens(),
+                pages_total: pool.pages_total(),
+                pages_free: pool.pages_free(),
+            }),
+        }
+    }
+
+    fn kv_reserve(&mut self, slot: usize, extra: usize) -> bool {
+        match &mut self.kv {
+            KvSlots::Contig(_) => true,
+            KvSlots::Paged { pool, tables } => match tables.get_mut(slot) {
+                Some(table) => table.reserve(pool, extra).is_ok(),
+                None => false,
+            },
         }
     }
 }
@@ -100,15 +198,18 @@ impl ServeBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{Request, ServeConfig, ServeEngine};
+    use crate::coordinator::{Request, ServeConfig, ServeEngine, TokenEvent};
     use crate::model::config::tests::test_config;
     use crate::model::Weights;
 
-    fn demo_backend(batch: usize) -> NativeBackend {
+    fn demo_model() -> NativeModel {
         let cfg = test_config();
         let w = Weights::random_init(&cfg, 4);
-        let model = NativeModel::from_weights(&cfg, &w, None, 2).unwrap();
-        NativeBackend::new(model, batch)
+        NativeModel::from_weights(&cfg, &w, None, 2).unwrap()
+    }
+
+    fn demo_backend(batch: usize) -> NativeBackend {
+        NativeBackend::new(demo_model(), batch)
     }
 
     #[test]
@@ -158,5 +259,110 @@ mod tests {
         tokens[..2].copy_from_slice(&[1, 2]);
         be.prefill(&tokens, &[0]).unwrap();
         assert!(be.decode(&[3], &[7]).is_err(), "stale position must fail loudly");
+    }
+
+    #[test]
+    fn paged_backend_matches_contiguous_logits_exactly() {
+        let model = demo_model();
+        let cfg = model.cfg.clone();
+        let mut contig = NativeBackend::new(demo_model(), 2);
+        let mut paged = NativeBackend::with_paged_kv(model, 2, 7, 0);
+        assert_eq!(paged.kv_pool().unwrap().pages_total,
+                   2 * cfg.max_seq.div_ceil(7));
+        let t = contig.limits().score_seq;
+        let mut tokens = vec![PAD as i32; 2 * t];
+        tokens[..3].copy_from_slice(&[5, 6, 7]);
+        tokens[t..t + 2].copy_from_slice(&[11, 12]);
+        assert!(paged.kv_reserve(0, 3) && paged.kv_reserve(1, 2));
+        let a = contig.prefill(&tokens, &[0, 1]).unwrap();
+        let b = paged.prefill(&tokens, &[0, 1]).unwrap();
+        assert_eq!(a.data(), b.data(), "paged prefill logits must be bit-equal");
+        for step in 0..3 {
+            assert!(paged.kv_reserve(0, 1) && paged.kv_reserve(1, 1));
+            let pos = [3 + step, 2 + step];
+            let x = contig.decode(&[9, 13], &[pos[0], pos[1]]).unwrap();
+            let y = paged.decode(&[9, 13], &[pos[0], pos[1]]).unwrap();
+            assert_eq!(x.data(), y.data(), "paged decode step {step}");
+        }
+    }
+
+    #[test]
+    fn paged_retire_returns_pages_no_leak_after_churn() {
+        let model = demo_model();
+        let mut be = NativeBackend::with_paged_kv(model, 2, 4, 16);
+        let t = be.limits().score_seq;
+        for round in 0..8 {
+            let mut tokens = vec![PAD as i32; 2 * t];
+            let plen = 1 + round % 5;
+            for (j, cell) in tokens[..plen].iter_mut().enumerate() {
+                *cell = (10 + j) as i32;
+            }
+            tokens[t..t + 2].copy_from_slice(&[3, 4]);
+            assert!(be.kv_reserve(0, plen) && be.kv_reserve(1, 2));
+            be.prefill(&tokens, &[0, 1]).unwrap();
+            assert!(be.kv_reserve(0, 1));
+            be.decode(&[7, PAD as i32], &[plen as i32, 0]).unwrap();
+            be.retire(0);
+            be.retire(1);
+            let pool = be.kv_pool().unwrap();
+            assert_eq!(pool.pages_free, pool.pages_total,
+                       "round {round}: pages leaked");
+            assert_eq!(be.kv_nbytes(), 0);
+        }
+    }
+
+    /// Acceptance: with a pool far smaller than `batch × max_seq`
+    /// (naive sizing `pool_pages × page_tokens / max_seq` = 48/160 → 0
+    /// concurrent worst-case slots), the batcher still serves 4-way
+    /// concurrency by overcommitting and preempting — zero engine
+    /// aborts, every request completes, and greedy outputs are
+    /// identical to an uncontended run.
+    #[test]
+    fn overcommitted_pool_preempts_and_replays_exactly() {
+        let requests = |engine: &mut ServeEngine| {
+            for i in 0..6u64 {
+                let prompt: Vec<u16> = (0..6).map(|j| (10 + 3 * i as u16 + j)).collect();
+                engine.submit(Request::new(i, prompt).with_max_new(12));
+            }
+        };
+        // uncontended reference: auto-sized pool (never preempts)
+        let mut ref_engine = ServeEngine::new(
+            Box::new(NativeBackend::with_paged_kv(demo_model(), 4, 4, 0)),
+            ServeConfig { max_new_cap: 16, seed: 2, queue_cap: 16 },
+        );
+        requests(&mut ref_engine);
+        let mut expect = ref_engine.run_to_completion().unwrap();
+        expect.sort_by_key(|r| r.id);
+        assert_eq!(ref_engine.metrics.preemptions, 0);
+
+        // tight pool: 12 pages × 4 tokens = 48 positions for 4 slots
+        // whose worst case is 4 × 18 = 72
+        let mut engine = ServeEngine::new(
+            Box::new(NativeBackend::with_paged_kv(demo_model(), 4, 4, 12)),
+            ServeConfig { max_new_cap: 16, seed: 2, queue_cap: 16 },
+        );
+        requests(&mut engine);
+        let mut max_active = 0;
+        let mut got = Vec::new();
+        while engine.has_work() {
+            let events = engine
+                .step()
+                .expect("pool exhaustion must never abort the engine");
+            max_active = max_active.max(engine.active());
+            for ev in events {
+                if let TokenEvent::Done { response, .. } = ev {
+                    got.push(response);
+                }
+            }
+        }
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 6, "every request completes");
+        assert!(max_active > 1, "overcommit must beat naive sizing (0-1 slots)");
+        assert!(engine.metrics.preemptions > 0, "tight pool must preempt");
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!(g.id, e.id);
+            assert_eq!(g.tokens, e.tokens,
+                       "preempt+replay must reproduce greedy output of request {}", g.id);
+        }
     }
 }

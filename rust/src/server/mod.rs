@@ -402,6 +402,12 @@ fn handle_completions(w: &mut impl Write, req: &HttpRequest, state: &ServerState
                 "admission queue full, retry later",
             )
         }
+        Ok(Err(e @ AdmissionError::KvBudget { .. })) => {
+            // could never be scheduled on this replica's KV pool, no
+            // matter how long it waits — tell the client to retry
+            // elsewhere rather than camp in the queue
+            return respond_error(w, state, 429, "overloaded_error", &e.to_string())
+        }
         Ok(Err(
             e @ (AdmissionError::InvalidPrompt { .. }
             | AdmissionError::InvalidToken { .. }),
