@@ -16,13 +16,16 @@
 
 use std::sync::Arc;
 
+use singlequant::coordinator::tokenizer::PAD;
 use singlequant::coordinator::{Request, ServeBackend, ServeConfig, ServeEngine};
 use singlequant::model::{ModelConfig, NativeModel, Weights};
 use singlequant::pipeline::{quantize, Method, PipelineOptions, QuantizedModel};
 use singlequant::quant::repack::RepackedWeight;
 use singlequant::runtime::{Engine, ModelRunner, NativeBackend, RunnerBackend};
-use singlequant::tensor::kernels::{matmul_packed, matmul_threaded};
-use singlequant::tensor::Tensor;
+use singlequant::tensor::kernels::{
+    matmul_packed, matmul_packed_with, matmul_threaded, matmul_threaded_with,
+};
+use singlequant::tensor::{pool, simd, Tensor};
 use singlequant::util::bench::{bench_for, header, BenchStats};
 use singlequant::util::json::Json;
 use singlequant::util::rng::Rng;
@@ -81,6 +84,149 @@ fn kernel_section(budget: f64, smoke: bool, report: &mut Vec<Json>) {
         ("kind", Json::str("derived")),
         ("speedup", Json::num(speedup)),
     ]));
+}
+
+/// Scalar vs best-SIMD microkernel on the same serving-shaped GEMMs,
+/// forced in-process through the `_with` dispatchers (the process-wide
+/// kernel latch is untouched). Packed rows report effective GB/s over
+/// the bytes a fused-dequant matmul actually streams.
+fn simd_section(budget: f64, smoke: bool, report: &mut Vec<Json>) {
+    let (m, k, n) = if smoke { (16, 256, 256) } else { (32, 1024, 1024) };
+    let mut rng = Rng::new(19);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 0.5, &mut rng);
+    let packed = RepackedWeight::pack(&b, 4, 64).unwrap();
+    // fused-dequant traffic: A fp32 + int4 codes + fp32 output
+    let packed_bytes = (m * k * 4 + k * n / 2 + m * n * 4) as f64;
+
+    let mut kernels = vec![simd::Kernel::Scalar];
+    if simd::best() != simd::Kernel::Scalar {
+        kernels.push(simd::best());
+    }
+    for kernel in kernels {
+        let label = kernel.label();
+        for &t in &THREAD_SWEEP {
+            let s = bench_for(
+                &format!("kernel/{label}/packed4 t={t} {m}x{k}x{n}"),
+                budget,
+                || {
+                    std::hint::black_box(matmul_packed_with(kernel, &a, &packed, t).len());
+                },
+            );
+            let gbs = packed_bytes / s.mean_s / 1e9;
+            println!("{}  ({gbs:.2} GB/s)", s.row());
+            entry(report, &s, vec![
+                ("kind", Json::str("packed_kernel")),
+                ("kernel", Json::str(label)),
+                ("threads", Json::usize(t)),
+                ("gb_per_s", Json::num(gbs)),
+            ]);
+        }
+        let s = bench_for(
+            &format!("kernel/{label}/f32 t=4 {m}x{k}x{n}"),
+            budget,
+            || {
+                std::hint::black_box(matmul_threaded_with(kernel, &a, &b, 4).len());
+            },
+        );
+        println!("{}", s.row());
+        entry(report, &s, vec![
+            ("kind", Json::str("dense_kernel")),
+            ("kernel", Json::str(label)),
+            ("threads", Json::usize(4)),
+        ]);
+    }
+}
+
+/// Per-call dispatch overhead: spawn-per-matmul (the pre-pool scheme,
+/// replicated with `std::thread::scope`) vs posting the same chunks to
+/// the persistent worker pool. The chunk body is matmul-threshold sized,
+/// so the gap is pure thread start/stop cost.
+fn dispatch_section(budget: f64, report: &mut Vec<Json>) {
+    const CHUNKS: usize = 4;
+    let work: Vec<f32> = (0..4096).map(|i| (i as f32).sin()).collect();
+    let chunk_sum = |ci: usize| {
+        let lo = ci * work.len() / CHUNKS;
+        let hi = (ci + 1) * work.len() / CHUNKS;
+        std::hint::black_box(work[lo..hi].iter().sum::<f32>());
+    };
+
+    let s = bench_for("dispatch/spawn-per-call x4", budget, || {
+        std::thread::scope(|scope| {
+            for ci in 1..CHUNKS {
+                scope.spawn(move || chunk_sum(ci));
+            }
+            chunk_sum(0);
+        });
+    });
+    println!("{}", s.row());
+    entry(report, &s, vec![("kind", Json::str("dispatch")), ("scheme", Json::str("spawn"))]);
+    let spawn_mean = s.mean_s;
+
+    let s = bench_for("dispatch/worker-pool x4", budget, || {
+        pool::global().run(CHUNKS, chunk_sum);
+    });
+    println!("{}  ({:.1}x vs spawn)", s.row(), spawn_mean / s.mean_s);
+    entry(report, &s, vec![
+        ("kind", Json::str("dispatch")),
+        ("scheme", Json::str("pool")),
+        ("speedup_vs_spawn", Json::num(spawn_mean / s.mean_s)),
+    ]);
+}
+
+/// Slot-parallel decode-wave scaling: tokens/sec of one backend decode
+/// step as the number of active slots grows. Cache refills (retire +
+/// re-prefill) happen outside the timed region.
+fn wave_section(qm: &QuantizedModel, budget: f64, report: &mut Vec<Json>) {
+    let mut rng = Rng::new(23);
+    let plen = 8usize;
+    for batch in [1usize, 4, 8] {
+        let model = NativeModel::from_quantized(qm, 4, 0).expect("native model");
+        let cfg = model.cfg.clone();
+        let mut be = NativeBackend::new(model, batch);
+        let score_seq = be.limits().score_seq;
+        let admitted: Vec<usize> = (0..batch).collect();
+        let prefill_tokens = |rng: &mut Rng| -> Vec<i32> {
+            let mut toks = vec![PAD as i32; batch * score_seq];
+            for slot in 0..batch {
+                for p in 0..plen {
+                    toks[slot * score_seq + p] = rng.below(256) as i32;
+                }
+            }
+            toks
+        };
+        be.prefill(&prefill_tokens(&mut rng), &admitted).unwrap();
+        let mut pos = plen;
+
+        let step: Vec<i32> = vec![7; batch];
+        let mut times = Vec::new();
+        let start = std::time::Instant::now();
+        while start.elapsed().as_secs_f64() < budget || times.len() < 3 {
+            if pos + 1 >= cfg.max_seq {
+                for slot in 0..batch {
+                    be.retire(slot);
+                }
+                be.prefill(&prefill_tokens(&mut rng), &admitted).unwrap();
+                pos = plen;
+            }
+            let positions: Vec<i32> = vec![pos as i32; batch];
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(be.decode(&step, &positions).unwrap().len());
+            times.push(t0.elapsed().as_secs_f64());
+            pos += 1;
+            if times.len() > 10_000 {
+                break;
+            }
+        }
+        let s = BenchStats::from_times(&format!("wave/decode batch={batch}"), times);
+        let tps = batch as f64 / s.mean_s;
+        println!("{}  ({tps:.0} tok/s across {batch} slots)", s.row());
+        entry(report, &s, vec![
+            ("kind", Json::str("decode_wave")),
+            ("batch", Json::usize(batch)),
+            ("tokens_per_s", Json::num(tps)),
+        ]);
+    }
 }
 
 /// Prefill vs KV-cached decode tokens/sec on the quantized demo model.
@@ -339,7 +485,10 @@ fn main() {
     println!("{}", header());
     let mut report: Vec<Json> = Vec::new();
     kernel_section(budget, smoke, &mut report);
+    simd_section(budget, smoke, &mut report);
+    dispatch_section(budget, &mut report);
     let qm = serving_section(budget, &mut report);
+    wave_section(&qm, budget, &mut report);
     paged_kv_section(&qm, smoke, &mut report);
 
     let json = Json::obj(vec![

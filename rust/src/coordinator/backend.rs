@@ -90,6 +90,13 @@ pub trait ServeBackend: Send {
     fn kv_reserve(&mut self, _slot: usize, _extra: usize) -> bool {
         true
     }
+
+    /// Which compute kernel the backend executes on ("scalar" / "avx2" /
+    /// "neon" for the native backend); surfaces on `/metrics` and in the
+    /// shutdown summary. Backends without CPU kernels report "n/a".
+    fn kernel_label(&self) -> &'static str {
+        "n/a"
+    }
 }
 
 /// Deterministic model-free backend: the "token calculator".

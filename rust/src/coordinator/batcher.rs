@@ -148,10 +148,12 @@ fn emit_unslotted(
 impl ServeEngine {
     pub fn new(backend: Box<dyn ServeBackend>, cfg: ServeConfig) -> ServeEngine {
         let limits = backend.limits();
+        let mut metrics = ServeMetrics::default();
+        metrics.kernel_backend = backend.kernel_label().to_string();
         ServeEngine {
             slots: (0..limits.batch).map(|_| None).collect(),
             queue: VecDeque::new(),
-            metrics: ServeMetrics::default(),
+            metrics,
             rng: Rng::new(cfg.seed),
             backend,
             limits,
@@ -593,6 +595,7 @@ impl ServeEngine {
             self.metrics.kv_pages_total = pool.pages_total;
             self.metrics.kv_pages_used = pool.pages_used();
         }
+        self.metrics.pool_queue_depth = crate::tensor::pool::global_queue_depth();
         self.metrics.wall_s = self.started.unwrap().elapsed().as_secs_f64();
         Ok(events)
     }

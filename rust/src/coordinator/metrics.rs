@@ -93,6 +93,12 @@ pub struct ServeMetrics {
     pub prefill_seconds: f64,
     /// Cumulative wall time spent inside backend decode waves.
     pub decode_seconds: f64,
+    /// Compute-kernel path the backend selected ("scalar"/"avx2"/"neon",
+    /// "n/a" for kernel-less backends; empty until an engine stamps it).
+    pub kernel_backend: String,
+    /// Unfinished chunks of the worker pool's in-flight job, sampled
+    /// every scheduler tick (0 = pool idle or never started).
+    pub pool_queue_depth: usize,
 }
 
 impl ServeMetrics {
@@ -137,7 +143,7 @@ impl ServeMetrics {
              decode_tput={:.1} tok/s prefill/decode split={:.0}%/{:.0}% \
              ttft p50={:.1}ms p95={:.1}ms latency p50={:.1}ms decode_step p50={:.2}ms \
              per_token p50={:.2}ms p95={:.2}ms rejected={} timeouts={} cancelled={} \
-             kv_pages={}/{} preemptions={} kv_rejected={}",
+             kv_pages={}/{} preemptions={} kv_rejected={} kernel={}",
             self.completed,
             self.generated_tokens,
             self.wall_s,
@@ -158,6 +164,7 @@ impl ServeMetrics {
             self.kv_pages_total,
             self.preemptions,
             self.kv_rejected,
+            if self.kernel_backend.is_empty() { "?" } else { &self.kernel_backend },
         )
     }
 
@@ -212,6 +219,17 @@ impl ServeMetrics {
               self.kv_pages_used as f64);
         gauge(&mut o, "singlequant_kv_pool_utilization",
               "Used fraction of the KV page pool.", self.kv_utilization());
+        gauge(&mut o, "singlequant_pool_queue_depth",
+              "Unfinished chunks of the worker pool's in-flight job.",
+              self.pool_queue_depth as f64);
+        if !self.kernel_backend.is_empty() {
+            // info-style gauge: the label carries the selected path
+            let _ = writeln!(o, "# HELP singlequant_kernel_backend \
+                                 Selected compute kernel (info gauge).");
+            let _ = writeln!(o, "# TYPE singlequant_kernel_backend gauge");
+            let _ = writeln!(o, "singlequant_kernel_backend{{kernel=\"{}\"}} 1",
+                             self.kernel_backend);
+        }
 
         let quantiles = |o: &mut String, name: &str, help: &str, h: &Histogram| {
             let _ = writeln!(o, "# HELP {name} {help}");
@@ -231,6 +249,9 @@ impl ServeMetrics {
                   "Total request latency.", &self.latency);
         quantiles(&mut o, "singlequant_queue_wait_seconds",
                   "Admission-queue wait.", &self.queue_wait);
+        quantiles(&mut o, "singlequant_decode_wave_seconds",
+                  "Backend decode wave duration (one step across all \
+                   active slots).", &self.decode_step);
 
         counter(&mut o, "singlequant_prefill_seconds_total",
                 "Wall time inside backend prefill calls.", self.prefill_seconds);
@@ -317,7 +338,13 @@ mod tests {
         m.kv_pages_used = 2;
         m.preemptions = 5;
         m.kv_rejected = 4;
+        m.kernel_backend = "avx2".to_string();
+        m.pool_queue_depth = 3;
+        m.decode_step.record(0.004);
         let text = m.prometheus();
+        assert!(text.contains("singlequant_kernel_backend{kernel=\"avx2\"} 1"));
+        assert!(text.contains("singlequant_pool_queue_depth 3"));
+        assert!(text.contains("singlequant_decode_wave_seconds{quantile=\"0.5\"}"));
         assert!(text.contains("singlequant_requests_completed_total 3"));
         assert!(text.contains("singlequant_requests_rejected_total 1"));
         assert!(text.contains("singlequant_kv_pages_total 8"));
@@ -333,5 +360,15 @@ mod tests {
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert_eq!(line.split_whitespace().count(), 2, "bad line {line:?}");
         }
+    }
+
+    #[test]
+    fn kernel_info_gauge_absent_until_stamped() {
+        let m = ServeMetrics::default();
+        assert!(!m.prometheus().contains("singlequant_kernel_backend"));
+        assert!(m.summary().contains("kernel=?"));
+        let mut m2 = ServeMetrics::default();
+        m2.kernel_backend = "scalar".to_string();
+        assert!(m2.summary().contains("kernel=scalar"));
     }
 }

@@ -19,11 +19,13 @@
 //! `model::native` pin this down across page sizes.
 
 mod contig;
+mod overlay;
 mod paged;
 mod pool;
 
 pub use contig::SlotKv;
-pub use paged::{PageTable, PagedSlot};
+pub use overlay::{WaveOverlay, WaveRows};
+pub use paged::{PageTable, PagedReader, PagedSlot};
 pub use pool::BlockPool;
 
 use std::error::Error;
@@ -56,6 +58,15 @@ impl Error for KvError {}
 /// the only lookup the attention read path needs.
 pub trait KvRows {
     fn rows(&self, layer: usize, pos: usize) -> (&[f32], &[f32]);
+}
+
+/// Shared references read straight through — a decode wave hands each
+/// slot a `&SlotKv` (or a [`PagedReader`]) base view while the slots
+/// compute in parallel.
+impl<T: KvRows + ?Sized> KvRows for &T {
+    fn rows(&self, layer: usize, pos: usize) -> (&[f32], &[f32]) {
+        (**self).rows(layer, pos)
+    }
 }
 
 /// A per-request KV cache the step functions write into. `reserve`

@@ -1,0 +1,180 @@
+//! Decode-wave KV overlay: buffer one step's new K/V rows privately on
+//! top of a shared read-only base view.
+//!
+//! A slot-parallel decode wave wants every active slot computing at
+//! once, but [`KvCache`] appends need `&mut` access — and the paged
+//! variants all borrow one shared [`super::BlockPool`]. The overlay
+//! splits the step in two: during the parallel phase each slot runs the
+//! model against a [`WaveOverlay`] whose reads fall through to the
+//! committed base (`&SlotKv` / [`super::PagedReader`], shared borrows)
+//! while the step's fresh rows land in slot-private buffers; afterwards
+//! [`WaveOverlay::into_rows`] drops the base borrow and the scheduler
+//! commits each [`WaveRows`] serially. Reads and writes are therefore
+//! exactly those of the serial slot walk — same rows, same order within
+//! a slot — which is what makes wave results bit-equal to it.
+
+use super::{KvCache, KvError, KvRows};
+
+/// The rows a wave step buffered for one slot, detached from the base
+/// borrow — plain owned data, safe to hold across the write-back phase.
+pub struct WaveRows {
+    base_pos: usize,
+    appended: usize,
+    d: usize,
+    /// `k[layer]` / `v[layer]`: `appended` rows of `d` floats each.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl WaveRows {
+    /// Positions this step appended beyond the base.
+    pub fn appended(&self) -> usize {
+        self.appended
+    }
+
+    /// Serially replay the buffered rows into the real cache. Propagates
+    /// the cache's own `reserve` result — a no-op when the wave
+    /// scheduler pre-reserved (the batcher path), a real allocation for
+    /// direct callers.
+    pub fn commit<K: KvCache>(&self, kv: &mut K) -> Result<(), KvError> {
+        debug_assert_eq!(kv.pos(), self.base_pos, "commit to a moved cache");
+        kv.reserve(self.appended)?;
+        for layer in 0..self.k.len() {
+            for off in 0..self.appended {
+                let (a, b) = (off * self.d, (off + 1) * self.d);
+                kv.append_row(layer, self.base_pos + off, &self.k[layer][a..b],
+                              &self.v[layer][a..b]);
+            }
+        }
+        kv.advance(self.appended);
+        Ok(())
+    }
+}
+
+/// A [`KvCache`] whose reads below `base_pos` come from a shared base
+/// view and whose appends collect in private buffers (see module docs).
+pub struct WaveOverlay<B> {
+    base: B,
+    rows: WaveRows,
+}
+
+impl<B: KvRows> WaveOverlay<B> {
+    /// `base_pos` must be the base view's committed position count —
+    /// the overlay cannot ask a bare [`KvRows`] for it.
+    pub fn new(base: B, base_pos: usize, n_layers: usize, d_model: usize) -> WaveOverlay<B> {
+        WaveOverlay {
+            base,
+            rows: WaveRows {
+                base_pos,
+                appended: 0,
+                d: d_model,
+                k: (0..n_layers).map(|_| Vec::new()).collect(),
+                v: (0..n_layers).map(|_| Vec::new()).collect(),
+            },
+        }
+    }
+
+    /// Release the base borrow, keeping only the buffered rows.
+    pub fn into_rows(self) -> WaveRows {
+        self.rows
+    }
+}
+
+impl<B: KvRows> KvRows for WaveOverlay<B> {
+    fn rows(&self, layer: usize, pos: usize) -> (&[f32], &[f32]) {
+        if pos < self.rows.base_pos {
+            self.base.rows(layer, pos)
+        } else {
+            let off = pos - self.rows.base_pos;
+            let (a, b) = (off * self.rows.d, (off + 1) * self.rows.d);
+            (&self.rows.k[layer][a..b], &self.rows.v[layer][a..b])
+        }
+    }
+}
+
+impl<B: KvRows> KvCache for WaveOverlay<B> {
+    fn pos(&self) -> usize {
+        self.rows.base_pos + self.rows.appended
+    }
+
+    /// Always succeeds: the overlay's buffers grow on demand, and real
+    /// capacity is the wave scheduler's job — it must reserve in the
+    /// underlying cache *before* the parallel phase (all-or-nothing, so
+    /// a failed wave leaves every slot replayable).
+    fn reserve(&mut self, _extra: usize) -> Result<(), KvError> {
+        Ok(())
+    }
+
+    fn append_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let off = pos - self.rows.base_pos;
+        debug_assert_eq!(off * self.rows.d, self.rows.k[layer].len(),
+                         "non-sequential overlay append");
+        self.rows.k[layer].extend_from_slice(k);
+        self.rows.v[layer].extend_from_slice(v);
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.rows.appended += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SlotKv;
+    use super::*;
+
+    fn filled_base(layers: usize, d: usize, n: usize) -> SlotKv {
+        let mut kv = SlotKv::new(layers, d);
+        kv.reserve(n).unwrap();
+        for pos in 0..n {
+            for layer in 0..layers {
+                let k = vec![(pos * 10 + layer) as f32; d];
+                let v = vec![(pos * 10 + layer) as f32 + 0.5; d];
+                kv.append_row(layer, pos, &k, &v);
+            }
+        }
+        kv.advance(n);
+        kv
+    }
+
+    #[test]
+    fn overlay_reads_base_below_and_buffer_at_new_positions() {
+        let (layers, d, n) = (2usize, 3usize, 4usize);
+        let base = filled_base(layers, d, n);
+        let mut ov = WaveOverlay::new(&base, n, layers, d);
+        assert_eq!(ov.pos(), n);
+        ov.reserve(1).unwrap();
+        for layer in 0..layers {
+            ov.append_row(layer, n, &vec![9.0; d], &vec![9.5; d]);
+        }
+        ov.advance(1);
+        assert_eq!(ov.pos(), n + 1);
+        // old positions come from the base
+        let (k, _) = ov.rows(1, 2);
+        assert!(k.iter().all(|&x| x == 21.0));
+        // the new position comes from the buffer
+        let (k, v) = ov.rows(0, n);
+        assert!(k.iter().all(|&x| x == 9.0));
+        assert!(v.iter().all(|&x| x == 9.5));
+    }
+
+    #[test]
+    fn commit_replays_into_the_real_cache() {
+        let (layers, d, n) = (2usize, 3usize, 4usize);
+        let mut kv = filled_base(layers, d, n);
+        let rows = {
+            let mut ov = WaveOverlay::new(&kv, n, layers, d);
+            for layer in 0..layers {
+                ov.append_row(layer, n, &vec![7.0; d], &vec![7.5; d]);
+            }
+            ov.advance(1);
+            ov.into_rows()
+        };
+        assert_eq!(rows.appended(), 1);
+        rows.commit(&mut kv).unwrap();
+        assert_eq!(kv.pos, n + 1);
+        let (k, v) = kv.rows(1, n);
+        assert!(k.iter().all(|&x| x == 7.0));
+        assert!(v.iter().all(|&x| x == 7.5));
+    }
+}

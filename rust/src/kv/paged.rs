@@ -57,6 +57,16 @@ impl PageTable {
         }
         self.pos = 0;
     }
+
+    /// (page, in-page index) holding position `pos`.
+    #[inline]
+    fn locate(&self, page_tokens: usize, pos: usize) -> (u32, usize) {
+        let page = *self
+            .pages
+            .get(pos / page_tokens)
+            .expect("kv position outside reserved pages");
+        (page, pos % page_tokens)
+    }
 }
 
 /// Borrowed (pool, table) pair implementing the cache interface for one
@@ -69,13 +79,22 @@ pub struct PagedSlot<'a> {
 impl<'a> PagedSlot<'a> {
     #[inline]
     fn locate(&self, pos: usize) -> (u32, usize) {
-        let pt = self.pool.page_tokens();
-        let page = *self
-            .table
-            .pages
-            .get(pos / pt)
-            .expect("kv position outside reserved pages");
-        (page, pos % pt)
+        self.table.locate(self.pool.page_tokens(), pos)
+    }
+}
+
+/// Read-only view of one slot's paged cache: shared borrows only, so a
+/// decode wave can hold one per active slot simultaneously while the
+/// pool stays untouched.
+pub struct PagedReader<'a> {
+    pub pool: &'a BlockPool,
+    pub table: &'a PageTable,
+}
+
+impl KvRows for PagedReader<'_> {
+    fn rows(&self, layer: usize, pos: usize) -> (&[f32], &[f32]) {
+        let (page, idx) = self.table.locate(self.pool.page_tokens(), pos);
+        (self.pool.row(page, layer, 0, idx), self.pool.row(page, layer, 1, idx))
     }
 }
 

@@ -124,6 +124,12 @@ fn ctx_from_args(args: &Args) -> Result<ExpContext> {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, &["fast", "lct", "verbose", "urt-axis2", "synthetic"])?;
+    if let Some(k) = args.get("kernel") {
+        // pin the microkernel before any matmul runs (selection is
+        // once-per-process); "auto" re-states the default runtime detection
+        let chosen = singlequant::tensor::simd::force(k)?;
+        eprintln!("[kernel] {}", chosen.label());
+    }
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     match sub.as_str() {
         "info" => info(&args),
@@ -151,6 +157,8 @@ usage: singlequant <info|quantize|eval|serve|serve-http|generate|reproduce|analy
   --backend NAME    native (threaded CPU, packed weights; eval + serve-http)
                     | pjrt (AOT graphs) | synthetic (serve-http only)
   --threads N       native-backend worker threads (0 = all cores)
+  --kernel NAME     scalar | simd | auto — pin the CPU microkernel (default:
+                    runtime detection; SQ_KERNEL=scalar env does the same)
   serve-http        --host IP --port N --batch N --max-new N --queue-cap N
                     --deadline-ms N --backend native|pjrt|synthetic
                     --kv-page-tokens N (native; 0 = contiguous KV, default 16)
@@ -410,7 +418,8 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
               GET /metrics; POST /admin/shutdown to drain)", handle.addr());
     // Block until a graceful drain is requested over HTTP; shutdown() then
     // joins the scheduler after in-flight requests finish.
-    handle.shutdown_on_drain();
+    let metrics = handle.shutdown_on_drain();
+    println!("[serve-http] drained: {}", metrics.summary());
     Ok(())
 }
 

@@ -356,6 +356,35 @@ mod tests {
         check_exact(&cfg, &w, None);
     }
 
+    /// The decode-wave building block: a step through a `WaveOverlay`
+    /// (shared base + buffered rows, committed afterwards) must be
+    /// bit-equal to decoding straight into the cache.
+    #[test]
+    fn decode_through_wave_overlay_is_bit_equal_to_direct() {
+        use crate::kv::WaveOverlay;
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let nm = NativeModel::from_weights(&cfg, &w, None, 2).unwrap();
+        let tokens = toks(9, 8);
+        let plen = 5;
+        let mut direct = nm.new_kv();
+        nm.prefill(&mut direct, &tokens[..plen]).unwrap();
+        let mut staged = nm.new_kv();
+        nm.prefill(&mut staged, &tokens[..plen]).unwrap();
+        for &tok in &tokens[plen..] {
+            let want = nm.decode(&mut direct, tok).unwrap();
+            let rows = {
+                let base = &staged;
+                let mut ov = WaveOverlay::new(base, base.pos, cfg.n_layers, cfg.d_model);
+                let got = nm.decode(&mut ov, tok).unwrap();
+                assert_eq!(got, want, "overlay decode diverged");
+                ov.into_rows()
+            };
+            rows.commit(&mut staged).unwrap();
+            assert_eq!(staged.pos, direct.pos);
+        }
+    }
+
     #[test]
     fn packed_decode_is_self_consistent_and_near_reference() {
         let cfg = test_config();

@@ -32,13 +32,21 @@ pub struct RepackedWeight {
     pub scales: Vec<f32>,
     /// Column-major codes. bits ≤ 4: two codes per byte, nibble-interleaved
     /// (row k even → low nibble of byte k/2, odd → high nibble). bits 5..8:
-    /// one sign-extended byte per code.
+    /// one sign-extended byte per code. Every column's stride is padded
+    /// with zero bytes to a multiple of [`COL_ALIGN`] so vector kernels
+    /// may issue full 8-byte loads anywhere in a column without reading
+    /// past the buffer.
     pub codes: Vec<u8>,
-    /// Bytes per column in `codes`.
+    /// Bytes per column in `codes` (padded, see `codes`).
     col_stride: usize,
     /// Bias added when storing codes unsigned in nibbles.
     offset: i32,
 }
+
+/// Column-stride alignment in bytes: guarantees the SIMD kernels' full
+/// 8-byte (and narrower u32) loads are in-bounds at any in-column code
+/// offset, and keeps column bases 8-byte separated.
+const COL_ALIGN: usize = 8;
 
 impl RepackedWeight {
     fn layout(bits: u32, rows: usize, group: usize) -> Result<(usize, usize, i32)> {
@@ -49,7 +57,8 @@ impl RepackedWeight {
             bail!("repack: zero group");
         }
         let n_groups = rows.div_ceil(group);
-        let col_stride = if bits <= 4 { rows.div_ceil(2) } else { rows };
+        let used = if bits <= 4 { rows.div_ceil(2) } else { rows };
+        let col_stride = used.next_multiple_of(COL_ALIGN);
         let (qmin, _) = qlevels(bits);
         Ok((n_groups, col_stride, -qmin as i32))
     }
@@ -230,11 +239,36 @@ mod tests {
     fn int4_columns_pack_two_codes_per_byte() {
         let mut rng = Rng::new(4);
         let w = Tensor::randn(&[10, 4], 0.5, &mut rng);
+        // 10 int4 rows use 5 bytes, padded to the 8-byte column stride
         let r = RepackedWeight::pack(&w, 4, 10).unwrap();
-        assert_eq!(r.col_codes(0).len(), 5);
-        // int8 stays one byte per code
+        assert_eq!(r.col_codes(0).len(), 8);
+        // int8 stays one byte per code: 10 used, padded to 16
         let r8 = RepackedWeight::pack(&w, 8, 10).unwrap();
-        assert_eq!(r8.col_codes(0).len(), 10);
+        assert_eq!(r8.col_codes(0).len(), 16);
+    }
+
+    #[test]
+    fn column_padding_is_zero_and_codes_are_untouched() {
+        let mut rng = Rng::new(6);
+        let w = Tensor::randn(&[11, 3], 0.5, &mut rng);
+        for bits in [4u32, 8] {
+            let r = RepackedWeight::pack(&w, bits, 11).unwrap();
+            let used = if bits <= 4 { 11usize.div_ceil(2) } else { 11 };
+            for c in 0..3 {
+                let col = r.col_codes(c);
+                assert_eq!(col.len() % 8, 0, "bits {bits}: unaligned stride");
+                assert!(col[used..].iter().all(|&b| b == 0),
+                        "bits {bits} col {c}: dirty padding");
+            }
+            // padding must not perturb decode
+            let dq = r.dequantize();
+            for k in 0..11 {
+                for c in 0..3 {
+                    let s = r.col_scales(c)[0];
+                    assert!((r.code_at(k, c) as f32 * s - dq.at(k, c)).abs() < 1e-7);
+                }
+            }
+        }
     }
 
     #[test]

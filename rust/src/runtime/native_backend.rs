@@ -13,13 +13,25 @@
 //!   preemption, and `retire(slot)` returns the slot's pages to the free
 //!   list. Reads are bit-identical to the contiguous layout (pinned by
 //!   the property tests in `model::native`).
+//!
+//! `decode` runs active slots as a **parallel wave** over the worker
+//! pool: a serial pre-pass validates positions and reserves KV capacity
+//! (all-or-nothing, so failure leaves every slot replayable), the
+//! parallel phase gives each slot a read-only base view plus a
+//! [`WaveOverlay`] for its fresh rows, and a serial ascending-slot
+//! write-back commits. Per-slot results are bit-equal to the serial
+//! walk: each slot reads exactly the committed rows plus its own
+//! buffered ones, and the kernels are thread-count invariant.
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::coordinator::backend::{BackendLimits, KvPoolStatus, ServeBackend};
 use crate::coordinator::tokenizer::PAD;
-use crate::kv::{BlockPool, PageTable, PagedSlot, SlotKv};
+use crate::kv::{BlockPool, KvRows, PageTable, PagedReader, PagedSlot, SlotKv, WaveOverlay,
+                WaveRows};
 use crate::model::NativeModel;
+use crate::tensor::pool::{self, SendPtr};
+use crate::tensor::simd;
 use crate::tensor::Tensor;
 
 enum KvSlots {
@@ -86,6 +98,42 @@ impl NativeBackend {
     }
 }
 
+/// Parallel phase of a decode wave: every active slot decodes its token
+/// against a read-only view of its committed cache, buffering the new
+/// K/V rows in a slot-private [`WaveOverlay`]. Slots are dispatched
+/// across the worker pool; matmuls issued inside a multi-slot wave run
+/// inline on the claiming worker (the pool's nested-call rule), and a
+/// single-slot wave keeps full intra-matmul parallelism — either way
+/// each slot's numbers are identical to the serial slot walk.
+fn run_wave<B, F>(
+    model: &NativeModel,
+    active: &[usize],
+    tokens: &[i32],
+    batch: usize,
+    base_of: F,
+) -> Vec<Option<Result<(Vec<f32>, WaveRows)>>>
+where
+    B: KvRows + Sync,
+    F: Fn(usize) -> (B, usize) + Sync,
+{
+    let (n_layers, d) = (model.cfg.n_layers, model.cfg.d_model);
+    let mut out: Vec<Option<Result<(Vec<f32>, WaveRows)>>> =
+        (0..batch).map(|_| None).collect();
+    let cells = SendPtr::new(out.as_mut_ptr());
+    pool::global().run(active.len(), |i| {
+        let slot = active[i];
+        let (base, base_pos) = base_of(slot);
+        let mut overlay = WaveOverlay::new(base, base_pos, n_layers, d);
+        let res = model
+            .decode(&mut overlay, tokens[slot] as u16)
+            .map(|row| (row, overlay.into_rows()));
+        // SAFETY: each chunk writes only its own slot's cell, and `out`
+        // outlives the job (`run` blocks until every chunk completes).
+        unsafe { *cells.get().add(slot) = Some(res) };
+    });
+    out
+}
+
 impl ServeBackend for NativeBackend {
     fn limits(&self) -> BackendLimits {
         self.limits
@@ -131,28 +179,72 @@ impl ServeBackend for NativeBackend {
         ensure!(tokens.len() == batch && positions.len() == batch,
                 "decode shape mismatch");
         let mut logits = Tensor::zeros(&[batch, v]);
-        for slot in 0..batch {
-            let tok = tokens[slot];
-            if tok == PAD as i32 {
-                continue;
-            }
-            let row = match &mut self.kv {
-                KvSlots::Contig(slots) => {
-                    let kv = &mut slots[slot];
-                    ensure!(kv.pos == positions[slot] as usize,
-                            "slot {slot}: cache holds {} positions but scheduler is at {}",
-                            kv.pos, positions[slot]);
-                    self.model.decode(kv, tok as u16)?
-                }
-                KvSlots::Paged { pool, tables } => {
-                    let table = &mut tables[slot];
-                    ensure!(table.pos() == positions[slot] as usize,
-                            "slot {slot}: cache holds {} positions but scheduler is at {}",
-                            table.pos(), positions[slot]);
-                    let mut view = PagedSlot { pool, table };
-                    self.model.decode(&mut view, tok as u16)?
-                }
+        let active: Vec<usize> =
+            (0..batch).filter(|&s| tokens[s] != PAD as i32).collect();
+        if active.is_empty() {
+            return Ok(logits);
+        }
+
+        // serial pre-pass: position checks, then KV reservation for every
+        // active slot before any state changes (the batcher pre-reserves,
+        // making this a no-op there; direct callers get PoolExhausted
+        // here with all slots still replayable)
+        for &slot in &active {
+            let pos = match &self.kv {
+                KvSlots::Contig(slots) => slots[slot].pos,
+                KvSlots::Paged { tables, .. } => tables[slot].pos(),
             };
+            ensure!(pos == positions[slot] as usize,
+                    "slot {slot}: cache holds {pos} positions but scheduler is at {}",
+                    positions[slot]);
+        }
+        if let KvSlots::Paged { pool, tables } = &mut self.kv {
+            for &slot in &active {
+                tables[slot].reserve(pool, 1).map_err(anyhow::Error::new)?;
+            }
+        }
+
+        // parallel wave over shared read-only base views
+        let model = &self.model;
+        let mut waves = match &self.kv {
+            KvSlots::Contig(slots) => run_wave(model, &active, tokens, batch, |slot| {
+                let base = &slots[slot];
+                (base, base.pos)
+            }),
+            KvSlots::Paged { pool, tables } => {
+                run_wave(model, &active, tokens, batch, |slot| {
+                    let table = &tables[slot];
+                    (PagedReader { pool, table }, table.pos())
+                })
+            }
+        };
+
+        // any slot failure aborts the wave before a single row commits —
+        // the scheduler tears down in-flight work on decode errors, and
+        // partially-advanced siblings would only confuse the post-mortem
+        for &slot in &active {
+            if !matches!(waves[slot], Some(Ok(_))) {
+                return Err(match waves[slot].take() {
+                    Some(Err(e)) => e,
+                    _ => anyhow!("decode wave dropped slot {slot}"),
+                });
+            }
+        }
+
+        // serial ascending-slot write-back
+        for &slot in &active {
+            let (row, rows) = match waves[slot].take() {
+                Some(Ok(x)) => x,
+                _ => unreachable!("scanned above"),
+            };
+            match &mut self.kv {
+                KvSlots::Contig(slots) => rows.commit(&mut slots[slot]),
+                KvSlots::Paged { pool, tables } => {
+                    let mut view = PagedSlot { pool, table: &mut tables[slot] };
+                    rows.commit(&mut view)
+                }
+            }
+            .map_err(anyhow::Error::new)?;
             logits.data_mut()[slot * v..(slot + 1) * v].copy_from_slice(&row);
         }
         Ok(logits)
@@ -192,6 +284,10 @@ impl ServeBackend for NativeBackend {
                 None => false,
             },
         }
+    }
+
+    fn kernel_label(&self) -> &'static str {
+        simd::active().label()
     }
 }
 
@@ -309,6 +405,122 @@ mod tests {
                        "round {round}: pages leaked");
             assert_eq!(be.kv_nbytes(), 0);
         }
+    }
+
+    /// Decode a multi-slot wave and a set of single-slot backends over
+    /// the same prompts; every step's logits must be bit-equal. This is
+    /// the slot-parallel determinism contract: wave dispatch must never
+    /// change the numbers, on fp and w4a4 models, contiguous and paged.
+    fn check_wave_matches_serial(make: &dyn Fn(usize) -> NativeBackend) {
+        let batch = 3usize;
+        let prompts: [&[i32]; 3] = [&[5, 6, 7], &[11, 12], &[20, 21, 22, 23]];
+        let mut wave_be = make(batch);
+        let t = wave_be.limits().score_seq;
+        let v = wave_be.limits().vocab_size;
+        let mut tokens = vec![PAD as i32; batch * t];
+        for (s, p) in prompts.iter().enumerate() {
+            tokens[s * t..s * t + p.len()].copy_from_slice(p);
+        }
+        for s in 0..batch {
+            assert!(wave_be.kv_reserve(s, prompts[s].len()));
+        }
+        wave_be.prefill(&tokens, &[0, 1, 2]).unwrap();
+
+        let mut solo: Vec<NativeBackend> = (0..batch).map(|_| make(1)).collect();
+        for (s, be) in solo.iter_mut().enumerate() {
+            let mut tk = vec![PAD as i32; t];
+            tk[..prompts[s].len()].copy_from_slice(prompts[s]);
+            assert!(be.kv_reserve(0, prompts[s].len()));
+            be.prefill(&tk, &[0]).unwrap();
+        }
+
+        let mut pos: Vec<i32> = prompts.iter().map(|p| p.len() as i32).collect();
+        let mut step_toks: Vec<i32> = vec![30, 31, 32];
+        for step in 0..4 {
+            for s in 0..batch {
+                assert!(wave_be.kv_reserve(s, 1));
+            }
+            let wave = wave_be.decode(&step_toks, &pos).unwrap();
+            for (s, be) in solo.iter_mut().enumerate() {
+                assert!(be.kv_reserve(0, 1));
+                let one = be.decode(&[step_toks[s]], &[pos[s]]).unwrap();
+                assert_eq!(&wave.data()[s * v..(s + 1) * v], one.data(),
+                           "step {step} slot {s}: wave diverged from serial");
+            }
+            for s in 0..batch {
+                pos[s] += 1;
+                step_toks[s] += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn decode_wave_matches_serial_fp_contig() {
+        check_wave_matches_serial(&|batch| NativeBackend::new(demo_model(), batch));
+    }
+
+    #[test]
+    fn decode_wave_matches_serial_fp_paged() {
+        check_wave_matches_serial(&|batch| {
+            NativeBackend::with_paged_kv(demo_model(), batch, 4, 0)
+        });
+    }
+
+    fn w4a4_model() -> NativeModel {
+        use crate::model::forward::QuantCtx;
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 4);
+        let quant = Some(QuantCtx::identity(&cfg, 4));
+        NativeModel::from_weights(&cfg, &w, quant, 2).unwrap()
+    }
+
+    #[test]
+    fn decode_wave_matches_serial_w4a4_contig() {
+        check_wave_matches_serial(&|batch| NativeBackend::new(w4a4_model(), batch));
+    }
+
+    #[test]
+    fn decode_wave_matches_serial_w4a4_paged() {
+        check_wave_matches_serial(&|batch| {
+            NativeBackend::with_paged_kv(w4a4_model(), batch, 7, 0)
+        });
+    }
+
+    #[test]
+    fn decode_wave_pad_slots_stay_untouched() {
+        let mut be = demo_backend(3);
+        let t = be.limits().score_seq;
+        let v = be.limits().vocab_size;
+        let mut tokens = vec![PAD as i32; 3 * t];
+        tokens[..2].copy_from_slice(&[5, 6]);
+        tokens[2 * t..2 * t + 2].copy_from_slice(&[8, 9]);
+        be.prefill(&tokens, &[0, 2]).unwrap();
+        // slot 1 is PAD: its logits row stays zero and its empty cache
+        // is never validated or advanced
+        let lg = be.decode(&[7, PAD as i32, 10], &[2, 0, 2]).unwrap();
+        assert!(lg.data()[v..2 * v].iter().all(|&x| x == 0.0));
+        let lg2 = be.decode(&[8, PAD as i32, 11], &[3, 99, 3]).unwrap();
+        assert!(lg2.data()[v..2 * v].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn exhausted_pool_fails_wave_before_any_commit() {
+        // 2 pages of 4 tokens: slot 0 prefills 4 (1 page), slot 1
+        // prefills 4 (1 page); the first decode wave needs a page per
+        // slot and must fail atomically with both slots replayable
+        let mut be = NativeBackend::with_paged_kv(demo_model(), 2, 4, 2);
+        let t = be.limits().score_seq;
+        let mut tokens = vec![PAD as i32; 2 * t];
+        tokens[..4].copy_from_slice(&[5, 6, 7, 8]);
+        tokens[t..t + 4].copy_from_slice(&[9, 10, 11, 12]);
+        assert!(be.kv_reserve(0, 4) && be.kv_reserve(1, 4));
+        be.prefill(&tokens, &[0, 1]).unwrap();
+        let err = be.decode(&[1, 2], &[4, 4]).unwrap_err();
+        assert!(err.downcast_ref::<crate::kv::KvError>().is_some(),
+                "want KvError, got: {err}");
+        // positions unchanged → both slots replayable
+        let lg = be.decode(&[1, 2], &[4, 4]).unwrap_err();
+        assert!(lg.downcast_ref::<crate::kv::KvError>().is_some());
     }
 
     /// Acceptance: with a pool far smaller than `batch × max_seq`

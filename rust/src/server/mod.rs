@@ -38,6 +38,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::AdmissionError;
+use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::tokenizer;
 use crate::coordinator::{Request, ServeEngine, TokenEvent};
 use crate::util::json::Json;
@@ -112,28 +113,36 @@ impl ServerHandle {
     }
 
     /// Graceful shutdown: refuse new work, drain in-flight requests, join
-    /// both threads.
-    pub fn shutdown(mut self) {
+    /// both threads. Returns the engine's final metrics snapshot (the
+    /// scheduler publishes once more on exit, so it reflects the drain).
+    pub fn shutdown(mut self) -> ServeMetrics {
         self.state.request_shutdown();
-        self.join();
+        self.join()
     }
 
     /// Block until a drain is requested externally (POST /admin/shutdown),
     /// then join — the `serve-http` subcommand's run-forever mode.
-    pub fn shutdown_on_drain(mut self) {
+    /// Returns the final metrics snapshot like [`ServerHandle::shutdown`].
+    pub fn shutdown_on_drain(mut self) -> ServeMetrics {
         while !self.state.stop.load(Ordering::SeqCst) {
             std::thread::sleep(Duration::from_millis(100));
         }
-        self.join();
+        self.join()
     }
 
-    fn join(&mut self) {
+    fn join(&mut self) -> ServeMetrics {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
         if let Some(t) = self.sched_thread.take() {
             let _ = t.join();
         }
+        self.state
+            .sched_shared
+            .metrics
+            .lock()
+            .map(|m| m.clone())
+            .unwrap_or_default()
     }
 }
 

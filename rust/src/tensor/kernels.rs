@@ -1,135 +1,65 @@
 //! Multi-threaded CPU matmul kernels — the native serving backend's hot
 //! path.
 //!
-//! Three kernels, all `std::thread::scope`-parallel with deterministic
-//! results (each output element's k-accumulation order is fixed, so thread
-//! count never changes the numbers):
+//! Three kernels, all dispatched over the persistent worker pool
+//! ([`crate::tensor::pool`]) with deterministic results (each output
+//! element's k-accumulation order is fixed, so thread count never
+//! changes the numbers):
 //!
 //! * [`matmul_threaded`] — dense f32 GEMM, element-identical to
-//!   `Tensor::matmul` (same ascending-k, zero-skip accumulation), blocked
-//!   over output-column tiles so the C row and streamed B rows stay in
-//!   cache.
+//!   `Tensor::matmul` (same ascending-k, zero-skip accumulation) under
+//!   every SIMD kernel, blocked over output-column tiles so the C row
+//!   and streamed B rows stay in cache.
 //! * [`matmul_packed`] — fused dequant-in-inner-loop GEMM over
 //!   [`RepackedWeight`]: nibble-interleaved int≤4 codes decode inside the
-//!   k-loop, group scales multiply once per (element, group) — the weight
-//!   never materializes as f32.
+//!   k-loop (8 lanes per step on AVX2/NEON), group scales multiply once
+//!   per (element, group) — the weight never materializes as f32.
 //! * [`givens_rotate_rows`] — O(k)-per-row fused [`GivensChain`]
 //!   application (k = chain length), the chain-form alternative to a dense
 //!   rotation matmul for URT-style site rotations.
 //!
 //! Work is partitioned over output rows when the activation batch is tall
 //! (prefill) and over output columns when it is short (single-token
-//! decode), so both serving phases scale with cores.
+//! decode), so both serving phases scale with cores. The inner-loop
+//! implementation (scalar vs AVX2/NEON) comes from
+//! [`crate::tensor::simd::active`]; the `_with` variants pin a kernel
+//! explicitly so tests and benches can compare both in one process.
+
+use std::sync::OnceLock;
 
 use crate::quant::repack::RepackedWeight;
 use crate::rotation::givens::GivensChain;
+use crate::tensor::pool::{self, SendPtr};
+use crate::tensor::simd::{self, Kernel};
 use crate::tensor::Tensor;
 
-/// Resolve a requested worker count: 0 means "all available cores".
+/// Resolve a requested worker count: 0 means "all available cores",
+/// probed once per process (the OS call is not free and this sits on
+/// the per-matmul path).
 pub fn resolve_threads(requested: usize) -> usize {
+    static CORES: OnceLock<usize> = OnceLock::new();
     if requested > 0 {
         requested
     } else {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        *CORES.get_or_init(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
     }
 }
 
-/// Output-column tile width: one f32 C tile (and the matching B panel
-/// stripe) stays L1-resident while k streams.
-const NC: usize = 128;
+/// Below this many multiply-adds a GEMM runs serially. The bar is set by
+/// pool dispatch cost (~µs), not thread spawn — an order of magnitude
+/// lower than the old spawn-per-call threshold, so small decode matmuls
+/// parallelize too. Results are identical either way — the serial path
+/// is the same kernel.
+const PAR_THRESHOLD_FLOPS: usize = 16 * 1024;
 
-/// Below this many multiply-adds a GEMM runs serially: thread spawn/join
-/// costs more than the math (small-model decode steps issue many tiny
-/// matmuls). Results are identical either way — the serial path is the
-/// same kernel.
-const PAR_THRESHOLD_FLOPS: usize = 64 * 1024;
-
-/// Dense f32 tile: rows `i0..i1` × cols `j0..j1` of A·B into `out`
-/// (row-major `[(i1-i0), (j1-j0)]`). Accumulation per element is ascending
-/// k with `a == 0.0` skipped — exactly `Tensor::matmul`'s order.
-fn f32_tile(a: &Tensor, b: &Tensor, i0: usize, i1: usize, j0: usize, j1: usize,
-            out: &mut [f32]) {
-    let w = j1 - j0;
-    for i in i0..i1 {
-        let arow = a.row(i);
-        let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
-        let mut t0 = j0;
-        while t0 < j1 {
-            let t1 = (t0 + NC).min(j1);
-            let dst = &mut orow[t0 - j0..t1 - j0];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b.row(kk)[t0..t1];
-                for (d, &bv) in dst.iter_mut().zip(brow) {
-                    *d += av * bv;
-                }
-            }
-            t0 = t1;
-        }
-    }
-}
-
-/// Packed tile: rows `i0..i1` × cols `c0..c1` of A·dequant(W) with the
-/// dequantization fused into the k-loop (codes decode in registers, the
-/// group scale multiplies the partial sum once per group).
-fn packed_tile(a: &Tensor, w: &RepackedWeight, i0: usize, i1: usize,
-               c0: usize, c1: usize, out: &mut [f32]) {
-    let width = c1 - c0;
-    let k = w.rows;
-    let group = w.group;
-    let off = w.nibble_offset();
-    let nibble = w.bits <= 4;
-    for i in i0..i1 {
-        let arow = a.row(i);
-        let orow = &mut out[(i - i0) * width..(i - i0 + 1) * width];
-        for c in c0..c1 {
-            let codes = w.col_codes(c);
-            let scales = w.col_scales(c);
-            let mut total = 0.0f32;
-            let mut k0 = 0usize;
-            let mut g = 0usize;
-            while k0 < k {
-                let k1 = (k0 + group).min(k);
-                let mut acc = 0.0f32;
-                if nibble {
-                    let mut kk = k0;
-                    if kk % 2 == 1 && kk < k1 {
-                        let u = codes[kk / 2] >> 4;
-                        acc += arow[kk] * (u as i32 - off) as f32;
-                        kk += 1;
-                    }
-                    while kk + 1 < k1 {
-                        let byte = codes[kk / 2];
-                        acc += arow[kk] * ((byte & 0x0F) as i32 - off) as f32;
-                        acc += arow[kk + 1] * ((byte >> 4) as i32 - off) as f32;
-                        kk += 2;
-                    }
-                    if kk < k1 {
-                        let byte = codes[kk / 2];
-                        let u = if kk % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-                        acc += arow[kk] * (u as i32 - off) as f32;
-                    }
-                } else {
-                    for (kk, &byte) in codes.iter().enumerate().take(k1).skip(k0) {
-                        acc += arow[kk] * (byte as i8 as f32);
-                    }
-                }
-                total += acc * scales[g];
-                g += 1;
-                k0 = k1;
-            }
-            orow[c - c0] = total;
-        }
-    }
-}
-
-/// Run a tile computation over `m` output rows × `n` output cols with
-/// `threads` workers: row-partitioned when the batch is tall, column-
-/// partitioned (per-thread tiles merged afterwards) when it is short.
-/// `work` is the approximate multiply-add count (m·n·k) — tiny problems
-/// run serially rather than paying thread spawn/join.
+/// Run a tile computation over `m` output rows × `n` output cols split
+/// into up to `threads` chunks on the worker pool: row-partitioned when
+/// the batch is tall, column-partitioned (per-chunk tiles merged
+/// afterwards) when it is short. `work` is the approximate multiply-add
+/// count (m·n·k) — tiny problems run serially rather than paying
+/// dispatch.
 fn run_partitioned<F>(m: usize, n: usize, work: usize, threads: usize, tile: F) -> Vec<f32>
 where
     F: Fn(usize, usize, usize, usize, &mut [f32]) + Sync,
@@ -146,42 +76,40 @@ where
     if m >= threads {
         // tall batch: contiguous row ranges, written in place
         let chunk = m.div_ceil(threads);
-        std::thread::scope(|s| {
-            let tile = &tile;
-            let mut rest: &mut [f32] = &mut out;
-            let mut lo = 0usize;
-            while lo < m {
-                let hi = (lo + chunk).min(m);
-                let (head, tail) =
-                    std::mem::take(&mut rest).split_at_mut((hi - lo) * n);
-                rest = tail;
-                s.spawn(move || tile(lo, hi, 0, n, head));
-                lo = hi;
-            }
+        let n_chunks = m.div_ceil(chunk);
+        let base = SendPtr::new(out.as_mut_ptr());
+        pool::global().run(n_chunks, |ci| {
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(m);
+            // SAFETY: chunks cover disjoint row ranges of `out`, which
+            // outlives the job (`run` blocks until every chunk is done).
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(base.get().add(lo * n), (hi - lo) * n) };
+            tile(lo, hi, 0, n, dst);
         });
         return out;
     }
-    // short batch (decode): column ranges into per-thread tiles
+    // short batch (decode): column ranges into per-chunk tiles
     let chunk = n.div_ceil(threads).max(1);
-    let mut tiles: Vec<(usize, usize, Vec<f32>)> = Vec::new();
-    std::thread::scope(|s| {
-        let tile = &tile;
-        let mut handles = Vec::new();
-        let mut c0 = 0usize;
-        while c0 < n {
+    let n_chunks = n.div_ceil(chunk);
+    let mut tiles: Vec<Vec<f32>> = (0..n_chunks)
+        .map(|ci| {
+            let c0 = ci * chunk;
             let c1 = (c0 + chunk).min(n);
-            handles.push((c0, c1, s.spawn(move || {
-                let mut t = vec![0.0f32; m * (c1 - c0)];
-                tile(0, m, c0, c1, &mut t);
-                t
-            })));
-            c0 = c1;
-        }
-        for (c0, c1, h) in handles {
-            tiles.push((c0, c1, h.join().expect("kernel worker panicked")));
-        }
+            vec![0.0f32; m * (c1 - c0)]
+        })
+        .collect();
+    let base = SendPtr::new(tiles.as_mut_ptr());
+    pool::global().run(n_chunks, |ci| {
+        let c0 = ci * chunk;
+        let c1 = (c0 + chunk).min(n);
+        // SAFETY: each chunk writes only its own pre-sized tile vector.
+        let t: &mut Vec<f32> = unsafe { &mut *base.get().add(ci) };
+        tile(0, m, c0, c1, t.as_mut_slice());
     });
-    for (c0, c1, t) in tiles {
+    for (ci, t) in tiles.iter().enumerate() {
+        let c0 = ci * chunk;
+        let c1 = (c0 + chunk).min(n);
         let w = c1 - c0;
         for i in 0..m {
             out[i * n + c0..i * n + c1].copy_from_slice(&t[i * w..(i + 1) * w]);
@@ -190,15 +118,22 @@ where
     out
 }
 
-/// C = A·B with `threads` workers (0 = all cores). Element-identical to
-/// `Tensor::matmul` at any thread count.
+/// C = A·B with `threads` workers (0 = all cores) under the
+/// process-selected kernel. Element-identical to `Tensor::matmul` at any
+/// thread count and under any kernel.
 pub fn matmul_threaded(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    matmul_threaded_with(simd::active(), a, b, threads)
+}
+
+/// [`matmul_threaded`] with the kernel pinned explicitly (tests/benches
+/// comparing scalar vs SIMD in one process).
+pub fn matmul_threaded_with(kernel: Kernel, a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul_threaded {:?} @ {:?}", a.shape(), b.shape());
     let threads = resolve_threads(threads);
     let out = run_partitioned(m, n, m * n * k, threads, |i0, i1, j0, j1, dst| {
-        f32_tile(a, b, i0, i1, j0, j1, dst);
+        simd::f32_tile(kernel, a, b, i0, i1, j0, j1, dst);
     });
     Tensor::from_raw(vec![m, n], out)
 }
@@ -206,12 +141,22 @@ pub fn matmul_threaded(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
 /// C = A·dequant(W) with dequantization fused into the inner loop —
 /// the packed weight is never materialized as f32.
 pub fn matmul_packed(a: &Tensor, w: &RepackedWeight, threads: usize) -> Tensor {
+    matmul_packed_with(simd::active(), a, w, threads)
+}
+
+/// [`matmul_packed`] with the kernel pinned explicitly.
+pub fn matmul_packed_with(
+    kernel: Kernel,
+    a: &Tensor,
+    w: &RepackedWeight,
+    threads: usize,
+) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     assert_eq!(k, w.rows, "matmul_packed {:?} @ [{}, {}]", a.shape(), w.rows, w.cols);
     let threads = resolve_threads(threads);
     let n = w.cols;
     let out = run_partitioned(m, n, m * n * k, threads, |i0, i1, c0, c1, dst| {
-        packed_tile(a, w, i0, i1, c0, c1, dst);
+        simd::packed_tile(kernel, a, w, i0, i1, c0, c1, dst);
     });
     Tensor::from_raw(vec![m, n], out)
 }
@@ -225,7 +170,7 @@ pub fn givens_rotate_rows(x: &mut Tensor, chain: &GivensChain, threads: usize) {
         return;
     }
     let threads = resolve_threads(threads).min(t);
-    // ~6 flops per rotation; below the parallel threshold spawn cost wins
+    // ~6 flops per rotation; below the parallel threshold dispatch wins
     if threads <= 1 || t * chain.len() * 6 < PAR_THRESHOLD_FLOPS {
         for i in 0..t {
             chain.apply_row(x.row_mut(i));
@@ -233,18 +178,18 @@ pub fn givens_rotate_rows(x: &mut Tensor, chain: &GivensChain, threads: usize) {
         return;
     }
     let chunk = t.div_ceil(threads);
+    let n_chunks = t.div_ceil(chunk);
     let data = x.data_mut();
-    std::thread::scope(|s| {
-        let mut rest: &mut [f32] = data;
-        while !rest.is_empty() {
-            let take = (chunk * n).min(rest.len());
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
-            rest = tail;
-            s.spawn(move || {
-                for row in head.chunks_mut(n) {
-                    chain.apply_row(row);
-                }
-            });
+    let base = SendPtr::new(data.as_mut_ptr());
+    pool::global().run(n_chunks, |ci| {
+        let lo = ci * chunk;
+        let hi = ((ci + 1) * chunk).min(t);
+        // SAFETY: chunks own disjoint row ranges of `data`, which
+        // outlives the job.
+        let rows =
+            unsafe { std::slice::from_raw_parts_mut(base.get().add(lo * n), (hi - lo) * n) };
+        for row in rows.chunks_mut(n) {
+            chain.apply_row(row);
         }
     });
 }
@@ -271,6 +216,21 @@ mod tests {
     }
 
     #[test]
+    fn threaded_matmul_is_bit_identical_under_every_kernel() {
+        let mut rng = Rng::new(7);
+        let a = Tensor::randn(&[6, 48], 1.0, &mut rng);
+        let b = Tensor::randn(&[48, 70], 1.0, &mut rng);
+        let reference = a.matmul(&b);
+        for kernel in [Kernel::Scalar, simd::best()] {
+            for threads in [1usize, 3, 8] {
+                let got = matmul_threaded_with(kernel, &a, &b, threads);
+                assert_eq!(got.data(), reference.data(),
+                           "kernel={} threads={threads}", kernel.label());
+            }
+        }
+    }
+
+    #[test]
     fn packed_matmul_matches_dequantized_reference() {
         let mut rng = Rng::new(2);
         for bits in [2u32, 3, 4, 5, 8] {
@@ -279,10 +239,13 @@ mod tests {
             for group in [8usize, 37] {
                 let rw = RepackedWeight::pack(&w, bits, group).unwrap();
                 let reference = x.matmul(&rw.dequantize());
-                let got = matmul_packed(&x, &rw, 3);
-                for (a, b) in got.data().iter().zip(reference.data()) {
-                    assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
-                            "bits={bits} group={group}: {a} vs {b}");
+                for kernel in [Kernel::Scalar, simd::best()] {
+                    let got = matmul_packed_with(kernel, &x, &rw, 3);
+                    for (a, b) in got.data().iter().zip(reference.data()) {
+                        assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                                "bits={bits} group={group} kernel={}: {a} vs {b}",
+                                kernel.label());
+                    }
                 }
             }
         }
@@ -290,13 +253,18 @@ mod tests {
 
     #[test]
     fn packed_matmul_is_thread_count_invariant() {
+        // 3*48*128 multiply-adds clears PAR_THRESHOLD_FLOPS, so thread
+        // counts > 1 genuinely hit the column-partitioned pool path
         let mut rng = Rng::new(3);
-        let w = Tensor::randn(&[64, 24], 0.5, &mut rng);
-        let x = Tensor::randn(&[3, 64], 1.0, &mut rng);
+        let w = Tensor::randn(&[128, 48], 0.5, &mut rng);
+        let x = Tensor::randn(&[3, 128], 1.0, &mut rng);
         let rw = RepackedWeight::pack(&w, 4, 16).unwrap();
-        let one = matmul_packed(&x, &rw, 1);
-        for threads in [2usize, 4, 8] {
-            assert_eq!(matmul_packed(&x, &rw, threads).data(), one.data());
+        for kernel in [Kernel::Scalar, simd::best()] {
+            let one = matmul_packed_with(kernel, &x, &rw, 1);
+            for threads in [2usize, 4, 8] {
+                assert_eq!(matmul_packed_with(kernel, &x, &rw, threads).data(), one.data(),
+                           "kernel={} threads={threads}", kernel.label());
+            }
         }
     }
 
@@ -311,5 +279,18 @@ mod tests {
             givens_rotate_rows(&mut got, &chain, threads);
             assert!(got.sub(&dense).max_abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn givens_parallel_path_matches_serial() {
+        // big enough to clear PAR_THRESHOLD_FLOPS and hit the pool
+        let mut rng = Rng::new(5);
+        let chain = map_to_e1(&rng.normal_vec(64, 1.0));
+        let x = Tensor::randn(&[128, 64], 1.0, &mut rng);
+        let mut serial = x.clone();
+        givens_rotate_rows(&mut serial, &chain, 1);
+        let mut par = x.clone();
+        givens_rotate_rows(&mut par, &chain, 8);
+        assert_eq!(par.data(), serial.data());
     }
 }

@@ -7,6 +7,8 @@
 
 pub mod decomp;
 pub mod kernels;
+pub mod pool;
+pub mod simd;
 pub mod stats;
 
 use anyhow::{bail, Result};

@@ -1,0 +1,363 @@
+//! Persistent worker pool for the CPU kernels.
+//!
+//! The old kernels paid `std::thread::scope` spawn/join on every matmul,
+//! which priced small decode matmuls out of parallelism entirely. This
+//! pool spawns its workers once (process lifetime), parks them on a
+//! condvar, and broadcasts each call as a job of `chunks` independent
+//! work items that workers claim with an atomic cursor. The caller
+//! participates as a worker too, then blocks until the last chunk
+//! completes — so [`WorkerPool::run`] has exactly the structured
+//! semantics of a scoped spawn (borrowed closures are safe) at a few
+//! microseconds of dispatch cost.
+//!
+//! Determinism: chunk→worker assignment is racy, but every chunk is a
+//! self-contained computation writing its own output region, so which
+//! worker runs it never changes the numbers. Nested `run` calls (a
+//! matmul issued from inside a decode-wave chunk) execute their chunks
+//! inline on the calling worker rather than re-entering the dispatcher,
+//! which keeps the pool deadlock-free without a job queue.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use super::kernels::resolve_threads;
+
+/// Raw-pointer wrapper that is `Send + Sync`, for handing chunks write
+/// access to disjoint regions of one caller-owned buffer. The caller
+/// must guarantee chunk regions never overlap and the buffer outlives
+/// the `run` call (it does: `run` blocks until every chunk finishes).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+// SAFETY: a SendPtr is only a capability to form disjoint &mut regions
+// inside pool chunks; the caller upholds disjointness (see struct docs).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// One broadcast job. Lives on the heap (`Arc`) so late worker accesses
+/// to the claim/completion counters stay valid even after the posting
+/// caller has returned — the caller's stack data behind `data` is only
+/// dereferenced while executing a claimed chunk, and all chunks are
+/// provably finished once `done == chunks`.
+struct Job {
+    run: unsafe fn(*const (), usize),
+    data: *const (),
+    chunks: usize,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+// SAFETY: `data` points at a `Sync` closure that outlives every chunk
+// execution (the posting thread blocks in `run` until `done == chunks`),
+// and the counters are atomics.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+/// Monomorphized trampoline erasing the closure type behind a fn
+/// pointer, so `Job` needs no generics or allocation per closure.
+unsafe fn shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i)
+}
+
+#[derive(Default)]
+struct Post {
+    job: Option<Arc<Job>>,
+    /// Bumped per posted job; workers remember the last epoch they saw
+    /// so each job is picked up exactly once per worker.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    post: Mutex<Post>,
+    /// Wakes parked workers when a job is posted (or shutdown).
+    work: Condvar,
+    /// Wakes the posting caller when the last chunk finishes.
+    done: Condvar,
+    /// Chunks of the in-flight job not yet finished (metrics gauge;
+    /// racy across concurrent posters, which a gauge tolerates).
+    depth: AtomicUsize,
+    /// Lifetime jobs dispatched.
+    jobs: AtomicUsize,
+}
+
+thread_local! {
+    /// True while this thread is executing pool chunks. Nested `run`
+    /// calls run inline instead of re-entering the dispatcher.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Worker threads + the participating caller.
+    lanes: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `lanes` compute lanes total: `lanes - 1` parked
+    /// worker threads plus the caller, which always participates.
+    pub fn new(lanes: usize) -> WorkerPool {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(Shared {
+            post: Mutex::new(Post::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            depth: AtomicUsize::new(0),
+            jobs: AtomicUsize::new(0),
+        });
+        let handles = (1..lanes)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sq-pool-{i}"))
+                    .spawn(move || worker(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, lanes, handles }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Unfinished chunks of the in-flight job (0 when idle).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.depth.load(Ordering::Relaxed)
+    }
+
+    /// Jobs dispatched over the pool's lifetime.
+    pub fn jobs_dispatched(&self) -> usize {
+        self.shared.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Run `f(0), f(1), …, f(chunks - 1)` across the pool and block
+    /// until all complete. Panics if any chunk panicked (workers
+    /// survive). Single-chunk jobs, nested calls, and worker-less pools
+    /// execute inline — same results either way, since chunk dispatch
+    /// never affects what a chunk computes.
+    pub fn run<F: Fn(usize) + Sync>(&self, chunks: usize, f: F) {
+        if chunks == 0 {
+            return;
+        }
+        // note: the single-chunk inline path does NOT mark IN_POOL, so a
+        // one-slot decode wave still lets its inner matmuls parallelize
+        if chunks == 1 || self.handles.is_empty() || IN_POOL.with(|c| c.get()) {
+            for i in 0..chunks {
+                f(i);
+            }
+            return;
+        }
+        let job = Arc::new(Job {
+            run: shim::<F>,
+            data: &f as *const F as *const (),
+            chunks,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        self.shared.depth.store(chunks, Ordering::Relaxed);
+        self.shared.jobs.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut post = self.shared.post.lock().unwrap();
+            post.epoch += 1;
+            post.job = Some(Arc::clone(&job));
+            self.shared.work.notify_all();
+        }
+        // the caller is the nth lane; chunks it claims run here
+        IN_POOL.with(|c| c.set(true));
+        work_chunks(&job, &self.shared);
+        IN_POOL.with(|c| c.set(false));
+        let mut post = self.shared.post.lock().unwrap();
+        while job.done.load(Ordering::SeqCst) < job.chunks {
+            post = self.shared.done.wait(post).unwrap();
+        }
+        // drop the broadcast slot's Arc; in-flight workers own clones
+        if post.job.as_ref().is_some_and(|j| Arc::ptr_eq(j, &job)) {
+            post.job = None;
+        }
+        drop(post);
+        if job.panicked.load(Ordering::SeqCst) {
+            panic!("worker pool job panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut post = self.shared.post.lock().unwrap();
+            post.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim and execute chunks until the job is exhausted.
+fn work_chunks(job: &Job, shared: &Shared) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.chunks {
+            return;
+        }
+        // SAFETY: `data` outlives every chunk execution (see Job docs).
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (job.run)(job.data, i) })).is_ok();
+        if !ok {
+            job.panicked.store(true, Ordering::SeqCst);
+        }
+        let _ = shared
+            .depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| d.checked_sub(1));
+        if job.done.fetch_add(1, Ordering::SeqCst) + 1 == job.chunks {
+            // lock before notifying so the caller can't check-then-sleep
+            // between our counter bump and this wakeup
+            let _post = shared.post.lock().unwrap();
+            shared.done.notify_all();
+        }
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut post = shared.post.lock().unwrap();
+            loop {
+                if post.shutdown {
+                    return;
+                }
+                if post.epoch != seen {
+                    seen = post.epoch;
+                    break post.job.clone();
+                }
+                post = shared.work.wait(post).unwrap();
+            }
+        };
+        if let Some(job) = job {
+            work_chunks(&job, &shared);
+        }
+    }
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool, sized to the machine once on first use.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::new(resolve_threads(0)))
+}
+
+/// Queue depth of the global pool without forcing it into existence
+/// (metrics can scrape before the first matmul).
+pub fn global_queue_depth() -> usize {
+    GLOBAL.get().map_or(0, |p| p.queue_depth())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert_eq!(pool.queue_depth(), 0);
+        assert_eq!(pool.jobs_dispatched(), 1);
+    }
+
+    #[test]
+    fn sums_match_serial() {
+        let pool = WorkerPool::new(3);
+        let n = 1000usize;
+        let total = AtomicUsize::new(0);
+        pool.run(n, |i| {
+            total.fetch_add(i + 1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), n * (n + 1) / 2);
+    }
+
+    #[test]
+    fn nested_runs_execute_inline_without_deadlock() {
+        let pool = WorkerPool::new(4);
+        let inner_hits = AtomicUsize::new(0);
+        pool.run(8, |_outer| {
+            pool.run(5, |_inner| {
+                inner_hits.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(inner_hits.load(Ordering::SeqCst), 8 * 5);
+    }
+
+    #[test]
+    fn survives_a_panicking_job() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, |i| {
+                if i == 2 {
+                    panic!("chunk bombed");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // pool still functions afterwards
+        let ok = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn concurrent_callers_both_complete() {
+        let pool = WorkerPool::new(4);
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..20 {
+                    pool.run(16, |_| {
+                        a.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..20 {
+                    pool.run(16, |_| {
+                        b.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        });
+        assert_eq!(a.load(Ordering::SeqCst), 20 * 16);
+        assert_eq!(b.load(Ordering::SeqCst), 20 * 16);
+    }
+
+    #[test]
+    fn global_depth_is_zero_when_idle() {
+        assert_eq!(global_queue_depth(), 0);
+        global().run(4, |_| {});
+        assert_eq!(global_queue_depth(), 0);
+    }
+}

@@ -1,0 +1,617 @@
+//! Runtime-selected SIMD microkernels for the dense and packed tiles.
+//!
+//! One [`Kernel`] is latched per process ([`active`]) and every matmul
+//! dispatches through it: AVX2 on x86_64, NEON on aarch64, the scalar
+//! code (the exact loops the repo shipped with) everywhere else and as
+//! the forced fallback (`--kernel scalar` / `SQ_KERNEL=scalar`).
+//!
+//! Determinism contract, in two parts:
+//!
+//! * **Dense path is bit-identical to `Tensor::matmul`.** The reference
+//!   accumulates ikj with a zero-skip (`*d += av * bv`). The vector
+//!   version keeps that exact per-element operation sequence — it only
+//!   vectorizes across output columns `j`, which are independent
+//!   accumulators, and it never uses FMA (separate multiply and add,
+//!   same IEEE ops as scalar). So every existing bit-identity test holds
+//!   under SIMD, and results are invariant to both kernel and thread
+//!   count.
+//! * **Packed path is deterministic and thread-invariant, within the
+//!   1e-4 dequant-reference tolerance.** Each quant group accumulates
+//!   as `hsum(vector lanes) + scalar head/tail`, where the horizontal
+//!   sum is a fixed pairwise tree — the same reduction order on every
+//!   call. Different from the pure-scalar order (hence tolerance vs the
+//!   dequantized reference, not bit-equality), but identical run-to-run
+//!   and across thread counts, because threading partitions output
+//!   elements, never the k-dimension.
+//!
+//! Packed decode does 8 codes per step: int≤4 columns store two codes
+//! per byte, so one little-endian u32 load at an even code offset holds
+//! lanes `0..8` as nibbles `(word >> 4*lane) & 0xF` ([`RepackedWeight`]
+//! pads every column stride to 8 bytes so full-width loads are always
+//! in-bounds). int5–8 columns sign-extend 8 bytes per step.
+
+use std::sync::OnceLock;
+
+use crate::quant::repack::RepackedWeight;
+use crate::tensor::Tensor;
+
+/// Output-column tile width for the dense kernel: one f32 C tile (and
+/// the matching B panel stripe) stays L1-resident while k streams.
+pub(crate) const NC: usize = 128;
+
+/// A selected microkernel implementation.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kernel {
+    /// Portable reference loops — the universal fallback.
+    Scalar,
+    /// 8-lane AVX2 (x86_64, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 4×2-lane NEON (aarch64, runtime-detected).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Kernel {
+    pub fn label(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+/// Best kernel this machine supports (runtime feature detection).
+pub fn best() -> Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Kernel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Kernel::Neon;
+        }
+    }
+    Kernel::Scalar
+}
+
+static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+
+/// The process-wide kernel, latched on first use. `SQ_KERNEL=scalar`
+/// forces the fallback (how the CI matrix leg pins `cargo test` without
+/// CLI plumbing); any other value autodetects.
+pub fn active() -> Kernel {
+    *ACTIVE.get_or_init(|| match std::env::var("SQ_KERNEL").as_deref() {
+        Ok("scalar") => Kernel::Scalar,
+        _ => best(),
+    })
+}
+
+/// Pin the kernel by name (the `--kernel` flag). Returns the kernel
+/// actually in effect — an earlier selection wins because dispatch
+/// latches once per process.
+pub fn force(name: &str) -> anyhow::Result<Kernel> {
+    let want = match name {
+        "scalar" => Kernel::Scalar,
+        "simd" | "auto" => best(),
+        other => anyhow::bail!("unknown kernel {other:?} (expected scalar|simd)"),
+    };
+    Ok(*ACTIVE.get_or_init(|| want))
+}
+
+/// Dense f32 tile: rows `i0..i1` × cols `j0..j1` of A·B into `out`
+/// (row-major `[(i1-i0), (j1-j0)]`), bit-identical to `Tensor::matmul`
+/// under every kernel.
+pub(crate) fn f32_tile(
+    kernel: Kernel,
+    a: &Tensor,
+    b: &Tensor,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    match kernel {
+        Kernel::Scalar => scalar::f32_tile(a, b, i0, i1, j0, j1, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Kernel::Avx2 is only constructed after runtime detection.
+        Kernel::Avx2 => unsafe { avx2::f32_tile(a, b, i0, i1, j0, j1, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Kernel::Neon is only constructed after runtime detection.
+        Kernel::Neon => unsafe { neon::f32_tile(a, b, i0, i1, j0, j1, out) },
+    }
+}
+
+/// Packed tile: rows `i0..i1` × cols `c0..c1` of A·dequant(W) with the
+/// dequantization fused into the k-loop.
+pub(crate) fn packed_tile(
+    kernel: Kernel,
+    a: &Tensor,
+    w: &RepackedWeight,
+    i0: usize,
+    i1: usize,
+    c0: usize,
+    c1: usize,
+    out: &mut [f32],
+) {
+    match kernel {
+        Kernel::Scalar => scalar::packed_tile(a, w, i0, i1, c0, c1, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Kernel::Avx2 is only constructed after runtime detection.
+        Kernel::Avx2 => unsafe { avx2::packed_tile(a, w, i0, i1, c0, c1, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Kernel::Neon is only constructed after runtime detection.
+        Kernel::Neon => unsafe { neon::packed_tile(a, w, i0, i1, c0, c1, out) },
+    }
+}
+
+/// The portable reference loops — also the semantics contract the
+/// vector paths are tested against.
+mod scalar {
+    use super::{RepackedWeight, Tensor, NC};
+
+    pub fn f32_tile(
+        a: &Tensor,
+        b: &Tensor,
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        out: &mut [f32],
+    ) {
+        let w = j1 - j0;
+        for i in i0..i1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
+            let mut t0 = j0;
+            while t0 < j1 {
+                let t1 = (t0 + NC).min(j1);
+                let dst = &mut orow[t0 - j0..t1 - j0];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(kk)[t0..t1];
+                    for (d, &bv) in dst.iter_mut().zip(brow) {
+                        *d += av * bv;
+                    }
+                }
+                t0 = t1;
+            }
+        }
+    }
+
+    pub fn packed_tile(
+        a: &Tensor,
+        w: &RepackedWeight,
+        i0: usize,
+        i1: usize,
+        c0: usize,
+        c1: usize,
+        out: &mut [f32],
+    ) {
+        let width = c1 - c0;
+        let k = w.rows;
+        let group = w.group;
+        let off = w.nibble_offset();
+        let nibble = w.bits <= 4;
+        for i in i0..i1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - i0) * width..(i - i0 + 1) * width];
+            for c in c0..c1 {
+                let codes = w.col_codes(c);
+                let scales = w.col_scales(c);
+                let mut total = 0.0f32;
+                let mut k0 = 0usize;
+                let mut g = 0usize;
+                while k0 < k {
+                    let k1 = (k0 + group).min(k);
+                    let mut acc = 0.0f32;
+                    if nibble {
+                        let mut kk = k0;
+                        if kk % 2 == 1 && kk < k1 {
+                            let u = codes[kk / 2] >> 4;
+                            acc += arow[kk] * (u as i32 - off) as f32;
+                            kk += 1;
+                        }
+                        while kk + 1 < k1 {
+                            let byte = codes[kk / 2];
+                            acc += arow[kk] * ((byte & 0x0F) as i32 - off) as f32;
+                            acc += arow[kk + 1] * ((byte >> 4) as i32 - off) as f32;
+                            kk += 2;
+                        }
+                        if kk < k1 {
+                            let byte = codes[kk / 2];
+                            let u = if kk % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                            acc += arow[kk] * (u as i32 - off) as f32;
+                        }
+                    } else {
+                        for (kk, &byte) in codes.iter().enumerate().take(k1).skip(k0) {
+                            acc += arow[kk] * (byte as i8 as f32);
+                        }
+                    }
+                    total += acc * scales[g];
+                    g += 1;
+                    k0 = k1;
+                }
+                orow[c - c0] = total;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{RepackedWeight, Tensor, NC};
+    use std::arch::x86_64::*;
+
+    /// Fixed pairwise reduction tree: (l0+l4)+(l2+l6) + ((l1+l5)+(l3+l7))
+    /// — the same order on every call, so group sums are deterministic.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum8(v: __m256) -> f32 {
+        let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Vectorized across output columns `j` only: each column keeps its
+    /// own accumulator performing the identical `mul` then `add` the
+    /// scalar loop does (no FMA), so results are bit-equal to scalar.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn f32_tile(
+        a: &Tensor,
+        b: &Tensor,
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        out: &mut [f32],
+    ) {
+        let w = j1 - j0;
+        for i in i0..i1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
+            let mut t0 = j0;
+            while t0 < j1 {
+                let t1 = (t0 + NC).min(j1);
+                let dst = &mut orow[t0 - j0..t1 - j0];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(kk)[t0..t1];
+                    let va = _mm256_set1_ps(av);
+                    let mut j = 0usize;
+                    while j + 8 <= dst.len() {
+                        let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+                        let bb = _mm256_loadu_ps(brow.as_ptr().add(j));
+                        let p = _mm256_mul_ps(va, bb);
+                        _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_add_ps(d, p));
+                        j += 8;
+                    }
+                    while j < dst.len() {
+                        dst[j] += av * brow[j];
+                        j += 1;
+                    }
+                }
+                t0 = t1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn packed_tile(
+        a: &Tensor,
+        w: &RepackedWeight,
+        i0: usize,
+        i1: usize,
+        c0: usize,
+        c1: usize,
+        out: &mut [f32],
+    ) {
+        let width = c1 - c0;
+        let k = w.rows;
+        let group = w.group;
+        let off = w.nibble_offset();
+        let nibble = w.bits <= 4;
+        let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let mask = _mm256_set1_epi32(0x0F);
+        let voff = _mm256_set1_epi32(off);
+        for i in i0..i1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - i0) * width..(i - i0 + 1) * width];
+            for c in c0..c1 {
+                let codes = w.col_codes(c);
+                let scales = w.col_scales(c);
+                let mut total = 0.0f32;
+                let mut k0 = 0usize;
+                let mut g = 0usize;
+                while k0 < k {
+                    let k1 = (k0 + group).min(k);
+                    let mut acc = 0.0f32;
+                    let mut vacc = _mm256_setzero_ps();
+                    let mut kk = k0;
+                    if nibble {
+                        if kk % 2 == 1 && kk < k1 {
+                            // align to an even code so u32 loads start on a byte
+                            let u = codes[kk / 2] >> 4;
+                            acc += arow[kk] * (u as i32 - off) as f32;
+                            kk += 1;
+                        }
+                        while kk + 8 <= k1 {
+                            // 4 bytes at code offset kk (even) = 8 nibble lanes
+                            let word =
+                                u32::from_le_bytes(codes[kk / 2..kk / 2 + 4].try_into().unwrap());
+                            let q = _mm256_and_si256(
+                                _mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts),
+                                mask,
+                            );
+                            let qf = _mm256_cvtepi32_ps(_mm256_sub_epi32(q, voff));
+                            let av = _mm256_loadu_ps(arow.as_ptr().add(kk));
+                            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(av, qf));
+                            kk += 8;
+                        }
+                        while kk < k1 {
+                            let byte = codes[kk / 2];
+                            let u = if kk % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                            acc += arow[kk] * (u as i32 - off) as f32;
+                            kk += 1;
+                        }
+                    } else {
+                        while kk + 8 <= k1 {
+                            let bytes = _mm_loadl_epi64(codes.as_ptr().add(kk) as *const __m128i);
+                            let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
+                            let av = _mm256_loadu_ps(arow.as_ptr().add(kk));
+                            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(av, qf));
+                            kk += 8;
+                        }
+                        while kk < k1 {
+                            acc += arow[kk] * (codes[kk] as i8 as f32);
+                            kk += 1;
+                        }
+                    }
+                    total += (hsum8(vacc) + acc) * scales[g];
+                    g += 1;
+                    k0 = k1;
+                }
+                orow[c - c0] = total;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{RepackedWeight, Tensor, NC};
+    use std::arch::aarch64::*;
+
+    /// Fixed pairwise tree over two 4-lane accumulators — deterministic
+    /// reduction order, mirroring the AVX2 path.
+    #[target_feature(enable = "neon")]
+    unsafe fn hsum8(lo: float32x4_t, hi: float32x4_t) -> f32 {
+        let s = vaddq_f32(lo, hi);
+        let p = vadd_f32(vget_low_f32(s), vget_high_f32(s));
+        vget_lane_f32::<0>(vpadd_f32(p, p))
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn f32_tile(
+        a: &Tensor,
+        b: &Tensor,
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        out: &mut [f32],
+    ) {
+        let w = j1 - j0;
+        for i in i0..i1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
+            let mut t0 = j0;
+            while t0 < j1 {
+                let t1 = (t0 + NC).min(j1);
+                let dst = &mut orow[t0 - j0..t1 - j0];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(kk)[t0..t1];
+                    let va = vdupq_n_f32(av);
+                    let mut j = 0usize;
+                    while j + 4 <= dst.len() {
+                        let d = vld1q_f32(dst.as_ptr().add(j));
+                        let bb = vld1q_f32(brow.as_ptr().add(j));
+                        // separate mul + add (no vfmaq): bit-equal to scalar
+                        vst1q_f32(dst.as_mut_ptr().add(j), vaddq_f32(d, vmulq_f32(va, bb)));
+                        j += 4;
+                    }
+                    while j < dst.len() {
+                        dst[j] += av * brow[j];
+                        j += 1;
+                    }
+                }
+                t0 = t1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn packed_tile(
+        a: &Tensor,
+        w: &RepackedWeight,
+        i0: usize,
+        i1: usize,
+        c0: usize,
+        c1: usize,
+        out: &mut [f32],
+    ) {
+        let width = c1 - c0;
+        let k = w.rows;
+        let group = w.group;
+        let off = w.nibble_offset();
+        let nibble = w.bits <= 4;
+        // vshlq by a negative count is a right shift
+        let sh_lo = vld1q_s32([0i32, -4, -8, -12].as_ptr());
+        let sh_hi = vld1q_s32([-16i32, -20, -24, -28].as_ptr());
+        let mask = vdupq_n_u32(0x0F);
+        let voff = vdupq_n_s32(off);
+        for i in i0..i1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - i0) * width..(i - i0 + 1) * width];
+            for c in c0..c1 {
+                let codes = w.col_codes(c);
+                let scales = w.col_scales(c);
+                let mut total = 0.0f32;
+                let mut k0 = 0usize;
+                let mut g = 0usize;
+                while k0 < k {
+                    let k1 = (k0 + group).min(k);
+                    let mut acc = 0.0f32;
+                    let mut acc_lo = vdupq_n_f32(0.0);
+                    let mut acc_hi = vdupq_n_f32(0.0);
+                    let mut kk = k0;
+                    if nibble {
+                        if kk % 2 == 1 && kk < k1 {
+                            let u = codes[kk / 2] >> 4;
+                            acc += arow[kk] * (u as i32 - off) as f32;
+                            kk += 1;
+                        }
+                        while kk + 8 <= k1 {
+                            let word =
+                                u32::from_le_bytes(codes[kk / 2..kk / 2 + 4].try_into().unwrap());
+                            let vw = vdupq_n_u32(word);
+                            let lo = vandq_u32(vshlq_u32(vw, sh_lo), mask);
+                            let hi = vandq_u32(vshlq_u32(vw, sh_hi), mask);
+                            let qlo = vcvtq_f32_s32(vsubq_s32(vreinterpretq_s32_u32(lo), voff));
+                            let qhi = vcvtq_f32_s32(vsubq_s32(vreinterpretq_s32_u32(hi), voff));
+                            let a_lo = vld1q_f32(arow.as_ptr().add(kk));
+                            let a_hi = vld1q_f32(arow.as_ptr().add(kk + 4));
+                            acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, qlo));
+                            acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, qhi));
+                            kk += 8;
+                        }
+                        while kk < k1 {
+                            let byte = codes[kk / 2];
+                            let u = if kk % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                            acc += arow[kk] * (u as i32 - off) as f32;
+                            kk += 1;
+                        }
+                    } else {
+                        while kk + 8 <= k1 {
+                            let b8 = vld1_s8(codes.as_ptr().add(kk) as *const i8);
+                            let w16 = vmovl_s8(b8);
+                            let qlo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16)));
+                            let qhi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16)));
+                            let a_lo = vld1q_f32(arow.as_ptr().add(kk));
+                            let a_hi = vld1q_f32(arow.as_ptr().add(kk + 4));
+                            acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, qlo));
+                            acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, qhi));
+                            kk += 8;
+                        }
+                        while kk < k1 {
+                            acc += arow[kk] * (codes[kk] as i8 as f32);
+                            kk += 1;
+                        }
+                    }
+                    total += (hsum8(acc_lo, acc_hi) + acc) * scales[g];
+                    g += 1;
+                    k0 = k1;
+                }
+                orow[c - c0] = total;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tile_full_f32(kernel: Kernel, a: &Tensor, b: &Tensor) -> Vec<f32> {
+        let mut out = vec![0.0f32; a.rows() * b.cols()];
+        f32_tile(kernel, a, b, 0, a.rows(), 0, b.cols(), &mut out);
+        out
+    }
+
+    fn tile_full_packed(kernel: Kernel, a: &Tensor, w: &RepackedWeight) -> Vec<f32> {
+        let mut out = vec![0.0f32; a.rows() * w.cols];
+        packed_tile(kernel, a, w, 0, a.rows(), 0, w.cols, &mut out);
+        out
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Kernel::Scalar.label(), "scalar");
+        assert!(["scalar", "avx2", "neon"].contains(&best().label()));
+        assert!(["scalar", "avx2", "neon"].contains(&active().label()));
+    }
+
+    #[test]
+    fn dense_simd_is_bit_identical_to_scalar() {
+        let kern = best();
+        let mut rng = Rng::new(11);
+        // odd shapes exercise the vector tails; 0.0-heavy A exercises
+        // the zero-skip both paths share
+        for (m, k, n) in [(1usize, 17usize, 23usize), (3, 64, 130), (5, 33, 8)] {
+            let mut a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            for (idx, v) in a.data_mut().iter_mut().enumerate() {
+                if idx % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            assert_eq!(
+                tile_full_f32(kern, &a, &b),
+                tile_full_f32(Kernel::Scalar, &a, &b),
+                "m={m} k={k} n={n} kernel={}",
+                kern.label()
+            );
+        }
+    }
+
+    #[test]
+    fn packed_simd_matches_scalar_within_tolerance() {
+        let kern = best();
+        let mut rng = Rng::new(12);
+        // spans: nibble + byte layouts, odd k (head/tail lanes), odd groups
+        for bits in [2u32, 4, 5, 8] {
+            for (k, group) in [(37usize, 8usize), (64, 16), (51, 51), (9, 3)] {
+                let w = Tensor::randn(&[k, 13], 0.7, &mut rng);
+                let x = Tensor::randn(&[2, k], 1.0, &mut rng);
+                let rw = RepackedWeight::pack(&w, bits, group).unwrap();
+                let simd = tile_full_packed(kern, &x, &rw);
+                let scalar = tile_full_packed(Kernel::Scalar, &x, &rw);
+                for (a, b) in simd.iter().zip(&scalar) {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                        "bits={bits} k={k} group={group} kernel={}: {a} vs {b}",
+                        kern.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_simd_is_deterministic_across_calls() {
+        let kern = best();
+        let mut rng = Rng::new(13);
+        let w = Tensor::randn(&[40, 6], 0.5, &mut rng);
+        let x = Tensor::randn(&[1, 40], 1.0, &mut rng);
+        let rw = RepackedWeight::pack(&w, 4, 16).unwrap();
+        let first = tile_full_packed(kern, &x, &rw);
+        for _ in 0..3 {
+            assert_eq!(tile_full_packed(kern, &x, &rw), first);
+        }
+    }
+}

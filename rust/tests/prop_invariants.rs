@@ -14,8 +14,11 @@ use singlequant::rotation::hadamard::{fwht_row, hadamard_matrix};
 use singlequant::rotation::kronecker::{kron_factor, kron_rotate_rows, kron_rotate_weight};
 use singlequant::rotation::singlequant::{build_site_rotation, SingleQuantConfig, SiteProfile};
 use singlequant::rotation::urt::{uniform_target, urt_rotation};
-use singlequant::tensor::kernels::{givens_rotate_rows, matmul_packed, matmul_threaded};
-use singlequant::tensor::{decomp, stats, Tensor};
+use singlequant::tensor::kernels::{
+    givens_rotate_rows, matmul_packed, matmul_packed_with, matmul_threaded,
+    matmul_threaded_with,
+};
+use singlequant::tensor::{decomp, simd, stats, Tensor};
 use singlequant::util::prop::{close, ensure, forall};
 use singlequant::util::rng::Rng;
 
@@ -396,6 +399,58 @@ fn prop_givens_chain_rows_match_dense_rotation() {
         let mut got = x.clone();
         givens_rotate_rows(&mut got, chain, *threads);
         close(got.data(), dense.data(), 1e-3)
+    });
+}
+
+#[test]
+fn prop_simd_packed_matmul_matches_scalar_kernel() {
+    // The ISSUE-7 microkernel contract: the best SIMD kernel agrees with
+    // the scalar kernel within the 1e-4 dequant tolerance on every packed
+    // shape, bit width, and scale-group layout. Trivially green on
+    // machines where best() == Scalar.
+    forall("simd-packed", 40, 0x5175, |rng| {
+        let bits = 2 + rng.below(7) as u32; // 2..=8
+        let k = 3 + rng.below(48);
+        let n = 1 + rng.below(24);
+        let m = 1 + rng.below(6);
+        let group = 1 + rng.below(k);
+        let w = Tensor::randn(&[k, n], 0.7, rng);
+        let x = Tensor::randn(&[m, k], 1.0, rng);
+        (bits, group, w, x, 1 + rng.below(4))
+    }, |(bits, group, w, x, threads)| {
+        let rw = RepackedWeight::pack(w, *bits, *group).map_err(|e| e.to_string())?;
+        let scalar = matmul_packed_with(simd::Kernel::Scalar, x, &rw, *threads);
+        let vector = matmul_packed_with(simd::best(), x, &rw, *threads);
+        for (i, (a, b)) in vector.data().iter().zip(scalar.data()).enumerate() {
+            ensure(
+                (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                format!("elem {i}: simd {a} vs scalar {b} (bits {bits} group {group})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_dense_matmul_is_bit_identical_to_scalar() {
+    // Dense tier of the determinism contract: kernel choice never changes
+    // a single bit of an f32 matmul.
+    forall("simd-dense", 30, 0x5176, |rng| {
+        let m = 1 + rng.below(12);
+        let k = 1 + rng.below(48);
+        let n = 1 + rng.below(48);
+        let mut a = Tensor::randn(&[m, k], 1.0, rng);
+        // exercise the kernels' zero-skip on a sparse stripe
+        for i in 0..a.len() / 7 {
+            a.data_mut()[i * 7] = 0.0;
+        }
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        (a, b, 1 + rng.below(6))
+    }, |(a, b, threads)| {
+        let scalar = matmul_threaded_with(simd::Kernel::Scalar, a, b, *threads);
+        let vector = matmul_threaded_with(simd::best(), a, b, *threads);
+        ensure(scalar.data() == vector.data(),
+               "dense matmul bits differ between kernels")
     });
 }
 
