@@ -22,6 +22,7 @@ use singlequant::model::{ModelConfig, NativeModel, Weights};
 use singlequant::pipeline::{quantize, Method, PipelineOptions, QuantizedModel};
 use singlequant::quant::repack::RepackedWeight;
 use singlequant::runtime::{Engine, ModelRunner, NativeBackend, RunnerBackend};
+use singlequant::spec::NgramDraft;
 use singlequant::tensor::kernels::{
     matmul_packed, matmul_packed_with, matmul_threaded, matmul_threaded_with,
 };
@@ -405,6 +406,56 @@ fn paged_kv_section(qm: &QuantizedModel, smoke: bool, report: &mut Vec<Json>) {
     }
 }
 
+/// Speculative decoding: decode tokens/sec and acceptance rate vs the
+/// proposal depth k, on the quantized demo model with the zero-weight
+/// n-gram draft. Prompts are periodic — the draft's best case — and
+/// k = 0 is the plain-decode baseline. Output equality across k is
+/// pinned by the unit suites; this section quantifies the throughput
+/// side of the accept/reject trade.
+fn spec_decode_section(qm: &QuantizedModel, smoke: bool, report: &mut Vec<Json>) {
+    let (n_requests, max_new) = if smoke { (6, 6) } else { (16, 24) };
+    for k in [0usize, 1, 2, 4, 8] {
+        let model = NativeModel::from_quantized(qm, 4, 0).expect("native model");
+        let mut serve = ServeEngine::new(
+            Box::new(NativeBackend::new(model, 4)),
+            ServeConfig { max_new_cap: max_new, seed: 5, queue_cap: 64 },
+        );
+        if k > 0 {
+            serve.enable_speculation(k, Box::new(NgramDraft::new(3)));
+        }
+        for id in 0..n_requests as u64 {
+            let base = 10 + (id as u16 % 7) * 5;
+            let prompt: Vec<u16> = (0..12).map(|j| base + j % 4).collect();
+            serve.submit(Request::new(id, prompt).with_max_new(max_new));
+        }
+        let t0 = std::time::Instant::now();
+        serve.run_to_completion().expect("spec bench run");
+        let wall = t0.elapsed().as_secs_f64();
+        let m = &serve.metrics;
+        println!(
+            "spec-decode/k={k}: {:.0} decode tok/s, acceptance {:.0}% \
+             ({} proposed), {:.2} tok/wave, {:.2}s wall",
+            m.decode_only_tokens_per_s(),
+            m.spec_acceptance_rate() * 100.0,
+            m.spec_proposed,
+            m.spec_wave_len.mean(),
+            wall,
+        );
+        report.push(Json::obj(vec![
+            ("name", Json::str(format!("spec-decode/k={k}"))),
+            ("kind", Json::str("spec_decode")),
+            ("k", Json::usize(k)),
+            ("draft", Json::str(if k == 0 { "none" } else { "ngram" })),
+            ("decode_tokens_per_s", Json::num(m.decode_only_tokens_per_s())),
+            ("acceptance_rate", Json::num(m.spec_acceptance_rate())),
+            ("proposed", Json::usize(m.spec_proposed as usize)),
+            ("accepted", Json::usize(m.spec_accepted as usize)),
+            ("mean_wave_len", Json::num(m.spec_wave_len.mean())),
+            ("wall_s", Json::num(wall)),
+        ]));
+    }
+}
+
 /// The artifact-gated PJRT section (Fig. 3 shapes).
 fn pjrt_section(dir: &str) {
     let engine = Arc::new(Engine::new(dir).expect("engine"));
@@ -490,6 +541,7 @@ fn main() {
     let qm = serving_section(budget, &mut report);
     wave_section(&qm, budget, &mut report);
     paged_kv_section(&qm, smoke, &mut report);
+    spec_decode_section(&qm, smoke, &mut report);
 
     let json = Json::obj(vec![
         ("bench", Json::str("inference")),

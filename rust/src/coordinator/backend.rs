@@ -97,6 +97,49 @@ pub trait ServeBackend: Send {
     fn kernel_label(&self) -> &'static str {
         "n/a"
     }
+
+    /// Speculative burst decode. `bursts[slot]` is `[pending_last_token,
+    /// draft_1..draft_k]` (empty = inactive slot) starting at
+    /// `positions[slot]`; the backend consumes the burst and returns that
+    /// slot's logits rows `[L', vocab]` — row `i` the next-token
+    /// distribution after the first `i + 1` burst tokens, bit-identical
+    /// to calling [`decode`] `i + 1` times with those tokens. `L'` may be
+    /// *less* than the submitted burst length: a backend under KV pool
+    /// pressure degrades a slot to `L' = 1` (a plain decode step, covered
+    /// by the batcher's pre-wave one-position reservation) instead of
+    /// erroring, so speculation never breaks the reserve/preempt
+    /// contract. The scheduler rolls rejected rows back with
+    /// [`kv_truncate`]. Only meaningful when [`supports_speculative`]
+    /// returns true; the default refuses.
+    ///
+    /// [`decode`]: ServeBackend::decode
+    /// [`kv_truncate`]: ServeBackend::kv_truncate
+    /// [`supports_speculative`]: ServeBackend::supports_speculative
+    fn decode_burst(
+        &mut self,
+        bursts: &[Vec<u16>],
+        positions: &[i32],
+    ) -> Result<Vec<Option<Tensor>>> {
+        let _ = (bursts, positions);
+        anyhow::bail!("backend has no speculative burst decode path")
+    }
+
+    /// Roll `slot`'s KV cache back to exactly `n` committed positions,
+    /// dropping rejected speculative rows (paged backends return the
+    /// freed pages to the pool). Only meaningful when
+    /// [`supports_speculative`] returns true.
+    ///
+    /// [`supports_speculative`]: ServeBackend::supports_speculative
+    fn kv_truncate(&mut self, _slot: usize, _n: usize) {}
+
+    /// Whether [`decode_burst`]/[`kv_truncate`] are implemented — the
+    /// gate for `ServeEngine::enable_speculation`.
+    ///
+    /// [`decode_burst`]: ServeBackend::decode_burst
+    /// [`kv_truncate`]: ServeBackend::kv_truncate
+    fn supports_speculative(&self) -> bool {
+        false
+    }
 }
 
 /// Deterministic model-free backend: the "token calculator".
@@ -139,6 +182,18 @@ impl SynthKvPool {
         self.pages_free += self.slot_pages[slot];
         self.slot_pages[slot] = 0;
         self.slot_pos[slot] = 0;
+    }
+
+    /// Roll `slot` back to `n` positions, returning whole pages past the
+    /// one holding position `n - 1` — same accounting as
+    /// `kv::PageTable::truncate`.
+    fn truncate(&mut self, slot: usize, n: usize) {
+        debug_assert!(n <= self.slot_pos[slot], "truncate beyond slot position");
+        let keep = n.div_ceil(self.page_tokens);
+        let dropped = self.slot_pages[slot].saturating_sub(keep);
+        self.slot_pages[slot] -= dropped;
+        self.pages_free += dropped;
+        self.slot_pos[slot] = n;
     }
 }
 
@@ -278,6 +333,57 @@ impl ServeBackend for SyntheticBackend {
             None => true,
         }
     }
+
+    fn decode_burst(
+        &mut self,
+        bursts: &[Vec<u16>],
+        positions: &[i32],
+    ) -> Result<Vec<Option<Tensor>>> {
+        let BackendLimits { batch, vocab_size: v, .. } = self.limits;
+        anyhow::ensure!(bursts.len() == batch && positions.len() == batch,
+                        "burst shape mismatch");
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let mut out = Vec::with_capacity(batch);
+        for slot in 0..batch {
+            if bursts[slot].is_empty() {
+                out.push(None);
+                continue;
+            }
+            // opportunistic burst reservation: degrade to a plain
+            // single-token step under pool pressure — the batcher's
+            // pre-wave reservation guarantees that one position
+            let mut l = bursts[slot].len();
+            if let Some(pool) = &mut self.pool {
+                if l > 1 && !pool.reserve(slot, l) {
+                    l = 1;
+                }
+                anyhow::ensure!(pool.reserve(slot, l),
+                                "burst decode without a KV reservation in slot {slot}");
+                pool.slot_pos[slot] += l;
+            }
+            // row i = the token that follows bursts[slot][i] — exactly
+            // what `decode` would return fed the same tokens one by one
+            let mut rows = Tensor::zeros(&[l, v]);
+            for (i, &tok) in bursts[slot][..l].iter().enumerate() {
+                let arg = Self::next_token(tok) as usize;
+                rows.data_mut()[i * v + arg] = 1.0;
+            }
+            out.push(Some(rows));
+        }
+        Ok(out)
+    }
+
+    fn kv_truncate(&mut self, slot: usize, n: usize) {
+        if let Some(pool) = &mut self.pool {
+            pool.truncate(slot, n);
+        }
+    }
+
+    fn supports_speculative(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
@@ -302,6 +408,43 @@ mod tests {
             .unwrap()
             .0;
         assert_eq!(arg as u16, SyntheticBackend::first_token(&prompt));
+    }
+
+    #[test]
+    fn burst_rows_match_sequential_decode() {
+        let mut be = SyntheticBackend::new(2).with_seq(8, 16);
+        let bursts = vec![vec![41u16, 42, 43], Vec::new()];
+        let out = be.decode_burst(&bursts, &[5, 0]).unwrap();
+        assert!(out[1].is_none(), "empty burst = inactive slot");
+        let rows = out[0].as_ref().unwrap();
+        let v = be.limits().vocab_size;
+        assert_eq!(rows.shape(), &[3, v]);
+        for (i, &tok) in bursts[0].iter().enumerate() {
+            let row = &rows.data()[i * v..(i + 1) * v];
+            let arg = row.iter().position(|&x| x == 1.0).unwrap();
+            assert_eq!(arg as u16, SyntheticBackend::next_token(tok),
+                       "row {i} must match one-at-a-time decode");
+        }
+    }
+
+    #[test]
+    fn burst_degrades_to_single_step_under_pool_pressure() {
+        let mut be = SyntheticBackend::new(1).with_seq(8, 16).with_kv_pool(2, 2);
+        // the prefill path: two prompt positions, then the batcher's
+        // pre-wave single-position reservation
+        assert!(be.kv_reserve(0, 2));
+        be.pool.as_mut().unwrap().slot_pos[0] = 2;
+        assert!(be.kv_reserve(0, 1));
+        // a 3-token burst would need a third page: degraded to one row
+        let out = be.decode_burst(&[vec![10, 11, 12]], &[2]).unwrap();
+        assert_eq!(out[0].as_ref().unwrap().shape()[0], 1,
+                   "pool pressure degrades the burst, never errors");
+        let p = be.pool.as_ref().unwrap();
+        assert_eq!((p.slot_pos[0], p.pages_free), (3, 0));
+        // speculative rollback returns whole freed pages to the pool
+        be.kv_truncate(0, 2);
+        let p = be.pool.as_ref().unwrap();
+        assert_eq!((p.slot_pos[0], p.pages_free), (2, 1));
     }
 
     #[test]

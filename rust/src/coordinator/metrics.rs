@@ -99,6 +99,18 @@ pub struct ServeMetrics {
     /// Unfinished chunks of the worker pool's in-flight job, sampled
     /// every scheduler tick (0 = pool idle or never started).
     pub pool_queue_depth: usize,
+    /// Draft model label when speculative decoding is enabled
+    /// ("ngram"/"native"; empty = speculation off).
+    pub spec_draft: String,
+    /// Draft tokens submitted to verification waves (excludes the
+    /// pending last token, which every wave decodes regardless).
+    pub spec_proposed: u64,
+    /// Draft tokens the verifier accepted (exact-prefix matches); the
+    /// ratio to `spec_proposed` is the acceptance rate.
+    pub spec_accepted: u64,
+    /// Tokens emitted per speculative wave (1 = no draft token
+    /// survived, k+1 = the whole burst was accepted).
+    pub spec_wave_len: Histogram,
 }
 
 impl ServeMetrics {
@@ -137,13 +149,34 @@ impl ServeMetrics {
         self.kv_pages_used as f64 / self.kv_pages_total as f64
     }
 
+    /// Fraction of proposed draft tokens the verifier accepted, in
+    /// [0, 1]; 0 before any speculative wave ran.
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_proposed as f64
+    }
+
     pub fn summary(&self) -> String {
+        let spec = if self.spec_draft.is_empty() {
+            String::new()
+        } else {
+            format!(
+                " spec[{}] proposed={} accepted={} rate={:.0}% wave_len p50={:.1}",
+                self.spec_draft,
+                self.spec_proposed,
+                self.spec_accepted,
+                self.spec_acceptance_rate() * 100.0,
+                self.spec_wave_len.percentile(50.0),
+            )
+        };
         format!(
             "completed={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
              decode_tput={:.1} tok/s prefill/decode split={:.0}%/{:.0}% \
              ttft p50={:.1}ms p95={:.1}ms latency p50={:.1}ms decode_step p50={:.2}ms \
              per_token p50={:.2}ms p95={:.2}ms rejected={} timeouts={} cancelled={} \
-             kv_pages={}/{} preemptions={} kv_rejected={} kernel={}",
+             kv_pages={}/{} preemptions={} kv_rejected={} kernel={}{}",
             self.completed,
             self.generated_tokens,
             self.wall_s,
@@ -165,6 +198,7 @@ impl ServeMetrics {
             self.preemptions,
             self.kv_rejected,
             if self.kernel_backend.is_empty() { "?" } else { &self.kernel_backend },
+            spec,
         )
     }
 
@@ -205,6 +239,12 @@ impl ServeMetrics {
         counter(&mut o, "singlequant_kv_admission_rejected_total",
                 "Requests refused because their worst-case KV demand exceeds \
                  the page pool (429).", self.kv_rejected as f64);
+        counter(&mut o, "singlequant_spec_proposed_total",
+                "Draft tokens submitted to speculative verification waves.",
+                self.spec_proposed as f64);
+        counter(&mut o, "singlequant_spec_accepted_total",
+                "Draft tokens the verifier accepted (exact-prefix matches).",
+                self.spec_accepted as f64);
 
         let gauge = |o: &mut String, name: &str, help: &str, v: f64| {
             let _ = writeln!(o, "# HELP {name} {help}");
@@ -222,6 +262,17 @@ impl ServeMetrics {
         gauge(&mut o, "singlequant_pool_queue_depth",
               "Unfinished chunks of the worker pool's in-flight job.",
               self.pool_queue_depth as f64);
+        gauge(&mut o, "singlequant_spec_acceptance_rate",
+              "Fraction of proposed draft tokens accepted by the verifier.",
+              self.spec_acceptance_rate());
+        if !self.spec_draft.is_empty() {
+            // info-style gauge: the label carries the draft model kind
+            let _ = writeln!(o, "# HELP singlequant_spec_draft \
+                                 Active speculative draft model (info gauge).");
+            let _ = writeln!(o, "# TYPE singlequant_spec_draft gauge");
+            let _ = writeln!(o, "singlequant_spec_draft{{draft=\"{}\"}} 1",
+                             self.spec_draft);
+        }
         if !self.kernel_backend.is_empty() {
             // info-style gauge: the label carries the selected path
             let _ = writeln!(o, "# HELP singlequant_kernel_backend \
@@ -252,6 +303,9 @@ impl ServeMetrics {
         quantiles(&mut o, "singlequant_decode_wave_seconds",
                   "Backend decode wave duration (one step across all \
                    active slots).", &self.decode_step);
+        quantiles(&mut o, "singlequant_spec_wave_len",
+                  "Tokens emitted per speculative wave (1 = no draft \
+                   token survived).", &self.spec_wave_len);
 
         counter(&mut o, "singlequant_prefill_seconds_total",
                 "Wall time inside backend prefill calls.", self.prefill_seconds);
@@ -360,6 +414,38 @@ mod tests {
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert_eq!(line.split_whitespace().count(), 2, "bad line {line:?}");
         }
+    }
+
+    #[test]
+    fn spec_metrics_exposition() {
+        let mut m = ServeMetrics::default();
+        // speculation off: counters still exported (always-present series
+        // are easier to alert on), info gauge and summary section absent
+        let off = m.prometheus();
+        assert!(off.contains("singlequant_spec_proposed_total 0"));
+        assert!(off.contains("singlequant_spec_acceptance_rate 0"));
+        assert!(!off.contains("singlequant_spec_draft{"));
+        assert!(!m.summary().contains("spec["));
+        assert_eq!(m.spec_acceptance_rate(), 0.0, "no division by zero");
+
+        m.spec_draft = "ngram".to_string();
+        m.spec_proposed = 8;
+        m.spec_accepted = 6;
+        m.spec_wave_len.record(4.0);
+        m.spec_wave_len.record(1.0);
+        assert!((m.spec_acceptance_rate() - 0.75).abs() < 1e-9);
+        let text = m.prometheus();
+        assert!(text.contains("singlequant_spec_proposed_total 8"));
+        assert!(text.contains("singlequant_spec_accepted_total 6"));
+        assert!(text.contains("singlequant_spec_acceptance_rate 0.75"));
+        assert!(text.contains("singlequant_spec_draft{draft=\"ngram\"} 1"));
+        assert!(text.contains("singlequant_spec_wave_len{quantile=\"0.5\"}"));
+        assert!(text.contains("singlequant_spec_wave_len_count 2"));
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line {line:?}");
+        }
+        let s = m.summary();
+        assert!(s.contains("spec[ngram] proposed=8 accepted=6 rate=75%"), "{s}");
     }
 
     #[test]

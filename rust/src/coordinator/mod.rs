@@ -18,9 +18,11 @@ pub mod batcher;
 pub mod events;
 pub mod metrics;
 pub mod request;
+pub mod sampler;
 pub mod tokenizer;
 
 pub use backend::{BackendLimits, ServeBackend, SyntheticBackend};
 pub use batcher::{AdmissionError, ServeConfig, ServeEngine};
 pub use events::{FinishReason, TokenEvent};
 pub use request::{Request, Response};
+pub use sampler::{sample, token_rng};

@@ -1,0 +1,181 @@
+//! Token sampling, factored out of the batcher so every decode path —
+//! the scheduler's prefill/decode ticks and the speculative-decode
+//! accept loop (`crate::spec`) — draws tokens through one function with
+//! one deterministic RNG scheme.
+//!
+//! The RNG is *positional*: [`token_rng`] derives an independent stream
+//! from `(engine seed, request id, token index)`, so the token sampled
+//! at index `i` of request `r` is a pure function of the logits row and
+//! those three values. Nothing depends on draw order, scheduler
+//! interleaving, or how many other requests were sampled first. That is
+//! what makes preemption replay exact for sampled requests (a requeued
+//! request re-samples index `i` with the same stream it would have used
+//! the first time) and what lets speculative decoding promise
+//! bit-identical output: the verifier samples the same indices from the
+//! same rows, so accepting a draft token is indistinguishable from
+//! having decoded it sequentially.
+
+use super::request::MIN_TEMPERATURE;
+use super::tokenizer::{BOS, EOS, PAD};
+use crate::util::rng::Rng;
+
+/// The RNG stream for one `(seed, request, token index)` coordinate.
+/// SplitMix64-style finalizing multiplies spread the three inputs over
+/// the whole seed space so adjacent indices and ids decorrelate; `Rng`
+/// then runs its own SplitMix init on top.
+pub fn token_rng(seed: u64, request_id: u64, token_index: usize) -> Rng {
+    let mut h = seed ^ 0x9e37_79b9_7f4a_7c15;
+    for x in [request_id, token_index as u64] {
+        h = (h ^ x.wrapping_mul(0xff51_afd7_ed55_8ccd).rotate_left(31))
+            .wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    }
+    Rng::new(h)
+}
+
+/// Sample a token id from one logits row. Greedy is NaN/−inf-proof:
+/// non-finite entries are skipped, ties resolve to the lowest index,
+/// and a row with no finite logit deterministically returns EOS
+/// (ending the request) instead of silently emitting token 0.
+/// PAD and BOS are never sampled: PAD doubles as the in-band
+/// inactive-slot sentinel of the decode wave (a sampled PAD would
+/// desync per-slot KV state), and BOS is not a generable token.
+/// Temperatures arrive pre-clamped from admission.
+pub fn sample(rng: &mut Rng, logits: &[f32], temperature: Option<f32>) -> u16 {
+    let masked = |i: usize| i == PAD as usize || i == BOS as usize;
+    match temperature {
+        None => {
+            let mut best: Option<(usize, f32)> = None;
+            for (i, &x) in logits.iter().enumerate() {
+                if x.is_finite() && !masked(i) && best.map_or(true, |(_, bv)| x > bv) {
+                    best = Some((i, x));
+                }
+            }
+            best.map(|(i, _)| i as u16).unwrap_or(EOS)
+        }
+        Some(t) => {
+            debug_assert!(
+                t >= MIN_TEMPERATURE,
+                "temperature must be clamped at admission"
+            );
+            let maxv = logits
+                .iter()
+                .enumerate()
+                .filter(|(i, x)| x.is_finite() && !masked(*i))
+                .fold(f32::NEG_INFINITY, |m, (_, &x)| m.max(x));
+            if !maxv.is_finite() {
+                return EOS;
+            }
+            let probs: Vec<f32> = logits
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| {
+                    if x.is_finite() && !masked(i) {
+                        ((x - maxv) / t).exp()
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            let total: f32 = probs.iter().sum();
+            if !total.is_finite() || total <= 0.0 {
+                return EOS;
+            }
+            let mut u = rng.f32() * total;
+            for (i, &p) in probs.iter().enumerate() {
+                u -= p;
+                if u <= 0.0 {
+                    return i as u16;
+                }
+            }
+            // float subtraction is not the exact inverse of the sum:
+            // fall back to the last index that actually has mass, never
+            // a masked (zero-probability) one
+            probs
+                .iter()
+                .rposition(|&p| p > 0.0)
+                .map(|i| i as u16)
+                .unwrap_or(EOS)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sample_guards_nonfinite() {
+        let mut rng = Rng::new(0);
+        // all-NaN and all -inf rows end the request deterministically
+        assert_eq!(sample(&mut rng, &[f32::NAN; 4], None), EOS);
+        assert_eq!(sample(&mut rng, &[f32::NEG_INFINITY; 4], None), EOS);
+        assert_eq!(sample(&mut rng, &[f32::NAN; 4], Some(0.5)), EOS);
+        // NaN entries are skipped, not compared
+        assert_eq!(sample(&mut rng, &[f32::NAN, 1.0, 2.0, f32::NAN], None), 2);
+        // ties resolve to the lowest index (deterministic)
+        assert_eq!(sample(&mut rng, &[3.0, 3.0, 1.0], None), 0);
+        // +inf in the temperature path is masked rather than poisoning exp()
+        let t = sample(&mut rng, &[0.0, f32::INFINITY, 1.0], Some(1.0));
+        assert!(t == 0 || t == 2);
+    }
+
+    #[test]
+    fn sample_never_emits_pad_or_bos() {
+        // PAD is the in-band inactive-slot sentinel of the decode wave: a
+        // sampled PAD would desync per-slot backend KV state. BOS is not
+        // generable either. EOS remains a legal (terminating) sample.
+        let mut rng = Rng::new(0);
+        let mut logits = vec![0.0f32; 260];
+        logits[PAD as usize] = 10.0;
+        logits[BOS as usize] = 9.0;
+        logits[42] = 5.0;
+        assert_eq!(sample(&mut rng, &logits, None), 42);
+        for _ in 0..50 {
+            let t = sample(&mut rng, &logits, Some(0.7));
+            assert!(t != PAD && t != BOS, "sampled special token {t}");
+        }
+        // a row where only PAD/BOS are finite must end the request
+        let mut only_special = vec![f32::NAN; 260];
+        only_special[PAD as usize] = 1.0;
+        only_special[BOS as usize] = 2.0;
+        assert_eq!(sample(&mut rng, &only_special, None), EOS);
+        assert_eq!(sample(&mut rng, &only_special, Some(1.0)), EOS);
+    }
+
+    #[test]
+    fn token_rng_is_positional_and_decorrelated() {
+        // same coordinates -> same stream, bit for bit
+        let a: Vec<u64> = (0..4).map(|_| token_rng(7, 3, 5).next_u64()).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]));
+        // any coordinate change -> a different stream
+        let base = token_rng(7, 3, 5).next_u64();
+        assert_ne!(base, token_rng(8, 3, 5).next_u64(), "seed must matter");
+        assert_ne!(base, token_rng(7, 4, 5).next_u64(), "request id must matter");
+        assert_ne!(base, token_rng(7, 3, 6).next_u64(), "token index must matter");
+        // adjacent indices give usable, non-degenerate f32 draws
+        for idx in 0..32 {
+            let u = token_rng(1, 1, idx).f32();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn sampling_is_independent_of_draw_history() {
+        // the property the batcher's replay correctness rests on: the
+        // token at (seed, id, index) does not depend on what else was
+        // sampled before it
+        let mut logits = vec![0.0f32; 64];
+        for (i, l) in logits.iter_mut().enumerate() {
+            *l = (i % 7) as f32 * 0.3;
+        }
+        let direct = sample(&mut token_rng(11, 2, 9), &logits, Some(0.8));
+        // simulate a busy scheduler: many unrelated draws first
+        for id in 0..20u64 {
+            for idx in 0..20usize {
+                sample(&mut token_rng(11, id, idx), &logits, Some(0.8));
+            }
+        }
+        let replayed = sample(&mut token_rng(11, 2, 9), &logits, Some(0.8));
+        assert_eq!(direct, replayed);
+    }
+}

@@ -68,6 +68,14 @@ impl KvCache for SlotKv {
     fn advance(&mut self, n: usize) {
         self.pos += n;
     }
+
+    fn truncate(&mut self, n: usize) {
+        debug_assert!(n <= self.pos, "truncate beyond committed positions");
+        for side in self.k.iter_mut().chain(self.v.iter_mut()) {
+            side.truncate(n * self.d);
+        }
+        self.pos = n;
+    }
 }
 
 #[cfg(test)]
@@ -93,5 +101,33 @@ mod tests {
         kv.reset();
         assert_eq!(kv.pos, 0);
         assert_eq!(kv.nbytes(), 0);
+    }
+
+    #[test]
+    fn truncate_drops_suffix_and_appends_resume() {
+        let d = 4;
+        let mut kv = SlotKv::new(2, d);
+        for pos in 0..5 {
+            for layer in 0..2 {
+                kv.append_row(layer, pos, &vec![pos as f32; d], &vec![-(pos as f32); d]);
+            }
+        }
+        kv.advance(5);
+        kv.truncate(2);
+        assert_eq!(kv.pos, 2);
+        assert_eq!(kv.nbytes(), 2 * 2 * 2 * d * 4, "suffix storage freed");
+        let (k, _) = kv.rows(0, 1);
+        assert!(k.iter().all(|&x| x == 1.0), "prefix survives truncate");
+        // appends resume at the truncation point with different data
+        for layer in 0..2 {
+            kv.append_row(layer, 2, &vec![9.0; d], &vec![9.5; d]);
+        }
+        kv.advance(1);
+        let (k, v) = kv.rows(1, 2);
+        assert!(k.iter().all(|&x| x == 9.0));
+        assert!(v.iter().all(|&x| x == 9.5));
+        // truncate to the current position is a no-op
+        kv.truncate(3);
+        assert_eq!(kv.pos, 3);
     }
 }

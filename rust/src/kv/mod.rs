@@ -88,4 +88,14 @@ pub trait KvCache: KvRows {
 
     /// Commit `n` appended positions: `pos()` grows by `n`.
     fn advance(&mut self, n: usize);
+
+    /// Roll the cache back to exactly `n` committed positions
+    /// (`n <= pos()`): rows at `n..` are dropped and paged caches return
+    /// every page past the one holding position `n - 1` to the pool.
+    /// This is the speculative-decode rollback primitive — a rejected
+    /// draft suffix disappears without copying, and the slot is left in
+    /// the same state as if only the accepted prefix had ever been
+    /// decoded (pinned by the property tests in `model::native` and
+    /// `spec`).
+    fn truncate(&mut self, n: usize);
 }

@@ -116,6 +116,20 @@ impl<B: KvRows> KvCache for WaveOverlay<B> {
     fn advance(&mut self, n: usize) {
         self.rows.appended += n;
     }
+
+    /// Drop buffered rows beyond `n`. The base view is shared and
+    /// immutable here, so `n` must not reach below `base_pos` — a wave
+    /// scheduler rolls the base back separately (after commit, through
+    /// the real cache's own `truncate`).
+    fn truncate(&mut self, n: usize) {
+        debug_assert!(n >= self.rows.base_pos, "overlay truncate below its base");
+        debug_assert!(n <= self.pos(), "truncate beyond committed positions");
+        let keep = n - self.rows.base_pos;
+        for side in self.rows.k.iter_mut().chain(self.rows.v.iter_mut()) {
+            side.truncate(keep * self.rows.d);
+        }
+        self.rows.appended = keep;
+    }
 }
 
 #[cfg(test)]
@@ -176,5 +190,34 @@ mod tests {
         let (k, v) = kv.rows(1, n);
         assert!(k.iter().all(|&x| x == 7.0));
         assert!(v.iter().all(|&x| x == 7.5));
+    }
+
+    #[test]
+    fn truncate_drops_buffered_suffix_only() {
+        let (layers, d, n) = (2usize, 3usize, 4usize);
+        let base = filled_base(layers, d, n);
+        let mut ov = WaveOverlay::new(&base, n, layers, d);
+        for step in 0..3 {
+            for layer in 0..layers {
+                let val = 50.0 + step as f32;
+                ov.append_row(layer, n + step, &vec![val; d], &vec![val + 0.5; d]);
+            }
+            ov.advance(1);
+        }
+        assert_eq!(ov.pos(), n + 3);
+        ov.truncate(n + 1);
+        assert_eq!(ov.pos(), n + 1);
+        // the surviving buffered row and the base both still read back
+        let (k, _) = ov.rows(0, n);
+        assert!(k.iter().all(|&x| x == 50.0));
+        let (k, _) = ov.rows(1, 1);
+        assert!(k.iter().all(|&x| x == 11.0));
+        // truncate to the base boundary empties the buffer; commit is a no-op
+        ov.truncate(n);
+        let rows = ov.into_rows();
+        assert_eq!(rows.appended(), 0);
+        let mut kv = filled_base(layers, d, n);
+        rows.commit(&mut kv).unwrap();
+        assert_eq!(kv.pos, n);
     }
 }

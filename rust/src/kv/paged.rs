@@ -58,6 +58,20 @@ impl PageTable {
         self.pos = 0;
     }
 
+    /// Roll back to `n` committed positions (`n <= pos`): pages past the
+    /// one holding position `n - 1` go straight back to the pool — the
+    /// speculative-decode rollback is a free-list push, no copying. Rows
+    /// inside the kept pages are not cleared; they are overwritten when
+    /// the positions are appended again.
+    pub fn truncate(&mut self, pool: &mut BlockPool, n: usize) {
+        debug_assert!(n <= self.pos, "truncate beyond committed positions");
+        let keep = pool.pages_for(n);
+        for page in self.pages.drain(keep..) {
+            pool.release(page);
+        }
+        self.pos = n;
+    }
+
     /// (page, in-page index) holding position `pos`.
     #[inline]
     fn locate(&self, page_tokens: usize, pos: usize) -> (u32, usize) {
@@ -127,6 +141,10 @@ impl KvCache for PagedSlot<'_> {
             "advance past reserved capacity"
         );
     }
+
+    fn truncate(&mut self, n: usize) {
+        self.table.truncate(self.pool, n);
+    }
 }
 
 #[cfg(test)]
@@ -176,6 +194,113 @@ mod tests {
             }
         }
         assert_eq!(table.n_pages(), 3);
+    }
+
+    /// Fill `n` positions with position-stamped rows through a fresh slot.
+    fn fill(slot: &mut PagedSlot<'_>, layers: usize, d: usize, n: usize) {
+        slot.reserve(n).unwrap();
+        for pos in 0..n {
+            for layer in 0..layers {
+                let k = vec![(pos * 10 + layer) as f32; d];
+                let v = vec![(pos * 10 + layer) as f32 + 0.5; d];
+                slot.append_row(layer, pos, &k, &v);
+            }
+        }
+        slot.advance(n);
+    }
+
+    /// Truncate across page sizes that split mid-page (1, 7) and on the
+    /// boundary (16): the kept prefix reads back exactly, the freed pages
+    /// are back in the pool, and no page leaks across rollback cycles —
+    /// the speculative-rollback contract.
+    #[test]
+    fn truncate_frees_pages_and_keeps_prefix_across_page_sizes() {
+        let (layers, d, total) = (2usize, 4usize, 20usize);
+        for pt in [1usize, 7, 16] {
+            let mut pool = BlockPool::new(layers, d, pt, total.div_ceil(pt));
+            for keep in [13usize, 7, 0] {
+                let mut table = PageTable::new();
+                let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+                fill(&mut slot, layers, d, total);
+                assert_eq!(pool.pages_free(), 0, "pt={pt}: pool sized exactly");
+                let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+                slot.truncate(keep);
+                assert_eq!(slot.pos(), keep, "pt={pt} keep={keep}");
+                let want_pages = keep.div_ceil(pt);
+                assert_eq!(table.n_pages(), want_pages, "pt={pt} keep={keep}");
+                assert_eq!(
+                    pool.pages_used(), want_pages,
+                    "pt={pt} keep={keep}: freed pages must be back in the pool"
+                );
+                // the kept prefix is untouched
+                let slot = PagedSlot { pool: &mut pool, table: &mut table };
+                for pos in 0..keep {
+                    for layer in 0..layers {
+                        let (k, v) = slot.rows(layer, pos);
+                        assert!(k.iter().all(|&x| x == (pos * 10 + layer) as f32),
+                                "pt={pt} keep={keep} pos={pos}");
+                        assert!(v.iter().all(|&x| x == (pos * 10 + layer) as f32 + 0.5));
+                    }
+                }
+                table.release(&mut pool);
+                assert_eq!(pool.pages_free(), pool.pages_total(),
+                           "pt={pt} keep={keep}: leak");
+            }
+        }
+    }
+
+    /// Truncate exactly onto a page boundary: the boundary page itself is
+    /// kept (it holds position `n - 1`) and only pages past it return.
+    #[test]
+    fn truncate_to_page_boundary_keeps_the_full_page() {
+        let (layers, d, pt) = (1usize, 4usize, 4usize);
+        let mut pool = BlockPool::new(layers, d, pt, 3);
+        let mut table = PageTable::new();
+        let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+        fill(&mut slot, layers, d, 10); // 3 pages: 4 + 4 + 2
+        slot.truncate(8); // exactly two full pages
+        assert_eq!(slot.pos(), 8);
+        assert_eq!(table.n_pages(), 2);
+        assert_eq!(pool.pages_free(), 1);
+        // truncate(pos) is a no-op
+        let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+        slot.truncate(8);
+        assert_eq!(table.n_pages(), 2);
+        assert_eq!(pool.pages_free(), 1);
+    }
+
+    /// Truncate-then-reserve must hand the freed pages straight back:
+    /// pool accounting is exact through a rollback/regrow cycle and the
+    /// regrown rows read back correctly.
+    #[test]
+    fn truncate_then_reserve_reuses_freed_pages_exactly() {
+        let (layers, d, pt) = (2usize, 4usize, 7usize);
+        let mut pool = BlockPool::new(layers, d, pt, 3); // 21 positions max
+        let mut table = PageTable::new();
+        let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+        fill(&mut slot, layers, d, 20); // all 3 pages in use
+        slot.truncate(5); // back to 1 page, 2 freed
+        assert_eq!(pool.pages_free(), 2);
+        // a burst of 9 beyond pos=5 needs pages for 14 positions = 2 pages
+        let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+        slot.reserve(9).unwrap();
+        assert_eq!(table.n_pages(), 2);
+        assert_eq!(pool.pages_free(), 1, "exactly one page of headroom left");
+        for pos in 5..14 {
+            for layer in 0..layers {
+                slot.append_row(layer, pos, &vec![100.0 + pos as f32; d],
+                                &vec![200.0 + pos as f32; d]);
+            }
+        }
+        slot.advance(9);
+        assert_eq!(slot.pos(), 14);
+        for pos in 0..14 {
+            let (k, _) = slot.rows(0, pos);
+            let want = if pos < 5 { (pos * 10) as f32 } else { 100.0 + pos as f32 };
+            assert!(k.iter().all(|&x| x == want), "pos {pos} after regrow");
+        }
+        table.release(&mut pool);
+        assert_eq!(pool.pages_free(), 3, "no leak after the full cycle");
     }
 
     #[test]

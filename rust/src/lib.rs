@@ -36,5 +36,6 @@ pub mod quant;
 pub mod rotation;
 pub mod runtime;
 pub mod server;
+pub mod spec;
 pub mod tensor;
 pub mod util;

@@ -16,7 +16,10 @@
 //!                                  synthetic (native = threaded CPU kernels on
 //!                                  packed weights, no artifacts required;
 //!                                  --threads N caps its workers), --synthetic
-//!                                  (alias for --backend synthetic)
+//!                                  (alias for --backend synthetic),
+//!                                  --speculative K --draft ngram|demo|PATH
+//!                                  (draft/verify decoding; bit-identical
+//!                                  output, acceptance metrics on /metrics)
 //!   generate                     — one-shot text generation
 //!   reproduce --id <id>          — regenerate a paper table/figure (or `all`)
 //!   analyze-ste                  — the Fig. 2 STE instability study
@@ -26,7 +29,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use singlequant::coordinator::{
     Request, ServeBackend, ServeConfig, ServeEngine, SyntheticBackend,
@@ -41,6 +44,7 @@ use singlequant::quant::WeightQuantizer;
 use singlequant::rotation::singlequant::SingleQuantConfig;
 use singlequant::runtime::{ModelRunner, NativeBackend, RunnerBackend};
 use singlequant::server::{serve as serve_http, ServerConfig};
+use singlequant::spec::{DraftModel, NativeDraft, NgramDraft};
 use singlequant::util::cli::Args;
 use singlequant::util::json::Json;
 use singlequant::util::rng::Rng;
@@ -165,6 +169,11 @@ usage: singlequant <info|quantize|eval|serve|serve-http|generate|reproduce|analy
                     --kv-pool-pages N  (native; 0 = worst-case auto-size; a
                     smaller pool overcommits: admission gates on worst-case
                     page demand and decode preempts+replays under pressure)
+                    --speculative K (propose K draft tokens per decode wave,
+                    verified in one burst; output stays bit-identical, 0 =
+                    off; native|synthetic backends) --draft ngram|demo|PATH
+                    (ngram = zero-weight prompt lookup; demo = built-in fp
+                    demo draft; PATH = fp .sqt checkpoint on the demo config)
   reproduce --id X  table1..table8 tableb3 fig1a fig1b fig2 fig3 fig4 all
   generate          --prompt TEXT --max-new N";
 
@@ -374,6 +383,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the draft model behind `--draft` for speculative serving.
+/// "ngram" is the zero-weight prompt-lookup draft; "demo" carries the
+/// built-in demo config with fresh random fp weights (a stand-in for a
+/// distilled small checkpoint); any other value loads an fp `.sqt`
+/// checkpoint shaped like the demo config.
+fn draft_from_args(args: &Args, batch: usize) -> Result<Box<dyn DraftModel>> {
+    Ok(match args.get_or("draft", "ngram") {
+        "ngram" => Box::new(NgramDraft::new(3)),
+        "demo" => {
+            let threads = args.usize_or("threads", 0)?;
+            let cfg = ModelConfig::demo();
+            let w = Weights::random_init(&cfg, 0x7a31);
+            let model = NativeModel::from_weights(&cfg, &w, None, threads)?;
+            Box::new(NativeDraft::new(model, batch))
+        }
+        path => {
+            let threads = args.usize_or("threads", 0)?;
+            let cfg = ModelConfig::demo();
+            let w = Weights::load(path)?;
+            let model = NativeModel::from_weights(&cfg, &w, None, threads)?;
+            Box::new(NativeDraft::new(model, batch))
+        }
+    })
+}
+
 fn cmd_serve_http(args: &Args) -> Result<()> {
     let host = args.get_or("host", "127.0.0.1");
     let port = args.usize_or("port", 8071)?;
@@ -404,10 +438,19 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
         }
         other => bail!("unknown --backend {other:?} (native|pjrt|synthetic)"),
     };
-    let engine = ServeEngine::new(
+    let mut engine = ServeEngine::new(
         backend,
         ServeConfig { max_new_cap: max_new, seed: 7, queue_cap },
     );
+    let spec_k = args.usize_or("speculative", 0)?;
+    if spec_k > 0 {
+        ensure!(kind != "pjrt",
+                "--speculative needs --backend native or synthetic (the PJRT \
+                 graphs have no multi-row verification entry point)");
+        engine.enable_speculation(spec_k, draft_from_args(args, batch)?);
+        println!("[serve-http] speculative decoding: k={spec_k} draft={}",
+                 args.get_or("draft", "ngram"));
+    }
     let handle = serve_http(engine, ServerConfig {
         addr: format!("{host}:{port}"),
         default_max_tokens: max_new.min(16),

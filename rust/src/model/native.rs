@@ -195,14 +195,19 @@ impl NativeModel {
     }
 
     /// Process `t` new token rows at positions `kv.pos ..`, appending
-    /// their K/V rows; the shared core of prefill and decode.
+    /// their K/V rows; the shared core of prefill and decode — and the
+    /// speculative-decode verifier: row `i` of the returned `[t, V]`
+    /// logits is the next-token distribution after consuming
+    /// `tokens[..=i]`, bit-identical to decoding those tokens one at a
+    /// time (the property `tests` pin), so a draft burst is checked in
+    /// one call and rejected tokens roll back via [`KvCache::truncate`].
     ///
     /// All KV capacity is reserved up front, before any row is written:
     /// a paged cache that cannot cover the step fails here with
     /// [`crate::kv::KvError::PoolExhausted`] (downcastable through the
     /// returned `anyhow::Error`) and the slot state is untouched, so the
     /// batcher can preempt or requeue and replay the request later.
-    fn step_rows<K: KvCache>(&self, kv: &mut K, tokens: &[u16]) -> Result<Tensor> {
+    pub fn step_rows<K: KvCache>(&self, kv: &mut K, tokens: &[u16]) -> Result<Tensor> {
         let t = tokens.len();
         let d = self.cfg.d_model;
         let start = kv.pos();
@@ -522,6 +527,79 @@ mod tests {
         let mut kv = nm.new_kv();
         nm.prefill(&mut kv, &tokens[..8]).unwrap();
         assert_eq!(row, nm.decode(&mut kv, tokens[8]).unwrap());
+    }
+
+    /// The speculative-decode verify/rollback lemma: a multi-row
+    /// `step_rows` burst produces logits rows bit-identical to decoding
+    /// the same tokens one at a time, and `truncate` back to an accepted
+    /// prefix leaves the cache indistinguishable from one that only ever
+    /// decoded that prefix — on contiguous and paged KV at page sizes
+    /// that split the burst mid-page and on the boundary.
+    fn check_burst_rollback_exact(nm: &NativeModel) {
+        let tokens = toks(14, 3);
+        let plen = 5;
+        // sequential reference rows
+        let mut ref_kv = nm.new_kv();
+        nm.prefill(&mut ref_kv, &tokens[..plen]).unwrap();
+        let mut ref_rows: Vec<Vec<f32>> = Vec::new();
+        for &tok in &tokens[plen..] {
+            ref_rows.push(nm.decode(&mut ref_kv, tok).unwrap());
+        }
+
+        let burst_len = 4usize;
+        for accept in 0..=burst_len {
+            // contiguous
+            let mut kv = nm.new_kv();
+            nm.prefill(&mut kv, &tokens[..plen]).unwrap();
+            let burst = &tokens[plen..plen + burst_len];
+            let rows = nm.step_rows(&mut kv, burst).unwrap();
+            for i in 0..burst_len {
+                assert_eq!(rows.row(i), ref_rows[i].as_slice(),
+                           "burst row {i} vs sequential");
+            }
+            kv.truncate(plen + accept);
+            assert_eq!(kv.pos, plen + accept);
+            // decoding after the rollback continues the sequential stream
+            let row = nm.decode(&mut kv, tokens[plen + accept]).unwrap();
+            assert_eq!(row, ref_rows[accept], "post-truncate decode accept={accept}");
+
+            // paged, across page sizes
+            for pt in [1usize, 7, 16] {
+                let mut pool = BlockPool::new(
+                    nm.cfg.n_layers, nm.cfg.d_model, pt,
+                    tokens.len().div_ceil(pt),
+                );
+                let mut table = PageTable::new();
+                let mut slot = PagedSlot { pool: &mut pool, table: &mut table };
+                nm.prefill(&mut slot, &tokens[..plen]).unwrap();
+                let rows = nm.step_rows(&mut slot, burst).unwrap();
+                for i in 0..burst_len {
+                    assert_eq!(rows.row(i), ref_rows[i].as_slice(),
+                               "paged pt={pt} burst row {i}");
+                }
+                slot.truncate(plen + accept);
+                let row = nm.decode(&mut slot, tokens[plen + accept]).unwrap();
+                assert_eq!(row, ref_rows[accept],
+                           "paged pt={pt} post-truncate decode accept={accept}");
+            }
+        }
+    }
+
+    #[test]
+    fn burst_verify_and_rollback_exact_fp() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        check_burst_rollback_exact(&NativeModel::from_weights(&cfg, &w, None, 2).unwrap());
+    }
+
+    #[test]
+    fn burst_verify_and_rollback_exact_w4a4() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let quant = Some(QuantCtx::identity(&cfg, 4));
+        check_burst_rollback_exact(
+            &NativeModel::from_weights(&cfg, &w, quant, 2).unwrap(),
+        );
     }
 
     #[test]

@@ -27,8 +27,8 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::coordinator::backend::{BackendLimits, KvPoolStatus, ServeBackend};
 use crate::coordinator::tokenizer::PAD;
-use crate::kv::{BlockPool, KvRows, PageTable, PagedReader, PagedSlot, SlotKv, WaveOverlay,
-                WaveRows};
+use crate::kv::{BlockPool, KvCache, KvRows, PageTable, PagedReader, PagedSlot, SlotKv,
+                WaveOverlay, WaveRows};
 use crate::model::NativeModel;
 use crate::tensor::pool::{self, SendPtr};
 use crate::tensor::simd;
@@ -96,28 +96,94 @@ impl NativeBackend {
             KvSlots::Paged { pool, .. } => pool.pages_used() * pool.page_nbytes(),
         }
     }
+
+    /// Shared wave driver behind `decode` and `decode_burst`: parallel
+    /// burst phase over read-only base views, all-or-nothing error
+    /// scan, serial ascending-slot commit. Callers have already
+    /// validated positions and reserved KV capacity for every burst.
+    fn wave_and_commit(
+        &mut self,
+        active: &[usize],
+        bursts: &[Vec<u16>],
+    ) -> Result<Vec<Option<Tensor>>> {
+        let batch = self.limits.batch;
+        let model = &self.model;
+        let mut waves = match &self.kv {
+            KvSlots::Contig(slots) => run_wave(model, active, bursts, batch, |slot| {
+                let base = &slots[slot];
+                (base, base.pos)
+            }),
+            KvSlots::Paged { pool, tables } => {
+                run_wave(model, active, bursts, batch, |slot| {
+                    let table = &tables[slot];
+                    (PagedReader { pool, table }, table.pos())
+                })
+            }
+        };
+
+        // any slot failure aborts the wave before a single row commits —
+        // the scheduler tears down in-flight work on decode errors, and
+        // partially-advanced siblings would only confuse the post-mortem
+        for &slot in active {
+            if !matches!(waves[slot], Some(Ok(_))) {
+                return Err(match waves[slot].take() {
+                    Some(Err(e)) => e,
+                    _ => anyhow!("decode wave dropped slot {slot}"),
+                });
+            }
+        }
+
+        // serial ascending-slot write-back
+        let mut out: Vec<Option<Tensor>> = (0..batch).map(|_| None).collect();
+        for &slot in active {
+            let (rows_t, rows) = match waves[slot].take() {
+                Some(Ok(x)) => x,
+                _ => unreachable!("scanned above"),
+            };
+            match &mut self.kv {
+                KvSlots::Contig(slots) => rows.commit(&mut slots[slot]),
+                KvSlots::Paged { pool, tables } => {
+                    let mut view = PagedSlot { pool, table: &mut tables[slot] };
+                    rows.commit(&mut view)
+                }
+            }
+            .map_err(anyhow::Error::new)?;
+            out[slot] = Some(rows_t);
+        }
+        Ok(out)
+    }
+
+    fn slot_pos(&self, slot: usize) -> usize {
+        match &self.kv {
+            KvSlots::Contig(slots) => slots[slot].pos,
+            KvSlots::Paged { tables, .. } => tables[slot].pos(),
+        }
+    }
 }
 
-/// Parallel phase of a decode wave: every active slot decodes its token
-/// against a read-only view of its committed cache, buffering the new
-/// K/V rows in a slot-private [`WaveOverlay`]. Slots are dispatched
-/// across the worker pool; matmuls issued inside a multi-slot wave run
-/// inline on the claiming worker (the pool's nested-call rule), and a
-/// single-slot wave keeps full intra-matmul parallelism — either way
-/// each slot's numbers are identical to the serial slot walk.
+/// Parallel phase of a decode wave: every active slot steps its burst
+/// (one token on the plain path, `k+1` on the speculative one) against
+/// a read-only view of its committed cache, buffering the new K/V rows
+/// in a slot-private [`WaveOverlay`]. Slots are dispatched across the
+/// worker pool; matmuls issued inside a multi-slot wave run inline on
+/// the claiming worker (the pool's nested-call rule), and a single-slot
+/// wave keeps full intra-matmul parallelism — either way each slot's
+/// numbers are identical to the serial slot walk, and the multi-row
+/// burst rows are bit-equal to feeding the burst one token at a time
+/// (pinned by the rollback property tests in `model::native`).
 fn run_wave<B, F>(
     model: &NativeModel,
     active: &[usize],
-    tokens: &[i32],
+    bursts: &[Vec<u16>],
     batch: usize,
     base_of: F,
-) -> Vec<Option<Result<(Vec<f32>, WaveRows)>>>
+) -> Vec<Option<Result<(Tensor, WaveRows)>>>
 where
     B: KvRows + Sync,
     F: Fn(usize) -> (B, usize) + Sync,
 {
     let (n_layers, d) = (model.cfg.n_layers, model.cfg.d_model);
-    let mut out: Vec<Option<Result<(Vec<f32>, WaveRows)>>> =
+    let mut out: Vec<Option<Result<(Tensor, WaveRows)>>> =
         (0..batch).map(|_| None).collect();
     let cells = SendPtr::new(out.as_mut_ptr());
     pool::global().run(active.len(), |i| {
@@ -125,8 +191,8 @@ where
         let (base, base_pos) = base_of(slot);
         let mut overlay = WaveOverlay::new(base, base_pos, n_layers, d);
         let res = model
-            .decode(&mut overlay, tokens[slot] as u16)
-            .map(|row| (row, overlay.into_rows()));
+            .step_rows(&mut overlay, &bursts[slot])
+            .map(|rows| (rows, overlay.into_rows()));
         // SAFETY: each chunk writes only its own slot's cell, and `out`
         // outlives the job (`run` blocks until every chunk completes).
         unsafe { *cells.get().add(slot) = Some(res) };
@@ -190,10 +256,7 @@ impl ServeBackend for NativeBackend {
         // making this a no-op there; direct callers get PoolExhausted
         // here with all slots still replayable)
         for &slot in &active {
-            let pos = match &self.kv {
-                KvSlots::Contig(slots) => slots[slot].pos,
-                KvSlots::Paged { tables, .. } => tables[slot].pos(),
-            };
+            let pos = self.slot_pos(slot);
             ensure!(pos == positions[slot] as usize,
                     "slot {slot}: cache holds {pos} positions but scheduler is at {}",
                     positions[slot]);
@@ -204,50 +267,83 @@ impl ServeBackend for NativeBackend {
             }
         }
 
-        // parallel wave over shared read-only base views
-        let model = &self.model;
-        let mut waves = match &self.kv {
-            KvSlots::Contig(slots) => run_wave(model, &active, tokens, batch, |slot| {
-                let base = &slots[slot];
-                (base, base.pos)
-            }),
-            KvSlots::Paged { pool, tables } => {
-                run_wave(model, &active, tokens, batch, |slot| {
-                    let table = &tables[slot];
-                    (PagedReader { pool, table }, table.pos())
-                })
-            }
-        };
-
-        // any slot failure aborts the wave before a single row commits —
-        // the scheduler tears down in-flight work on decode errors, and
-        // partially-advanced siblings would only confuse the post-mortem
+        let bursts: Vec<Vec<u16>> = tokens
+            .iter()
+            .map(|&tok| {
+                if tok == PAD as i32 { Vec::new() } else { vec![tok as u16] }
+            })
+            .collect();
+        let rows = self.wave_and_commit(&active, &bursts)?;
         for &slot in &active {
-            if !matches!(waves[slot], Some(Ok(_))) {
-                return Err(match waves[slot].take() {
-                    Some(Err(e)) => e,
-                    _ => anyhow!("decode wave dropped slot {slot}"),
-                });
-            }
-        }
-
-        // serial ascending-slot write-back
-        for &slot in &active {
-            let (row, rows) = match waves[slot].take() {
-                Some(Ok(x)) => x,
-                _ => unreachable!("scanned above"),
-            };
-            match &mut self.kv {
-                KvSlots::Contig(slots) => rows.commit(&mut slots[slot]),
-                KvSlots::Paged { pool, tables } => {
-                    let mut view = PagedSlot { pool, table: &mut tables[slot] };
-                    rows.commit(&mut view)
-                }
-            }
-            .map_err(anyhow::Error::new)?;
-            logits.data_mut()[slot * v..(slot + 1) * v].copy_from_slice(&row);
+            let rows_t = rows[slot].as_ref().expect("active slot has rows");
+            logits.data_mut()[slot * v..(slot + 1) * v]
+                .copy_from_slice(rows_t.row(0));
         }
         Ok(logits)
+    }
+
+    /// Speculative verification wave: each active slot steps its whole
+    /// burst in one `step_rows` call, returning one logits row per
+    /// burst token. Reservation is opportunistic — a slot whose full
+    /// burst does not fit the paged pool degrades to its first token
+    /// (the single step the batcher pre-reserved), so speculation can
+    /// shrink under pool pressure but never fail a wave that plain
+    /// decode would have survived.
+    fn decode_burst(
+        &mut self,
+        bursts: &[Vec<u16>],
+        positions: &[i32],
+    ) -> Result<Vec<Option<Tensor>>> {
+        let batch = self.limits.batch;
+        ensure!(bursts.len() == batch && positions.len() == batch,
+                "burst shape mismatch");
+        let active: Vec<usize> =
+            (0..batch).filter(|&s| !bursts[s].is_empty()).collect();
+        if active.is_empty() {
+            return Ok((0..batch).map(|_| None).collect());
+        }
+        for &slot in &active {
+            let pos = self.slot_pos(slot);
+            ensure!(pos == positions[slot] as usize,
+                    "slot {slot}: cache holds {pos} positions but scheduler is at {}",
+                    positions[slot]);
+        }
+        let mut clamped: Vec<Vec<u16>> = bursts.to_vec();
+        if let KvSlots::Paged { pool, tables } = &mut self.kv {
+            for &slot in &active {
+                let l = clamped[slot].len();
+                if l > 1 && tables[slot].reserve(pool, l).is_err() {
+                    clamped[slot].truncate(1);
+                }
+                // the degraded single step rides the batcher's standing
+                // one-position pre-reservation, so this cannot fail on
+                // the serving path; direct callers surface PoolExhausted
+                // here with every slot still replayable
+                tables[slot]
+                    .reserve(pool, clamped[slot].len())
+                    .map_err(anyhow::Error::new)?;
+            }
+        }
+        self.wave_and_commit(&active, &clamped)
+    }
+
+    fn kv_truncate(&mut self, slot: usize, n: usize) {
+        match &mut self.kv {
+            KvSlots::Contig(slots) => {
+                if let Some(kv) = slots.get_mut(slot) {
+                    kv.truncate(n);
+                }
+            }
+            KvSlots::Paged { pool, tables } => {
+                if let Some(table) = tables.get_mut(slot) {
+                    table.truncate(pool, n);
+                }
+            }
+        }
+    }
+
+    fn supports_speculative(&self) -> bool {
+        true
     }
 
     fn retire(&mut self, slot: usize) {
@@ -575,6 +671,242 @@ mod tests {
             assert_eq!(g.id, e.id);
             assert_eq!(g.tokens, e.tokens,
                        "preempt+replay must reproduce greedy output of request {}", g.id);
+        }
+    }
+
+    /// `decode_burst` rows must be bit-equal to single-token decodes of
+    /// the same chain, and `kv_truncate` must leave the cache exactly
+    /// at the accepted prefix — the backend half of the speculative
+    /// exactness contract, on both KV layouts.
+    #[test]
+    fn backend_burst_rows_match_sequential_decode_and_truncate() {
+        for paged in [false, true] {
+            let make = || {
+                if paged {
+                    NativeBackend::with_paged_kv(demo_model(), 2, 4, 0)
+                } else {
+                    demo_backend(2)
+                }
+            };
+            let mut seq = make();
+            let mut burst = make();
+            let t = seq.limits().score_seq;
+            let v = seq.limits().vocab_size;
+            let mut tokens = vec![PAD as i32; 2 * t];
+            tokens[..3].copy_from_slice(&[5, 6, 7]);
+            tokens[t..t + 2].copy_from_slice(&[11, 12]);
+            for be in [&mut seq, &mut burst] {
+                assert!(be.kv_reserve(0, 3) && be.kv_reserve(1, 2));
+                be.prefill(&tokens, &[0, 1]).unwrap();
+            }
+            let chain0 = [9u16, 10, 11];
+            let chain1 = [20u16, 21, 22];
+            let mut want0 = Vec::new();
+            let mut want1 = Vec::new();
+            for s in 0..3 {
+                assert!(seq.kv_reserve(0, 1) && seq.kv_reserve(1, 1));
+                let lg = seq
+                    .decode(&[chain0[s] as i32, chain1[s] as i32],
+                            &[3 + s as i32, 2 + s as i32])
+                    .unwrap();
+                want0.extend_from_slice(&lg.data()[..v]);
+                want1.extend_from_slice(&lg.data()[v..]);
+            }
+            // batcher-style single-step pre-reservation, then one burst
+            assert!(burst.kv_reserve(0, 1) && burst.kv_reserve(1, 1));
+            let rows = burst
+                .decode_burst(&[chain0.to_vec(), chain1.to_vec()], &[3, 2])
+                .unwrap();
+            let r0 = rows[0].as_ref().unwrap();
+            let r1 = rows[1].as_ref().unwrap();
+            assert_eq!(r0.shape(), &[3, v][..]);
+            assert_eq!(r0.data(), &want0[..], "slot 0 burst rows (paged={paged})");
+            assert_eq!(r1.data(), &want1[..], "slot 1 burst rows (paged={paged})");
+            // roll slot 0 back to one accepted token and continue: the
+            // next decode must reproduce the sequential chain's second
+            // step, as if the rejected rows had never existed
+            burst.kv_truncate(0, 4);
+            burst.kv_truncate(1, 5); // no-op at the current position
+            assert!(burst.kv_reserve(0, 1));
+            let lg = burst
+                .decode(&[chain0[1] as i32, PAD as i32], &[4, 0])
+                .unwrap();
+            assert_eq!(&lg.data()[..v], &want0[v..2 * v],
+                       "decode after truncate (paged={paged})");
+        }
+    }
+
+    /// Speculative and plain engines over the same backend and request
+    /// mix must retire bit-identical responses — greedy and sampled,
+    /// with a prompt-lookup draft whose guesses the verifier is free to
+    /// reject wholesale.
+    fn check_spec_matches_plain(make: &dyn Fn() -> NativeBackend, k: usize) {
+        let submit = |engine: &mut ServeEngine| {
+            engine.submit(
+                Request::new(0, vec![7, 8, 9, 7, 8, 9, 7, 8]).with_max_new(10),
+            );
+            engine.submit(
+                Request::new(1, vec![5, 6, 5, 6, 5])
+                    .with_max_new(8)
+                    .with_temperature(0.8),
+            );
+            engine.submit(Request::new(2, vec![11, 23, 42]).with_max_new(6));
+        };
+        let run = |spec: bool| {
+            let mut e = ServeEngine::new(
+                Box::new(make()),
+                ServeConfig { max_new_cap: 16, seed: 9, queue_cap: 8 },
+            );
+            if spec {
+                e.enable_speculation(k, Box::new(crate::spec::NgramDraft::new(3)));
+            }
+            submit(&mut e);
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            let pairs: Vec<_> = out
+                .into_iter()
+                .map(|r| (r.id, r.tokens, r.finish))
+                .collect();
+            (pairs, e.metrics.spec_proposed)
+        };
+        let (want, _) = run(false);
+        let (got, proposed) = run(true);
+        assert_eq!(got, want, "speculation changed engine output (k={k})");
+        assert!(proposed > 0, "the draft never proposed — the check is vacuous");
+    }
+
+    #[test]
+    fn spec_engine_matches_plain_fp_contig() {
+        check_spec_matches_plain(&|| NativeBackend::new(demo_model(), 2), 4);
+    }
+
+    #[test]
+    fn spec_engine_matches_plain_fp_paged() {
+        check_spec_matches_plain(
+            &|| NativeBackend::with_paged_kv(demo_model(), 2, 4, 0), 2,
+        );
+    }
+
+    #[test]
+    fn spec_engine_matches_plain_w4a4_contig() {
+        check_spec_matches_plain(&|| NativeBackend::new(w4a4_model(), 2), 4);
+    }
+
+    #[test]
+    fn spec_engine_matches_plain_w4a4_paged() {
+        check_spec_matches_plain(
+            &|| NativeBackend::with_paged_kv(w4a4_model(), 2, 7, 0), 8,
+        );
+    }
+
+    #[test]
+    fn spec_engine_with_native_draft_matches_plain() {
+        // the draft carries different random weights (seed 21): its
+        // guesses are usually wrong, so exactness must come from
+        // verification alone, not from a lucky oracle
+        use crate::spec::NativeDraft;
+        let draft = || {
+            let cfg = test_config();
+            let w = Weights::random_init(&cfg, 21);
+            let m = NativeModel::from_weights(&cfg, &w, None, 1).unwrap();
+            NativeDraft::new(m, 2)
+        };
+        let run = |spec: bool| {
+            let mut e = ServeEngine::new(
+                Box::new(NativeBackend::new(demo_model(), 2)),
+                ServeConfig { max_new_cap: 16, seed: 5, queue_cap: 8 },
+            );
+            if spec {
+                e.enable_speculation(3, Box::new(draft()));
+            }
+            e.submit(Request::new(0, vec![10, 20, 30]).with_max_new(8));
+            e.submit(
+                Request::new(1, vec![4, 5, 6, 4, 5]).with_max_new(8)
+                    .with_temperature(0.6),
+            );
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| (r.tokens, r.finish)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false), "native draft changed engine output");
+    }
+
+    /// Regression for positional sampling: a preempted-and-replayed
+    /// *sampled* request must re-emit exactly the tokens it already
+    /// streamed. An RNG keyed on draw count would shift the stream on
+    /// replay; keying on (seed, request id, token index) cannot.
+    #[test]
+    fn preempted_sampled_requests_replay_identically() {
+        let requests = |engine: &mut ServeEngine| {
+            for i in 0..6u64 {
+                let prompt: Vec<u16> =
+                    (0..6).map(|j| 10 + 3 * i as u16 + j).collect();
+                engine.submit(
+                    Request::new(i, prompt).with_max_new(12).with_temperature(0.7),
+                );
+            }
+        };
+        let mut ref_engine = ServeEngine::new(
+            Box::new(NativeBackend::with_paged_kv(demo_model(), 4, 4, 0)),
+            ServeConfig { max_new_cap: 16, seed: 2, queue_cap: 16 },
+        );
+        requests(&mut ref_engine);
+        let mut expect = ref_engine.run_to_completion().unwrap();
+        expect.sort_by_key(|r| r.id);
+        assert_eq!(ref_engine.metrics.preemptions, 0);
+
+        let mut engine = ServeEngine::new(
+            Box::new(NativeBackend::with_paged_kv(demo_model(), 4, 4, 10)),
+            ServeConfig { max_new_cap: 16, seed: 2, queue_cap: 16 },
+        );
+        requests(&mut engine);
+        let mut got = engine.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), expect.len());
+        assert!(engine.metrics.preemptions > 0, "tight pool must preempt");
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!(g.id, e.id);
+            assert_eq!(g.tokens, e.tokens,
+                       "replayed sampled stream diverged for request {}", g.id);
+        }
+    }
+
+    /// Speculation composes with overcommit: a tight pool forces bursts
+    /// to degrade and slots to preempt mid-generation, and the output
+    /// still matches an uncontended plain engine bit for bit while the
+    /// draft keeps earning acceptances on the periodic prompts.
+    #[test]
+    fn speculative_overcommitted_pool_stays_exact() {
+        let requests = |engine: &mut ServeEngine| {
+            for i in 0..6u64 {
+                let base = 10 + 2 * i as u16;
+                let prompt: Vec<u16> = (0..9).map(|j| base + j % 3).collect();
+                engine.submit(Request::new(i, prompt).with_max_new(12));
+            }
+        };
+        let mut ref_engine = ServeEngine::new(
+            Box::new(NativeBackend::with_paged_kv(demo_model(), 4, 4, 0)),
+            ServeConfig { max_new_cap: 16, seed: 3, queue_cap: 16 },
+        );
+        requests(&mut ref_engine);
+        let mut expect = ref_engine.run_to_completion().unwrap();
+        expect.sort_by_key(|r| r.id);
+
+        let mut engine = ServeEngine::new(
+            Box::new(NativeBackend::with_paged_kv(demo_model(), 4, 4, 12)),
+            ServeConfig { max_new_cap: 16, seed: 3, queue_cap: 16 },
+        );
+        engine.enable_speculation(4, Box::new(crate::spec::NgramDraft::new(3)));
+        requests(&mut engine);
+        let mut got = engine.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 6, "every request completes");
+        assert!(engine.metrics.preemptions > 0, "tight pool must preempt");
+        assert!(engine.metrics.spec_proposed > 0, "drafting must have run");
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!(g.id, e.id);
+            assert_eq!(g.tokens, e.tokens,
+                       "speculation + preemption diverged for request {}", g.id);
         }
     }
 }

@@ -1,0 +1,388 @@
+//! The single-sequence speculative decode driver: propose → verify →
+//! accept → roll back, one wave at a time, over any [`KvCache`]. The
+//! serving engine reimplements this loop across slots (through
+//! `ServeBackend::decode_burst`); this standalone form is what the
+//! equivalence property tests pin down and what the bench section
+//! measures.
+
+use anyhow::Result;
+
+use crate::coordinator::sampler::{sample, token_rng};
+use crate::coordinator::tokenizer::{BOS, EOS, PAD};
+use crate::kv::{KvCache, KvError};
+use crate::model::native::NativeModel;
+
+use super::DraftModel;
+
+/// Counters from one [`SpeculativeDecoder::generate`] run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft tokens submitted to the verifier (after clamping/filtering).
+    pub proposed: usize,
+    /// Draft tokens the verifier accepted.
+    pub accepted: usize,
+    /// Verification waves run (= target-model calls after prefill).
+    pub waves: usize,
+}
+
+impl SpecStats {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+/// Drives one sequence speculatively against a target model. Sampling
+/// uses the positional RNG (`coordinator::sampler`), so the produced
+/// token stream is bit-identical to sequential decode with the same
+/// `(seed, request_id)` — greedy and sampled alike — regardless of the
+/// draft's quality (the property tests below sweep drafts from oracle
+/// to adversarial).
+pub struct SpeculativeDecoder<'m> {
+    model: &'m NativeModel,
+    k: usize,
+}
+
+impl<'m> SpeculativeDecoder<'m> {
+    pub fn new(model: &'m NativeModel, k: usize) -> SpeculativeDecoder<'m> {
+        assert!(k >= 1, "speculation depth must be at least 1");
+        SpeculativeDecoder { model, k }
+    }
+
+    /// Generate up to `max_new` tokens after `prompt` (the trailing EOS,
+    /// if sampled, is included and terminates generation). On paged
+    /// caches a burst that cannot reserve degrades to a single-token
+    /// step; if even that fails the error propagates with the cache
+    /// untouched since the last accepted position — the caller can free
+    /// pages and replay, exactly like plain decode under preemption.
+    pub fn generate<K: KvCache>(
+        &self,
+        kv: &mut K,
+        draft: &mut dyn DraftModel,
+        prompt: &[u16],
+        max_new: usize,
+        seed: u64,
+        request_id: u64,
+        temperature: Option<f32>,
+    ) -> Result<(Vec<u16>, SpecStats)> {
+        let mut stats = SpecStats::default();
+        let mut generated: Vec<u16> = Vec::new();
+        if max_new == 0 {
+            return Ok((generated, stats));
+        }
+        let logits = self.model.prefill(kv, prompt)?;
+        let first = sample(
+            &mut token_rng(seed, request_id, 0),
+            logits.row(prompt.len() - 1),
+            temperature,
+        );
+        generated.push(first);
+        let mut last = first;
+        while last != EOS && generated.len() < max_new {
+            // clamp: the emitted prefix may not pass max_new, the
+            // appended rows may not pass the cache horizon
+            let want = self
+                .k
+                .min(max_new - generated.len() - 1)
+                .min(self.model.cfg.max_seq.saturating_sub(kv.pos() + 1));
+            let mut burst = vec![last];
+            if want > 0 {
+                let mut ctx = prompt.to_vec();
+                ctx.extend_from_slice(&generated);
+                for d in draft.propose(0, &ctx, want).into_iter().take(want) {
+                    if d == PAD || d == BOS || d as usize >= self.model.cfg.vocab_size {
+                        break;
+                    }
+                    burst.push(d);
+                    if d == EOS {
+                        break;
+                    }
+                }
+            }
+            let before = kv.pos();
+            let rows = match self.model.step_rows(kv, &burst) {
+                Ok(rows) => rows,
+                Err(e) if burst.len() > 1 && is_pool_exhausted(&e) => {
+                    // degrade to a plain decode step — covered by one
+                    // position, which is all sequential decode needs
+                    burst.truncate(1);
+                    self.model.step_rows(kv, &burst)?
+                }
+                Err(e) => return Err(e),
+            };
+            stats.waves += 1;
+            stats.proposed += burst.len() - 1;
+            let mut emitted = 0usize;
+            for r in 0..burst.len() {
+                let tok = sample(
+                    &mut token_rng(seed, request_id, generated.len()),
+                    rows.row(r),
+                    temperature,
+                );
+                generated.push(tok);
+                last = tok;
+                emitted += 1;
+                if tok == EOS || r + 1 >= burst.len() || tok != burst[r + 1] {
+                    break;
+                }
+            }
+            stats.accepted += emitted - 1;
+            if before + emitted < kv.pos() {
+                kv.truncate(before + emitted);
+            }
+        }
+        Ok((generated, stats))
+    }
+}
+
+fn is_pool_exhausted(e: &anyhow::Error) -> bool {
+    matches!(e.downcast_ref::<KvError>(), Some(KvError::PoolExhausted { .. }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::{BlockPool, PageTable, PagedSlot};
+    use crate::model::config::tests::test_config;
+    use crate::model::layers::QuantCtx;
+    use crate::model::weights::Weights;
+    use crate::spec::{NativeDraft, NgramDraft};
+    use crate::util::rng::Rng;
+
+    /// A draft that proposes a fixed wrong token k times — worst case:
+    /// every wave verifies a full burst and rejects everything.
+    struct AdversarialDraft;
+    impl DraftModel for AdversarialDraft {
+        fn propose(&mut self, _slot: usize, ctx: &[u16], k: usize) -> Vec<u16> {
+            // always "wrong": one past whatever the context ends with
+            let t = ctx.last().copied().unwrap_or(0);
+            vec![(t + 101) % 250; k]
+        }
+        fn label(&self) -> &'static str {
+            "adversarial"
+        }
+    }
+
+    fn models() -> Vec<NativeModel> {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        vec![
+            NativeModel::from_weights(&cfg, &w, None, 2).unwrap(),
+            NativeModel::from_weights(&cfg, &w, Some(QuantCtx::identity(&cfg, 4)), 2)
+                .unwrap(),
+        ]
+    }
+
+    /// The non-speculative reference: sequential decode with the same
+    /// positional sampler.
+    fn sequential<K: KvCache>(
+        nm: &NativeModel,
+        kv: &mut K,
+        prompt: &[u16],
+        max_new: usize,
+        seed: u64,
+        id: u64,
+        temperature: Option<f32>,
+    ) -> Vec<u16> {
+        let logits = nm.prefill(kv, prompt).unwrap();
+        let mut out = Vec::new();
+        let mut last = sample(
+            &mut token_rng(seed, id, 0),
+            logits.row(prompt.len() - 1),
+            temperature,
+        );
+        out.push(last);
+        while last != EOS && out.len() < max_new {
+            let row = nm.decode(kv, last).unwrap();
+            last = sample(&mut token_rng(seed, id, out.len()), &row, temperature);
+            out.push(last);
+        }
+        out
+    }
+
+    fn prompt() -> Vec<u16> {
+        let mut rng = Rng::new(5);
+        (0..8).map(|_| rng.below(250) as u16).collect()
+    }
+
+    /// The tentpole property: speculative output is bit-identical to
+    /// sequential decode — fp and w4a4 targets, greedy and sampled,
+    /// contiguous and paged KV (page sizes splitting bursts mid-page and
+    /// on boundaries), k in {1, 2, 4, 8}, and drafts from oracle
+    /// (same-weights native) through prompt-lookup to adversarial.
+    #[test]
+    fn speculative_output_is_bit_identical_to_sequential() {
+        let p = prompt();
+        let max_new = 12;
+        for nm in &models() {
+            for &temperature in &[None, Some(0.8)] {
+                let mut ref_kv = nm.new_kv();
+                let want = sequential(nm, &mut ref_kv, &p, max_new, 7, 1, temperature);
+                for k in [1usize, 2, 4, 8] {
+                    let dec = SpeculativeDecoder::new(nm, k);
+                    let drafts: Vec<Box<dyn DraftModel>> = vec![
+                        Box::new(NgramDraft::new(3)),
+                        Box::new(AdversarialDraft),
+                        Box::new(NativeDraft::new(
+                            NativeModel::from_weights(
+                                &nm.cfg,
+                                &Weights::random_init(&nm.cfg, 1),
+                                None,
+                                1,
+                            )
+                            .unwrap(),
+                            1,
+                        )),
+                    ];
+                    for mut draft in drafts {
+                        // contiguous
+                        let mut kv = nm.new_kv();
+                        let (got, stats) = dec
+                            .generate(&mut kv, draft.as_mut(), &p, max_new, 7, 1, temperature)
+                            .unwrap();
+                        assert_eq!(
+                            got, want,
+                            "contig k={k} draft={} temp={temperature:?}",
+                            draft.label()
+                        );
+                        assert!(stats.accepted <= stats.proposed);
+                        draft.retire(0);
+
+                        // paged, across page sizes
+                        for pt in [1usize, 7, 16] {
+                            let mut pool = BlockPool::new(
+                                nm.cfg.n_layers,
+                                nm.cfg.d_model,
+                                pt,
+                                (p.len() + max_new + k + 1).div_ceil(pt),
+                            );
+                            let mut table = PageTable::new();
+                            let mut slot =
+                                PagedSlot { pool: &mut pool, table: &mut table };
+                            let (got, _) = dec
+                                .generate(
+                                    &mut slot,
+                                    draft.as_mut(),
+                                    &p,
+                                    max_new,
+                                    7,
+                                    1,
+                                    temperature,
+                                )
+                                .unwrap();
+                            assert_eq!(
+                                got, want,
+                                "paged pt={pt} k={k} draft={} temp={temperature:?}",
+                                draft.label()
+                            );
+                            draft.retire(0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// An oracle draft (same weights as the greedy target) must reach
+    /// 100% acceptance and finish in fewer waves than tokens; the
+    /// adversarial draft must reach 0% while still being exact.
+    #[test]
+    fn acceptance_spans_oracle_to_adversarial() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let nm = NativeModel::from_weights(&cfg, &w, None, 2).unwrap();
+        let p = prompt();
+        let max_new = 12;
+        let dec = SpeculativeDecoder::new(&nm, 4);
+
+        let mut ref_kv = nm.new_kv();
+        let want = sequential(&nm, &mut ref_kv, &p, max_new, 7, 1, None);
+
+        let oracle_model = NativeModel::from_weights(&cfg, &w, None, 1).unwrap();
+        let mut oracle = NativeDraft::new(oracle_model, 1);
+        let mut kv = nm.new_kv();
+        let (got, stats) =
+            dec.generate(&mut kv, &mut oracle, &p, max_new, 7, 1, None).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(
+            stats.accepted, stats.proposed,
+            "a same-weights greedy draft is always right"
+        );
+        if want.len() > 2 {
+            assert!(
+                stats.waves < want.len() - 1,
+                "oracle speculation must save target-model calls: {} waves for {} tokens",
+                stats.waves,
+                want.len()
+            );
+        }
+
+        let mut kv = nm.new_kv();
+        let (got, stats) = dec
+            .generate(&mut kv, &mut AdversarialDraft, &p, max_new, 7, 1, None)
+            .unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.accepted, 0, "nothing adversarial may survive verification");
+        assert!(stats.proposed > 0);
+    }
+
+    /// Deterministic pool pressure: a cache that refuses every
+    /// multi-position reservation after prefill, so each burst hits
+    /// `PoolExhausted` mid-generation and must fall back to a plain
+    /// single-token step without changing the output.
+    struct SingleStepOnly<K: KvCache>(K);
+
+    impl<K: KvCache> crate::kv::KvRows for SingleStepOnly<K> {
+        fn rows(&self, layer: usize, pos: usize) -> (&[f32], &[f32]) {
+            self.0.rows(layer, pos)
+        }
+    }
+
+    impl<K: KvCache> KvCache for SingleStepOnly<K> {
+        fn pos(&self) -> usize {
+            self.0.pos()
+        }
+        fn reserve(&mut self, extra: usize) -> Result<(), KvError> {
+            if self.0.pos() > 0 && extra > 1 {
+                return Err(KvError::PoolExhausted { needed: extra, free: 1 });
+            }
+            self.0.reserve(extra)
+        }
+        fn append_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+            self.0.append_row(layer, pos, k, v)
+        }
+        fn advance(&mut self, n: usize) {
+            self.0.advance(n)
+        }
+        fn truncate(&mut self, n: usize) {
+            self.0.truncate(n)
+        }
+    }
+
+    #[test]
+    fn pool_pressure_degrades_bursts_and_stays_exact() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let nm = NativeModel::from_weights(&cfg, &w, None, 2).unwrap();
+        let p = prompt();
+        let max_new = 6;
+        let mut ref_kv = nm.new_kv();
+        let want = sequential(&nm, &mut ref_kv, &p, max_new, 7, 1, None);
+
+        let mut kv = SingleStepOnly(nm.new_kv());
+        let dec = SpeculativeDecoder::new(&nm, 4);
+        let (got, stats) = dec
+            .generate(&mut kv, &mut AdversarialDraft, &p, max_new, 7, 1, None)
+            .unwrap();
+        assert_eq!(got, want, "degraded waves must not change output");
+        assert_eq!(stats.waves, want.len() - 1, "every wave fell back to one token");
+        assert_eq!(
+            (stats.proposed, stats.accepted),
+            (0, 0),
+            "no draft token reached the verifier under pressure"
+        );
+    }
+}

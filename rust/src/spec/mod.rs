@@ -1,0 +1,58 @@
+//! Speculative decoding: draft-model token proposal, multi-row
+//! verification on the target model, and longest-exact-prefix
+//! acceptance — with output guaranteed bit-identical to non-speculative
+//! decode.
+//!
+//! The wave shape: a [`DraftModel`] proposes up to `k` cheap tokens
+//! `d1..dk` to follow the current context; the target model consumes
+//! the burst `[x0, d1..dk]` (`x0` = the pending last sampled token) in
+//! ONE `model::native::NativeModel::step_rows` call, whose row `i` is
+//! bit-identical to the logits sequential decode would produce after
+//! the same tokens. The accept loop then walks the rows sampling with
+//! the positional RNG (`coordinator::sampler`): the token sampled at
+//! row `i` is *emitted*; if it equals the next draft token the walk
+//! continues, otherwise (or on EOS) it stops. Every emitted token is
+//! therefore sampled from the same logits row with the same RNG stream
+//! the non-speculative engine would have used — acceptance never
+//! changes the output, only how many target-model calls it took.
+//! Rejected rows roll back through `kv::KvCache::truncate`, which
+//! returns whole pages to the paged pool; a failed or degraded burst
+//! leaves the slot replayable, composing with the batcher's
+//! preemption exactly like plain decode.
+//!
+//! Two drafts ship: [`NgramDraft`], a zero-weight prompt-lookup draft
+//! (longest context suffix that recurred earlier proposes its
+//! continuation), and [`NativeDraft`], a small fp model running its own
+//! private KV. The serving integration lives in
+//! `coordinator::batcher::ServeEngine::enable_speculation`; the
+//! standalone [`SpeculativeDecoder`] drives a single sequence for
+//! benches and the equivalence property tests.
+
+mod decoder;
+mod native_draft;
+mod ngram;
+
+pub use decoder::{SpecStats, SpeculativeDecoder};
+pub use native_draft::NativeDraft;
+pub use ngram::NgramDraft;
+
+/// A token proposer. Drafts are *advisory*: the verifier accepts a
+/// proposal only when the target model's own sampled token equals it,
+/// so a wrong (or adversarial) draft can cost speed but never
+/// correctness. Implementations may keep per-slot state (the native
+/// draft holds a KV cache per slot) and must reconcile it against the
+/// `ctx` they are handed — the engine rolls contexts back on rejection
+/// and replays them after preemption.
+pub trait DraftModel: Send {
+    /// Propose up to `k` tokens to follow `ctx` (prompt ++ everything
+    /// generated so far, including the pending last token) for `slot`.
+    /// Fewer than `k` — or none — is always acceptable.
+    fn propose(&mut self, slot: usize, ctx: &[u16], k: usize) -> Vec<u16>;
+
+    /// The slot finished, was preempted, or aborted: drop any per-slot
+    /// draft state. Stateless drafts keep the default no-op.
+    fn retire(&mut self, _slot: usize) {}
+
+    /// Short name for metrics and logs ("ngram", "native").
+    fn label(&self) -> &'static str;
+}

@@ -1,0 +1,168 @@
+//! A small fp model as the draft: its own `NativeModel` with a private
+//! contiguous KV cache per slot. Proposals are the draft's greedy
+//! continuations; the target model's verifier decides what survives.
+
+use crate::coordinator::sampler::sample;
+use crate::coordinator::tokenizer::EOS;
+use crate::kv::{KvCache, SlotKv};
+use crate::model::native::NativeModel;
+use crate::util::rng::Rng;
+
+use super::DraftModel;
+
+/// Per-slot draft state: the draft's KV cache plus the exact token
+/// sequence it holds (context prefix and past greedy rollouts alike),
+/// so the next `propose` can reconcile against whatever the engine
+/// accepted by truncating to the common prefix.
+struct DraftSlot {
+    kv: SlotKv,
+    fed: Vec<u16>,
+}
+
+/// A weight-bearing draft model (typically a tiny fp config sharing the
+/// target's tokenizer). Keeps one private KV cache per serving slot;
+/// rejected rollouts roll back through `KvCache::truncate`, so a wave's
+/// draft work is reused whenever the verifier accepted a prefix of it.
+pub struct NativeDraft {
+    model: NativeModel,
+    slots: Vec<DraftSlot>,
+}
+
+impl NativeDraft {
+    pub fn new(model: NativeModel, batch: usize) -> NativeDraft {
+        let slots = (0..batch)
+            .map(|_| DraftSlot { kv: model.new_kv(), fed: Vec::new() })
+            .collect();
+        NativeDraft { model, slots }
+    }
+}
+
+impl DraftModel for NativeDraft {
+    fn propose(&mut self, slot: usize, ctx: &[u16], k: usize) -> Vec<u16> {
+        if k == 0 || ctx.is_empty() {
+            return Vec::new();
+        }
+        let s = &mut self.slots[slot];
+        // reconcile: keep the cached prefix that still matches `ctx`,
+        // but always re-feed at least the last context token so a fresh
+        // logits row exists to roll out from
+        let common = s
+            .fed
+            .iter()
+            .zip(ctx.iter())
+            .take_while(|(a, b)| a == b)
+            .count()
+            .min(ctx.len() - 1);
+        if common < s.fed.len() {
+            s.kv.truncate(common);
+            s.fed.truncate(common);
+        }
+        let fresh = &ctx[common..];
+        // the draft is advisory: anything it cannot represent (context
+        // past its horizon, tokens outside its vocab) just proposes
+        // nothing rather than failing the wave
+        if s.kv.pos() + fresh.len() + k > self.model.cfg.max_seq
+            || fresh.iter().any(|&t| t as usize >= self.model.cfg.vocab_size)
+        {
+            return Vec::new();
+        }
+        let Ok(rows) = self.model.step_rows(&mut s.kv, fresh) else {
+            return Vec::new();
+        };
+        s.fed.extend_from_slice(fresh);
+        let mut row: Vec<f32> = rows.row(fresh.len() - 1).to_vec();
+        // greedy rollout: each proposal is fed back to extend the
+        // rollout; the RNG is inert under greedy sampling
+        let mut rng = Rng::new(0);
+        let mut proposals = Vec::with_capacity(k);
+        loop {
+            let tok = sample(&mut rng, &row, None);
+            proposals.push(tok);
+            if tok == EOS || proposals.len() == k {
+                return proposals;
+            }
+            let Ok(next) = self.model.decode(&mut s.kv, tok) else {
+                return proposals;
+            };
+            s.fed.push(tok);
+            row = next;
+        }
+    }
+
+    fn retire(&mut self, slot: usize) {
+        self.slots[slot].kv.reset();
+        self.slots[slot].fed.clear();
+    }
+
+    fn label(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::tests::test_config;
+    use crate::model::weights::Weights;
+
+    fn draft() -> NativeDraft {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 21);
+        NativeDraft::new(NativeModel::from_weights(&cfg, &w, None, 1).unwrap(), 2)
+    }
+
+    #[test]
+    fn proposals_match_the_drafts_own_greedy_decode() {
+        let mut d = draft();
+        let ctx = [3u16, 17, 40, 9];
+        let got = d.propose(0, &ctx, 3);
+        assert_eq!(got.len(), 3);
+        // reference: fresh greedy decode on the same model
+        let mut kv = d.model.new_kv();
+        let rows = d.model.step_rows(&mut kv, &ctx).unwrap();
+        let mut rng = Rng::new(0);
+        let mut want = Vec::new();
+        let mut row = rows.row(ctx.len() - 1).to_vec();
+        for _ in 0..3 {
+            let tok = sample(&mut rng, &row, None);
+            want.push(tok);
+            if tok == EOS {
+                break;
+            }
+            row = d.model.decode(&mut kv, tok).unwrap();
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn reconciles_cached_state_across_divergent_contexts() {
+        let mut d = draft();
+        let ctx1 = [3u16, 17, 40, 9];
+        let first = d.propose(0, &ctx1, 4);
+        // the engine rejected everything and sampled a different token:
+        // the cached rollout must be truncated, not replayed
+        let mut ctx2 = ctx1.to_vec();
+        ctx2.push(55);
+        let _ = d.propose(0, &ctx2, 4);
+        // back on a fresh slot, the original context reproposes the same
+        let ctx1_again = d.propose(1, &ctx1, 4);
+        assert_eq!(first, ctx1_again, "slot state must not leak across slots");
+        // and the reconciled slot, handed ctx1's extension by its own
+        // first proposal, still matches a from-scratch draft
+        let mut accepted = ctx1.to_vec();
+        accepted.push(first[0]);
+        let a = d.propose(0, &accepted, 3);
+        let mut fresh = draft();
+        let b = fresh.propose(0, &accepted, 3);
+        assert_eq!(a, b, "reconciliation must be invisible in the proposals");
+    }
+
+    #[test]
+    fn oversized_context_proposes_nothing() {
+        let mut d = draft();
+        let long = vec![5u16; d.model.cfg.max_seq];
+        assert!(d.propose(0, &long, 4).is_empty());
+        d.retire(0);
+        assert_eq!(d.slots[0].kv.pos(), 0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Prompt-lookup draft: zero weights, zero KV. The longest recent
+//! suffix of the context that occurred earlier proposes the tokens that
+//! followed that earlier occurrence — strong on repetitive contexts
+//! (code, templated text, the bench's cyclic prompts), free elsewhere.
+
+use super::DraftModel;
+
+/// N-gram / prompt-lookup draft. `max_n` bounds the suffix length
+/// matched against history; longer matches are tried first, so the most
+/// specific recurrence wins.
+pub struct NgramDraft {
+    max_n: usize,
+}
+
+impl NgramDraft {
+    pub fn new(max_n: usize) -> NgramDraft {
+        assert!(max_n >= 1, "suffix length must be at least 1");
+        NgramDraft { max_n }
+    }
+}
+
+impl DraftModel for NgramDraft {
+    fn propose(&mut self, _slot: usize, ctx: &[u16], k: usize) -> Vec<u16> {
+        if k == 0 || ctx.len() < 2 {
+            return Vec::new();
+        }
+        for n in (1..=self.max_n.min(ctx.len() - 1)).rev() {
+            let suffix = &ctx[ctx.len() - n..];
+            // most recent earlier occurrence: windows ending before the
+            // final position, newest first (an overlap with the suffix
+            // itself is fine — that is what continues a period-n cycle)
+            for end in (n..ctx.len()).rev() {
+                if &ctx[end - n..end] == suffix {
+                    let cont = &ctx[end..(end + k).min(ctx.len())];
+                    if !cont.is_empty() {
+                        return cont.to_vec();
+                    }
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    fn label(&self) -> &'static str {
+        "ngram"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposes_continuation_of_longest_recurring_suffix() {
+        let mut d = NgramDraft::new(3);
+        // ctx ends in [7, 8]; the earlier [7, 8] at positions 0..2 is
+        // followed by [9, 7] — the proposal
+        let ctx = [7u16, 8, 9, 7, 8];
+        assert_eq!(d.propose(0, &ctx, 2), vec![9, 7]);
+        // the longer match wins over a shorter, more recent one
+        let ctx = [1u16, 2, 3, 9, 2, 3, 5, 1, 2, 3];
+        assert_eq!(d.propose(0, &ctx, 2), vec![9, 2]);
+    }
+
+    #[test]
+    fn continues_a_periodic_cycle_through_self_overlap() {
+        let mut d = NgramDraft::new(2);
+        let ctx = [4u16, 5, 4, 5, 4, 5];
+        // suffix [5, 4, 5]... max_n=2: suffix [4, 5] recurs ending at 4,
+        // continuation [4, 5]
+        assert_eq!(d.propose(0, &ctx, 4), vec![4, 5]);
+    }
+
+    #[test]
+    fn no_match_or_degenerate_context_proposes_nothing() {
+        let mut d = NgramDraft::new(3);
+        assert!(d.propose(0, &[1, 2, 3, 4, 5], 4).is_empty());
+        assert!(d.propose(0, &[9], 4).is_empty());
+        assert!(d.propose(0, &[], 4).is_empty());
+        assert!(d.propose(0, &[1, 1, 2], 0).is_empty());
+    }
+}

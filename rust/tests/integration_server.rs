@@ -51,15 +51,36 @@ fn completion_body(prompt: &str, max_tokens: usize, stream: bool) -> String {
     .to_string()
 }
 
+/// CI hook: `SQ_SPECULATIVE=K` (optionally `SQ_DRAFT=ngram`) turns
+/// speculative decoding on for every server this suite starts. The
+/// speculative engine is bit-identical to the plain one by contract,
+/// so all assertions must pass unchanged — the CI matrix runs the
+/// whole suite under this knob to hold the engines to that.
+fn maybe_speculate(engine: &mut ServeEngine) {
+    let k: usize = std::env::var("SQ_SPECULATIVE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if k == 0 {
+        return;
+    }
+    match std::env::var("SQ_DRAFT").as_deref() {
+        Ok("ngram") | Err(_) => {}
+        Ok(other) => panic!("SQ_DRAFT={other:?}: this suite only knows ngram"),
+    }
+    engine.enable_speculation(k, Box::new(singlequant::spec::NgramDraft::new(3)));
+}
+
 fn start_server(
     batch: usize,
     queue_cap: usize,
     delay: Duration,
 ) -> singlequant::server::ServerHandle {
-    let engine = ServeEngine::new(
+    let mut engine = ServeEngine::new(
         Box::new(SyntheticBackend::new(batch).with_seq(64, 128).with_delay(delay)),
         ServeConfig { max_new_cap: 16, seed: 11, queue_cap },
     );
+    maybe_speculate(&mut engine);
     serve(engine, ServerConfig {
         addr: "127.0.0.1:0".to_string(),
         default_max_tokens: 8,
@@ -258,10 +279,11 @@ fn native_backend_serves_completions_end_to_end() {
     let qm = quantize(&cfg, &w, &calib, &opts).expect("quantize demo model");
     let model =
         NativeModel::from_quantized(&qm, opts.weight_bits, 2).expect("native model");
-    let engine = ServeEngine::new(
+    let mut engine = ServeEngine::new(
         Box::new(NativeBackend::new(model, 2)),
         ServeConfig { max_new_cap: 8, seed: 5, queue_cap: 16 },
     );
+    maybe_speculate(&mut engine);
     let handle = serve(engine, ServerConfig {
         addr: "127.0.0.1:0".to_string(),
         default_max_tokens: 5,
