@@ -1,0 +1,6 @@
+// Fixture: hot-path aborts must produce `hotpath` findings — both the
+// `.unwrap()` and the indexing-by-literal `pages[0]`.
+pub fn first_page(pages: &[u32]) -> u32 {
+    let head = pages.first().copied();
+    head.unwrap() + pages[0]
+}

@@ -1,0 +1,8 @@
+// Fixture: renders a metric name absent from the catalogue fixture,
+// and fails to render one the catalogue lists — `metrics` findings in
+// both directions.
+pub fn render() -> String {
+    let mut o = String::new();
+    o.push_str("singlequant_bogus_total 1\n");
+    o
+}

@@ -1,0 +1,6 @@
+// Fixture: reading the wall clock outside the clock/metrics/server/
+// bench modules must produce a `nondet` finding (exact-replay
+// contract) — serving logic goes through `util::clock::now()`.
+pub fn stamp_now() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,5 @@
+// Fixture: an unsafe block with no `// SAFETY:` comment anywhere near
+// it must produce a `safety` finding.
+pub fn read_first(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,5 @@
+// Fixture: thread creation anywhere but tensor/pool.rs must produce a
+// `thread` finding — it bypasses the worker pool's nesting guard.
+pub fn sneak_a_thread() {
+    std::thread::spawn(|| {}).join().ok();
+}

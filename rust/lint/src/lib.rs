@@ -1,0 +1,700 @@
+//! `sqlint` — the project's static pass over the rust_pallas tree.
+//!
+//! Six rules, each encoding a contract the serving stack otherwise
+//! enforces only by convention (see DESIGN.md "Static analysis & audit"
+//! for the catalogue and the rationale behind each):
+//!
+//! * `safety`  — every `unsafe` site carries a `// SAFETY:` comment.
+//! * `thread`  — no thread creation outside `tensor/pool.rs`.
+//! * `nondet`  — no wall-clock / entropy sources outside the metrics,
+//!   server, bench, and clock modules (the exact-replay contract).
+//! * `hotpath` — no `unwrap`/`expect`/`panic!`-family macros or
+//!   indexing-by-literal in the hot serving modules; those paths must
+//!   return typed errors instead of aborting the engine.
+//! * `metrics` — Prometheus names rendered by `coordinator/metrics.rs`
+//!   match the catalogue in DESIGN.md exactly, both directions.
+//! * `envvar`  — every `SQ_*` env var referenced by CI exists in code.
+//!
+//! The lexer is hand-rolled (comments, strings, raw strings, char
+//! literals, `#[cfg(test)]` regions) so the crate has zero dependencies
+//! and the fully offline vendored build keeps working.
+//!
+//! A finding is suppressed by a comment on the same line or the line
+//! above: `// sqlint: allow(<rule>) — reason`. The reason is part of
+//! the convention; the marker alone is what the matcher keys on.
+
+pub const RULE_SAFETY: &str = "safety";
+pub const RULE_THREAD: &str = "thread";
+pub const RULE_NONDET: &str = "nondet";
+pub const RULE_HOTPATH: &str = "hotpath";
+pub const RULE_METRICS: &str = "metrics";
+pub const RULE_ENVVAR: &str = "envvar";
+
+/// One rule violation, formatted by the binary as `path:line: [rule] msg`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub msg: String,
+}
+
+/// One physical source line after lexing: `code` has comments and
+/// string/char-literal contents blanked (quotes kept), `comment` holds
+/// the text of any comment on the line, `in_test` marks lines inside a
+/// `#[cfg(test)] mod` body.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+    pub in_test: bool,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex Rust source into per-line code/comment views. Handles nested
+/// block comments, escapes in string and char literals, raw strings
+/// with any hash count, and the char-literal/lifetime ambiguity.
+pub fn lex(src: &str) -> Vec<Line> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        CharLit,
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    // raw string? scan back over hashes to an `r`
+                    let mut h = 0usize;
+                    while i >= h + 1 && chars[i - h - 1] == '#' {
+                        h += 1;
+                    }
+                    let is_raw = i >= h + 1 && chars[i - h - 1] == 'r';
+                    cur.code.push('"');
+                    st = if is_raw { St::RawStr(h as u32) } else { St::Str };
+                    i += 1;
+                } else if c == '\'' {
+                    // char literal iff an escape or a single char then a
+                    // closing quote follows; otherwise it is a lifetime
+                    if chars.get(i + 1) == Some(&'\\') || chars.get(i + 2) == Some(&'\'') {
+                        cur.code.push('\'');
+                        st = St::CharLit;
+                    } else {
+                        cur.code.push('\'');
+                    }
+                    i += 1;
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Code } else { St::BlockComment(d - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(d + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    cur.code.push(' ');
+                    if chars.get(i + 1).is_some() {
+                        cur.code.push(' ');
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                let closes = c == '"'
+                    && (1..=h as usize).all(|k| chars.get(i + k) == Some(&'#'));
+                if closes {
+                    cur.code.push('"');
+                    for _ in 0..h {
+                        cur.code.push('#');
+                    }
+                    st = St::Code;
+                    i += 1 + h as usize;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            St::CharLit => {
+                if c == '\\' {
+                    cur.code.push(' ');
+                    if chars.get(i + 1).is_some() {
+                        cur.code.push(' ');
+                    }
+                    i += 2;
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    mark_tests(&mut lines);
+    lines
+}
+
+/// Mark lines inside `#[cfg(test)] mod … { … }` bodies (including
+/// `#[cfg(all(test, …))]`). Rules that guard runtime behaviour skip
+/// them; tests may spawn threads, read clocks, and unwrap freely.
+fn mark_tests(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut pending_mod = false;
+    let mut test_base: Option<i64> = None;
+    for line in lines.iter_mut() {
+        if test_base.is_some() {
+            line.in_test = true;
+        }
+        let t = line.code.trim().to_string();
+        if test_base.is_none() && (t.contains("#[cfg(test)]") || t.contains("#[cfg(all(test")) {
+            armed = true;
+        }
+        let is_mod = t.starts_with("mod ") || t.starts_with("pub mod ") || t.contains(" mod ");
+        if armed && is_mod {
+            pending_mod = true;
+        } else if armed && !t.is_empty() && !t.starts_with("#[") {
+            // the cfg(test) attribute gated something other than a mod
+            // (a fn, a use) — no region to open
+            armed = false;
+        }
+        for ch in t.chars() {
+            match ch {
+                '{' => {
+                    if pending_mod && test_base.is_none() {
+                        test_base = Some(depth);
+                        line.in_test = true;
+                        armed = false;
+                        pending_mod = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_base == Some(depth) {
+                        test_base = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// True when `lines[i]` (or the line above) carries the inline
+/// suppression marker for `rule`.
+fn suppressed(lines: &[Line], i: usize, rule: &str) -> bool {
+    let marker = format!("sqlint: allow({rule})");
+    if lines[i].comment.contains(&marker) {
+        return true;
+    }
+    i > 0 && lines[i - 1].comment.contains(&marker)
+}
+
+/// Find `pat` in `code` at a word boundary (the char before the match,
+/// if any, is not an identifier char). Returns match offsets.
+fn boundary_matches(code: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(off) = code[from..].find(pat) {
+        let at = from + off;
+        let pre_ok = at == 0 || !is_ident(code[..at].chars().next_back().unwrap_or(' '));
+        if pre_ok {
+            out.push(at);
+        }
+        from = at + pat.len();
+    }
+    out
+}
+
+fn next_non_ws(s: &str) -> Option<char> {
+    s.chars().find(|c| !c.is_whitespace())
+}
+
+// ---------------------------------------------------------------- safety
+
+/// `unsafe` blocks, fns, impls, and traits must be annotated with a
+/// `// SAFETY:` comment (a `# Safety` doc section also counts).
+/// Function-pointer *types* (`unsafe fn(...)`) are not unsafe sites.
+fn check_safety(path: &str, lines: &[Line]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for i in 0..lines.len() {
+        let code = &lines[i].code;
+        for at in boundary_matches(code, "unsafe") {
+            let after = &code[at + "unsafe".len()..];
+            if after.chars().next().is_some_and(is_ident) {
+                continue;
+            }
+            // `unsafe fn(` in type position is a signature, not a site
+            let mut rest = after.trim_start().to_string();
+            if rest.is_empty() {
+                if let Some(next) = lines.get(i + 1) {
+                    rest = next.code.trim_start().to_string();
+                }
+            }
+            if let Some(tail) = rest.strip_prefix("fn") {
+                if next_non_ws(tail) == Some('(') {
+                    continue;
+                }
+            }
+            if !safety_covered(lines, i) && !suppressed(lines, i, RULE_SAFETY) {
+                out.push(Finding {
+                    rule: RULE_SAFETY,
+                    path: path.to_string(),
+                    line: i + 1,
+                    msg: "unsafe site without a `// SAFETY:` comment".to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+fn has_safety_tag(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety")
+}
+
+fn safety_covered(lines: &[Line], i: usize) -> bool {
+    if has_safety_tag(&lines[i].comment) {
+        return true;
+    }
+    let lo = i.saturating_sub(12);
+    for j in (lo..i).rev() {
+        if has_safety_tag(&lines[j].comment) {
+            return true;
+        }
+        let t = lines[j].code.trim();
+        let part_of_group = t.contains("unsafe impl")
+            || t.starts_with("unsafe fn")
+            || t.starts_with("pub unsafe")
+            || t.starts_with("pub(crate) unsafe")
+            || t.starts_with("pub(super) unsafe");
+        // A line ending in `=` is a wrapped assignment head (rustfmt
+        // splits `let x = unsafe { … }` when it overflows); the unsafe
+        // expression below belongs to it, so keep scanning for the
+        // comment above the head.
+        if t.is_empty() || t.starts_with("#[") || part_of_group || t.ends_with('=') {
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+// ---------------------------------------------------------------- thread
+
+const THREAD_PATTERNS: &[&str] = &["thread::spawn", "thread::scope", "thread::Builder"];
+
+/// All *compute* thread creation funnels through the `tensor/pool.rs`
+/// worker pool; anything else bypasses its nesting guard and queue
+/// accounting. `src/server/` is exempt: the HTTP accept loop and
+/// per-connection handlers are I/O threads, not compute, and never
+/// touch the pool's invariants.
+fn check_thread(path: &str, lines: &[Line]) -> Vec<Finding> {
+    if !path.starts_with("src/")
+        || path == "src/tensor/pool.rs"
+        || path.starts_with("src/server/")
+    {
+        return Vec::new();
+    }
+    let what = "thread creation outside tensor/pool.rs bypasses the worker pool";
+    scan_patterns(path, lines, RULE_THREAD, THREAD_PATTERNS, what)
+}
+
+// ---------------------------------------------------------------- nondet
+
+const NONDET_PATTERNS: &[&str] = &[
+    "Instant::now",
+    "SystemTime::now",
+    "thread_rng",
+    "from_entropy",
+    "getrandom",
+    "RandomState",
+];
+
+const NONDET_ALLOWED: &[&str] = &[
+    "src/coordinator/metrics.rs",
+    "src/util/bench.rs",
+    "src/util/clock.rs",
+];
+
+/// Exact-replay contract: serving logic must not read wall clocks or
+/// entropy directly. Time flows through `util::clock::now()` (one
+/// audited chokepoint); sampling through the positional RNG.
+fn check_nondet(path: &str, lines: &[Line]) -> Vec<Finding> {
+    if !path.starts_with("src/")
+        || path.starts_with("src/server/")
+        || NONDET_ALLOWED.contains(&path)
+    {
+        return Vec::new();
+    }
+    let what = "nondeterminism outside the clock/metrics/server/bench modules";
+    scan_patterns(path, lines, RULE_NONDET, NONDET_PATTERNS, what)
+}
+
+// --------------------------------------------------------------- hotpath
+
+const HOT_MODULES_EXACT: &[&str] =
+    &["src/coordinator/batcher.rs", "src/runtime/native_backend.rs"];
+
+fn in_hot_scope(path: &str) -> bool {
+    HOT_MODULES_EXACT.contains(&path)
+        || path.starts_with("src/kv/")
+        || path.starts_with("src/spec/")
+}
+
+/// The serving hot path must degrade through typed errors
+/// (`AdmissionError`, `FinishReason`, `KvError`) — never abort on
+/// request-shaped input. Bans `.unwrap()`, `.expect(…)`, the panicking
+/// macros, and indexing by integer literal.
+fn check_hotpath(path: &str, lines: &[Line]) -> Vec<Finding> {
+    if !in_hot_scope(path) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let mut hits: Vec<String> = Vec::new();
+        for call in ["unwrap", "expect"] {
+            for at in boundary_matches(code, call) {
+                let dotted = code[..at].trim_end().ends_with('.');
+                let called = next_non_ws(&code[at + call.len()..]) == Some('(');
+                if dotted && called {
+                    hits.push(format!(".{call}() aborts the engine"));
+                }
+            }
+        }
+        for mac in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+            if !boundary_matches(code, mac).is_empty() {
+                hits.push(format!("{mac} aborts the engine"));
+            }
+        }
+        for h in literal_index_hits(code) {
+            hits.push(format!("indexing by literal `[{h}]` can panic"));
+        }
+        for msg in hits {
+            if !suppressed(lines, i, RULE_HOTPATH) {
+                out.push(Finding {
+                    rule: RULE_HOTPATH,
+                    path: path.to_string(),
+                    line: i + 1,
+                    msg,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// `expr[<integer literal>]` — an index expression (the char before `[`
+/// ends an expression) whose bracket body is digits/underscores only.
+fn literal_index_hits(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let chars: Vec<char> = code.chars().collect();
+    for (i, &c) in chars.iter().enumerate() {
+        if c != '[' || i == 0 {
+            continue;
+        }
+        let prev = chars[..i].iter().rev().find(|c| !c.is_whitespace());
+        let is_index = matches!(prev, Some(&p) if is_ident(p) || p == ')' || p == ']');
+        if !is_index {
+            continue;
+        }
+        let body: String = chars[i + 1..].iter().take_while(|&&c| c != ']').collect();
+        if !body.is_empty()
+            && chars[i + 1..].iter().any(|&c| c == ']')
+            && body.chars().all(|c| c.is_ascii_digit() || c == '_')
+        {
+            out.push(body);
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------------- metrics
+
+/// Extract `singlequant_*` metric names from non-test lines.
+fn metric_names(src: &str, skip_tests: bool) -> Vec<(String, usize)> {
+    let lines = lex(src);
+    let raw: Vec<&str> = src.lines().collect();
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for (i, text) in raw.iter().enumerate() {
+        if skip_tests && lines.get(i).is_some_and(|l| l.in_test) {
+            continue;
+        }
+        for at in boundary_matches(text, "singlequant_") {
+            let name: String = text[at..]
+                .chars()
+                .take_while(|&c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+                .collect();
+            let name = name.trim_end_matches('_').to_string();
+            if !out.iter().any(|(n, _)| *n == name) {
+                out.push((name, i + 1));
+            }
+        }
+    }
+    out
+}
+
+pub const CATALOGUE_BEGIN: &str = "sqlint:metric-catalogue:begin";
+pub const CATALOGUE_END: &str = "sqlint:metric-catalogue:end";
+
+/// Cross-check the names rendered by `coordinator/metrics.rs` against
+/// the catalogue block in DESIGN.md (between the `sqlint` markers),
+/// both directions. Quantile metrics also render a derived `_count`
+/// series at runtime; the catalogue lists base names only.
+pub fn lint_metric_names(metrics_src: &str, design_path: &str, design_md: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let begin = design_md.lines().position(|l| l.contains(CATALOGUE_BEGIN));
+    let end = design_md.lines().position(|l| l.contains(CATALOGUE_END));
+    let (Some(b), Some(e)) = (begin, end) else {
+        out.push(Finding {
+            rule: RULE_METRICS,
+            path: design_path.to_string(),
+            line: 1,
+            msg: format!("catalogue markers `{CATALOGUE_BEGIN}`/`{CATALOGUE_END}` not found"),
+        });
+        return out;
+    };
+    let catalogue_txt: String = design_md
+        .lines()
+        .take(e)
+        .skip(b + 1)
+        .collect::<Vec<_>>()
+        .join("\n");
+    let rendered = metric_names(metrics_src, true);
+    let listed = metric_names(&catalogue_txt, false);
+    for (name, line) in &rendered {
+        if !listed.iter().any(|(n, _)| n == name) {
+            out.push(Finding {
+                rule: RULE_METRICS,
+                path: "src/coordinator/metrics.rs".to_string(),
+                line: *line,
+                msg: format!("metric `{name}` is rendered but not in the DESIGN.md catalogue"),
+            });
+        }
+    }
+    for (name, line) in &listed {
+        if !rendered.iter().any(|(n, _)| n == name) {
+            out.push(Finding {
+                rule: RULE_METRICS,
+                path: design_path.to_string(),
+                line: b + 1 + *line,
+                msg: format!("catalogue lists `{name}` but metrics.rs no longer renders it"),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- envvar
+
+fn env_vars_in(text: &str) -> Vec<(String, usize)> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        for at in boundary_matches(line, "SQ_") {
+            let name: String = line[at..]
+                .chars()
+                .take_while(|&c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+                .collect();
+            let name = name.trim_end_matches('_').to_string();
+            if name.len() > 3 && !out.iter().any(|(n, _)| *n == name) {
+                out.push((name, i + 1));
+            }
+        }
+    }
+    out
+}
+
+/// Every `SQ_*` env var referenced by the CI workflow must appear in
+/// rust code (src/tests/benches/examples) — a renamed or removed knob
+/// must not leave CI silently exercising nothing.
+pub fn lint_env_vars(ci_path: &str, ci_src: &str, sources: &[(String, String)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (name, line) in env_vars_in(ci_src) {
+        let exists = sources.iter().any(|(_, text)| text.contains(&name));
+        if !exists {
+            out.push(Finding {
+                rule: RULE_ENVVAR,
+                path: ci_path.to_string(),
+                line,
+                msg: format!("env var `{name}` referenced by CI is read nowhere in the rust tree"),
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- top level
+
+fn scan_patterns(
+    path: &str,
+    lines: &[Line],
+    rule: &'static str,
+    patterns: &[&str],
+    what: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for pat in patterns {
+            if !boundary_matches(&line.code, pat).is_empty() && !suppressed(lines, i, rule) {
+                out.push(Finding {
+                    rule,
+                    path: path.to_string(),
+                    line: i + 1,
+                    msg: format!("`{pat}`: {what}"),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Run the per-file rules (`safety`, `thread`, `nondet`, `hotpath`) on
+/// one source file. `path` is relative to `rust/` with forward slashes
+/// (e.g. `src/kv/pool.rs`) — it selects each rule's scope.
+pub fn lint_rust_source(path: &str, src: &str) -> Vec<Finding> {
+    let lines = lex(src);
+    let mut out = check_safety(path, &lines);
+    out.extend(check_thread(path, &lines));
+    out.extend(check_nondet(path, &lines));
+    out.extend(check_hotpath(path, &lines));
+    out
+}
+
+/// Everything the whole-tree run needs, gathered by the caller (the
+/// binary walks the repo; the self-tests feed fixtures).
+#[derive(Default)]
+pub struct FileSet {
+    /// `(path relative to rust/, contents)` for every `.rs` file.
+    pub rust_files: Vec<(String, String)>,
+    /// `(display path, contents)` of the CI workflow.
+    pub ci_yml: Option<(String, String)>,
+    /// `(display path, contents)` of DESIGN.md.
+    pub design_md: Option<(String, String)>,
+}
+
+/// Gather the [`FileSet`] for a repo checkout: every `.rs` under
+/// `rust/{src,tests,benches,examples}` (the lint crate itself and build
+/// output are siblings, never walked), the CI workflow, and DESIGN.md.
+pub fn gather(root: &std::path::Path) -> std::io::Result<FileSet> {
+    let rust_root = root.join("rust");
+    let mut fs = FileSet::default();
+    for dir in ["src", "tests", "benches", "examples"] {
+        collect_rs(&rust_root, &rust_root.join(dir), &mut fs.rust_files)?;
+    }
+    fs.ci_yml = read_opt(root, ".github/workflows/ci.yml");
+    fs.design_md = read_opt(root, "DESIGN.md");
+    Ok(fs)
+}
+
+fn read_opt(root: &std::path::Path, rel: &str) -> Option<(String, String)> {
+    std::fs::read_to_string(root.join(rel)).ok().map(|text| (rel.to_string(), text))
+}
+
+fn collect_rs(
+    rust_root: &std::path::Path,
+    dir: &std::path::Path,
+    out: &mut Vec<(String, String)>,
+) -> std::io::Result<()> {
+    if !dir.exists() {
+        return Ok(());
+    }
+    let mut entries: Vec<std::path::PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(rust_root, &path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let rel = path
+                .strip_prefix(rust_root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, std::fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over a [`FileSet`].
+pub fn lint_all(fs: &FileSet) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (path, src) in &fs.rust_files {
+        out.extend(lint_rust_source(path, src));
+    }
+    let metrics_src = fs
+        .rust_files
+        .iter()
+        .find(|(p, _)| p == "src/coordinator/metrics.rs")
+        .map(|(_, s)| s.as_str());
+    if let (Some(metrics), Some((dp, design))) = (metrics_src, &fs.design_md) {
+        out.extend(lint_metric_names(metrics, dp, design));
+    }
+    if let Some((cp, ci)) = &fs.ci_yml {
+        out.extend(lint_env_vars(cp, ci, &fs.rust_files));
+    }
+    out.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    out
+}

@@ -1,0 +1,35 @@
+//! `cargo run -p sqlint` — lint the whole tree and exit non-zero on
+//! any finding. An optional argument overrides the repo root (the
+//! fixture self-tests exercise the library API instead).
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use sqlint::{gather, lint_all};
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        // lint/ lives at rust/lint — the repo root is two levels up
+        None => Path::new(env!("CARGO_MANIFEST_DIR")).join("../.."),
+    };
+    let fs = match gather(&root) {
+        Ok(fs) => fs,
+        Err(e) => {
+            eprintln!("sqlint: walking {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let n_files = fs.rust_files.len();
+    let findings = lint_all(&fs);
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg);
+    }
+    if findings.is_empty() {
+        println!("sqlint: {n_files} files clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("sqlint: {} finding(s) across {n_files} files", findings.len());
+        ExitCode::FAILURE
+    }
+}

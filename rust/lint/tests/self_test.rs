@@ -1,0 +1,170 @@
+//! sqlint self-tests: every rule trips on its deliberately-failing
+//! fixture, the suppression and scoping machinery behaves, and the
+//! real tree is clean (the test-suite twin of `cargo run -p sqlint`).
+
+use std::path::Path;
+
+use sqlint::{gather, lint_all, lint_env_vars, lint_metric_names, lint_rust_source, Finding};
+
+fn rules(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn safety_fixture_fails() {
+    let src = include_str!("../fixtures/fail_safety.rs");
+    let f = lint_rust_source("src/tensor/fixture.rs", src);
+    assert_eq!(rules(&f), vec!["safety"], "{f:?}");
+    assert_eq!(f[0].line, 4);
+}
+
+#[test]
+fn thread_fixture_fails_outside_pool_only() {
+    let src = include_str!("../fixtures/fail_thread.rs");
+    let f = lint_rust_source("src/coordinator/worker.rs", src);
+    assert_eq!(rules(&f), vec!["thread"], "{f:?}");
+    // the same source is legal inside the worker pool itself and in the
+    // HTTP layer's I/O threads
+    assert!(lint_rust_source("src/tensor/pool.rs", src).is_empty());
+    assert!(lint_rust_source("src/server/mod.rs", src).is_empty());
+}
+
+#[test]
+fn nondet_fixture_fails_outside_allowlist_only() {
+    let src = include_str!("../fixtures/fail_nondet.rs");
+    let f = lint_rust_source("src/pipeline/mod.rs", src);
+    assert_eq!(rules(&f), vec!["nondet"], "{f:?}");
+    for allowed in ["src/util/clock.rs", "src/util/bench.rs", "src/server/api.rs"] {
+        assert!(lint_rust_source(allowed, src).is_empty(), "{allowed}");
+    }
+}
+
+#[test]
+fn hotpath_fixture_fails_with_both_findings() {
+    let src = include_str!("../fixtures/fail_hotpath.rs");
+    let f = lint_rust_source("src/kv/fixture.rs", src);
+    assert_eq!(rules(&f), vec!["hotpath", "hotpath"], "{f:?}");
+    assert!(f[0].msg.contains("unwrap"), "{f:?}");
+    assert!(f[1].msg.contains("[0]"), "{f:?}");
+    // the same panics are fine outside the hot serving modules
+    assert!(lint_rust_source("src/pipeline/mod.rs", src).is_empty());
+}
+
+#[test]
+fn metrics_fixture_fails_both_directions() {
+    let code = include_str!("../fixtures/fail_metrics.rs");
+    let design = include_str!("../fixtures/fail_metrics_design.md");
+    let f = lint_metric_names(code, "DESIGN.md", design);
+    assert_eq!(rules(&f), vec!["metrics", "metrics"], "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("singlequant_bogus_total")), "{f:?}");
+    assert!(
+        f.iter().any(|x| x.msg.contains("singlequant_requests_completed_total")),
+        "{f:?}"
+    );
+}
+
+#[test]
+fn metrics_missing_catalogue_markers_is_a_finding() {
+    let code = include_str!("../fixtures/fail_metrics.rs");
+    let f = lint_metric_names(code, "DESIGN.md", "# no catalogue here\n");
+    assert_eq!(rules(&f), vec!["metrics"], "{f:?}");
+    assert!(f[0].msg.contains("markers"), "{f:?}");
+}
+
+#[test]
+fn env_fixture_fails_on_the_unread_var_only() {
+    let ci = include_str!("../fixtures/fail_env.yml");
+    let sources =
+        vec![("src/tensor/simd.rs".to_string(), "std::env::var(\"SQ_KERNEL\")".to_string())];
+    let f = lint_env_vars(".github/workflows/ci.yml", ci, &sources);
+    assert_eq!(rules(&f), vec!["envvar"], "{f:?}");
+    assert!(f[0].msg.contains("SQ_BOGUS_KNOB"), "{f:?}");
+}
+
+#[test]
+fn inline_suppression_silences_each_rule() {
+    let safety = "pub fn f(p: *const u8) -> u8 {\n    \
+                  // sqlint: allow(safety) — fixture exercises the marker\n    \
+                  unsafe { *p }\n}\n";
+    assert!(lint_rust_source("src/tensor/x.rs", safety).is_empty());
+    let hot = "pub fn g(v: &[u32]) -> u32 {\n    \
+               v.first().copied().unwrap() // sqlint: allow(hotpath) — fixture\n}\n";
+    assert!(lint_rust_source("src/kv/x.rs", hot).is_empty());
+    let nondet = "pub fn now() -> std::time::Instant {\n    \
+                  // sqlint: allow(nondet) — fixture\n    \
+                  std::time::Instant::now()\n}\n";
+    assert!(lint_rust_source("src/pipeline/x.rs", nondet).is_empty());
+}
+
+#[test]
+fn safety_accepts_comments_over_attributes_and_impl_groups() {
+    let src = "// SAFETY: caller upholds the avx2 contract\n\
+               #[target_feature(enable = \"avx2\")]\n\
+               pub unsafe fn tile() {}\n\
+               \n\
+               // SAFETY: both markers only ever hold Send data\n\
+               unsafe impl Send for X {}\n\
+               unsafe impl Sync for X {}\n";
+    assert!(lint_rust_source("src/tensor/x.rs", src).is_empty());
+}
+
+#[test]
+fn safety_accepts_comment_above_wrapped_assignment() {
+    let src = "pub fn f(p: *const u8) -> u8 {\n    \
+               // SAFETY: caller guarantees p is valid for reads\n    \
+               let v =\n        \
+               unsafe { *p };\n    v\n}\n";
+    assert!(lint_rust_source("src/tensor/x.rs", src).is_empty());
+}
+
+#[test]
+fn fn_pointer_types_are_not_unsafe_sites() {
+    let src = "pub struct Job {\n    run: unsafe fn(*const (), usize),\n}\n";
+    assert!(lint_rust_source("src/tensor/x.rs", src).is_empty());
+}
+
+#[test]
+fn cfg_test_modules_are_exempt_from_runtime_rules() {
+    let src = "pub fn ok() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+                   #[test]\n\
+                   fn t() {\n\
+                       let v = vec![1u32];\n\
+                       let _ = v.first().unwrap() + v[0];\n\
+                       let _ = std::time::Instant::now();\n\
+                       std::thread::spawn(|| {}).join().unwrap();\n\
+                   }\n\
+               }\n";
+    assert!(lint_rust_source("src/kv/x.rs", src).is_empty());
+}
+
+#[test]
+fn unwrap_family_lookalikes_are_not_flagged() {
+    let src = "pub fn f(v: &[u32]) -> u32 {\n    \
+               v.first().copied().unwrap_or(0) + v.first().copied().unwrap_or_default()\n}\n";
+    assert!(lint_rust_source("src/kv/x.rs", src).is_empty());
+}
+
+#[test]
+fn strings_and_comments_do_not_produce_findings() {
+    let src = "pub fn f() -> &'static str {\n    \
+               // mentions unwrap() and Instant::now and thread::spawn\n    \
+               \"unsafe { panic!(\\\"x[0]\\\") } Instant::now thread::spawn\"\n}\n";
+    assert!(lint_rust_source("src/kv/x.rs", src).is_empty(), "{:?}", {
+        lint_rust_source("src/kv/x.rs", src)
+    });
+}
+
+#[test]
+fn cleaned_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let fs = gather(&root).expect("walk repo");
+    assert!(fs.rust_files.len() > 80, "walker found {} files", fs.rust_files.len());
+    let findings = lint_all(&fs);
+    let listing: Vec<String> = findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg))
+        .collect();
+    assert!(findings.is_empty(), "tree has findings:\n{}", listing.join("\n"));
+}

@@ -34,6 +34,7 @@ use super::sampler::{sample, token_rng};
 use super::tokenizer::{decode as tok_decode, decode_stream, BOS, EOS, PAD};
 use crate::spec::DraftModel;
 use crate::tensor::Tensor;
+use crate::util::clock;
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -210,7 +211,7 @@ impl ServeEngine {
         self.queue.push_back(Queued {
             req,
             sink: None,
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
             resumed: Vec::new(),
             utf8_pending: Vec::new(),
         });
@@ -222,7 +223,7 @@ impl ServeEngine {
         self.queue.push_back(Queued {
             req,
             sink: Some(sink),
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
             resumed: Vec::new(),
             utf8_pending: Vec::new(),
         });
@@ -283,7 +284,7 @@ impl ServeEngine {
         self.queue.push_back(Queued {
             req,
             sink,
-            enqueued: Instant::now(),
+            enqueued: clock::now(),
             resumed: Vec::new(),
             utf8_pending: Vec::new(),
         });
@@ -308,12 +309,12 @@ impl ServeEngine {
     /// Returns every event of the tick in emission order.
     pub fn step(&mut self) -> Result<Vec<TokenEvent>> {
         if self.started.is_none() {
-            self.started = Some(Instant::now());
+            self.started = Some(clock::now());
         }
         let mut events = Vec::new();
 
         // ---- expire queued requests whose deadline already passed ---------
-        let now = Instant::now();
+        let now = clock::now();
         if self
             .queue
             .iter()
@@ -411,13 +412,13 @@ impl ServeEngine {
                 {
                     tokens[slot * t + j] = tok as i32;
                 }
-                let now = Instant::now();
+                let now = clock::now();
                 if fresh {
                     self.metrics
                         .queue_wait
                         .record(now.duration_since(q.enqueued).as_secs_f64());
                 }
-                self.slots[slot] = Some(InFlight {
+                let mut inf = InFlight {
                     enqueued: q.enqueued,
                     admitted: now,
                     first_token: None,
@@ -428,17 +429,17 @@ impl ServeEngine {
                     cancelled: false,
                     utf8_pending: q.utf8_pending,
                     req: q.req,
-                });
-                let inf = self.slots[slot].as_mut().unwrap();
-                let id = inf.req.id;
+                };
                 if fresh {
                     // a replayed request already announced itself
-                    emit(inf, &mut events, TokenEvent::Started { id });
+                    let id = inf.req.id;
+                    emit(&mut inf, &mut events, TokenEvent::Started { id });
                 }
+                self.slots[slot] = Some(inf);
                 admitted.push(slot);
             }
             if !admitted.is_empty() {
-                let t0 = Instant::now();
+                let t0 = clock::now();
                 let logits = self.backend.prefill(&tokens, &admitted)?;
                 let dt = t0.elapsed().as_secs_f64();
                 self.metrics.prefill_call.record(dt);
@@ -447,7 +448,7 @@ impl ServeEngine {
                 let v = self.limits.vocab_size;
                 let seed = self.cfg.seed;
                 for &slot in &admitted {
-                    let inf = self.slots[slot].as_mut().unwrap();
+                    let Some(inf) = self.slots[slot].as_mut() else { continue };
                     // replayed tokens are part of the prefill, so the
                     // next token is sampled at the combined last index —
                     // and, by the positional RNG, with the exact stream
@@ -458,7 +459,7 @@ impl ServeEngine {
                     let index = inf.generated.len();
                     let row = row3(&logits, slot, plen - 1, v);
                     let tok = sample(&mut token_rng(seed, id, index), row, temperature);
-                    inf.first_token = Some(Instant::now());
+                    inf.first_token = Some(clock::now());
                     inf.generated.push(tok);
                     inf.last_token = tok;
                     inf.pos = plen;
@@ -471,7 +472,7 @@ impl ServeEngine {
                     }
                 }
                 // retire single-token completions immediately
-                let now = Instant::now();
+                let now = clock::now();
                 for &slot in &admitted {
                     self.maybe_retire(slot, now, &mut events);
                 }
@@ -479,7 +480,7 @@ impl ServeEngine {
         }
 
         // ---- deadline / cancel sweep (before burning a decode wave) -------
-        let now = Instant::now();
+        let now = clock::now();
         for slot in 0..self.limits.batch {
             if self.slots[slot].is_some() {
                 self.maybe_retire(slot, now, &mut events);
@@ -496,12 +497,15 @@ impl ServeEngine {
             let mut order: Vec<usize> = (0..self.limits.batch)
                 .filter(|&i| self.slots[i].is_some())
                 .collect();
-            order.sort_by_key(|&i| self.slots[i].as_ref().unwrap().enqueued);
+            // `Option<Instant>` orders None first, and the filter above
+            // guarantees Some — no panicking accessor needed
+            order.sort_by_key(|&i| self.slots[i].as_ref().map(|inf| inf.enqueued));
             for &slot in &order {
                 while self.slots[slot].is_some() && !self.backend.kv_reserve(slot, 1) {
-                    let victim = self
-                        .pick_victim()
-                        .expect("an active slot exists while reserving");
+                    // an active slot always exists here (this one is);
+                    // if the victim search still comes up empty, stop
+                    // evicting rather than aborting the engine
+                    let Some(victim) = self.pick_victim() else { break };
                     self.preempt(victim, &mut events);
                     // if `slot` itself was the victim the loop exits via
                     // the is_some() guard
@@ -517,7 +521,7 @@ impl ServeEngine {
                 self.decode_wave(&mut events)?;
             }
             // retirement frees capacity within the same tick
-            let now = Instant::now();
+            let now = clock::now();
             for i in 0..self.limits.batch {
                 if self.slots[i].is_some() {
                     self.maybe_retire(i, now, &mut events);
@@ -530,7 +534,7 @@ impl ServeEngine {
             self.metrics.kv_pages_used = pool.pages_used();
         }
         self.metrics.pool_queue_depth = crate::tensor::pool::global_queue_depth();
-        self.metrics.wall_s = self.started.unwrap().elapsed().as_secs_f64();
+        self.metrics.wall_s = self.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
         Ok(events)
     }
 
@@ -545,7 +549,7 @@ impl ServeEngine {
                 pos[i] = inf.pos as i32;
             }
         }
-        let t0 = Instant::now();
+        let t0 = clock::now();
         let logits = self.backend.decode(&toks, &pos)?;
         let wave = t0.elapsed().as_secs_f64();
         self.metrics.decode_step.record(wave);
@@ -593,7 +597,12 @@ impl ServeEngine {
     /// preserving the batcher's reserve/preempt guarantees.
     fn spec_decode_wave(&mut self, events: &mut Vec<TokenEvent>) -> Result<()> {
         let b = self.limits.batch;
-        let k = self.spec.as_ref().unwrap().k;
+        let k = match &self.spec {
+            Some(spec) => spec.k,
+            // only reachable with speculation enabled; degrade to the
+            // plain wave rather than panicking if that ever changes
+            None => return self.decode_wave(events),
+        };
         let mut bursts: Vec<Vec<u16>> = vec![Vec::new(); b];
         let mut pos = vec![0i32; b];
         for i in 0..b {
@@ -614,24 +623,26 @@ impl ServeEngine {
                     .chain(inf.generated.iter())
                     .copied()
                     .collect();
-                let spec = self.spec.as_mut().unwrap();
-                for d in spec.draft.propose(i, &ctx, want).into_iter().take(want) {
-                    // a token the verifier could never accept (the
-                    // sampler masks PAD/BOS) or the model cannot ingest
-                    // ends the proposal run; nothing can follow EOS
-                    if d == PAD || d == BOS || d as usize >= self.limits.vocab_size {
-                        break;
-                    }
-                    burst.push(d);
-                    if d == EOS {
-                        break;
+                if let Some(spec) = self.spec.as_mut() {
+                    for d in spec.draft.propose(i, &ctx, want).into_iter().take(want) {
+                        // a token the verifier could never accept (the
+                        // sampler masks PAD/BOS) or the model cannot
+                        // ingest ends the proposal run; nothing can
+                        // follow EOS
+                        if d == PAD || d == BOS || d as usize >= self.limits.vocab_size {
+                            break;
+                        }
+                        burst.push(d);
+                        if d == EOS {
+                            break;
+                        }
                     }
                 }
             }
             bursts[i] = burst;
         }
 
-        let t0 = Instant::now();
+        let t0 = clock::now();
         let results = self.backend.decode_burst(&bursts, &pos)?;
         let wave = t0.elapsed().as_secs_f64();
         self.metrics.decode_step.record(wave);
@@ -641,7 +652,7 @@ impl ServeEngine {
         for i in 0..b {
             let Some(rows) = &results[i] else { continue };
             let Some(inf) = self.slots[i].as_mut() else { continue };
-            let l = rows.shape()[0];
+            let l = rows.rows();
             debug_assert!(
                 l >= 1 && l <= bursts[i].len(),
                 "burst result rows out of range"
@@ -691,8 +702,9 @@ impl ServeEngine {
     /// correct (it requeues at the front and re-admits first).
     fn pick_victim(&self) -> Option<usize> {
         (0..self.limits.batch)
-            .filter(|&i| self.slots[i].is_some())
-            .max_by_key(|&i| (self.slots[i].as_ref().unwrap().enqueued, i))
+            .filter_map(|i| self.slots[i].as_ref().map(|inf| (inf.enqueued, i)))
+            .max()
+            .map(|(_, i)| i)
     }
 
     /// Evict `slot` to relieve KV pressure. Replayable requests (prompt
@@ -702,16 +714,16 @@ impl ServeEngine {
     /// A request that outgrew the window finishes gracefully with the
     /// partial output instead.
     fn preempt(&mut self, slot: usize, events: &mut Vec<TokenEvent>) {
+        // preempting an empty slot is a scheduler bug, but never worth
+        // an engine abort — there is simply nothing to evict
+        let Some(inf) = self.slots[slot].take() else { return };
         self.metrics.preemptions += 1;
-        let plen_total = {
-            let inf = self.slots[slot].as_ref().expect("preempt of empty slot");
-            inf.req.prompt_tokens.len() + inf.generated.len()
-        };
+        let plen_total = inf.req.prompt_tokens.len() + inf.generated.len();
         if plen_total > self.limits.score_seq {
+            self.slots[slot] = Some(inf);
             self.retire(slot, FinishReason::Length, events);
             return;
         }
-        let inf = self.slots[slot].take().unwrap();
         self.backend.retire(slot);
         if let Some(spec) = &mut self.spec {
             spec.draft.retire(slot);
@@ -761,12 +773,13 @@ impl ServeEngine {
     }
 
     fn retire(&mut self, slot: usize, reason: FinishReason, events: &mut Vec<TokenEvent>) {
-        let inf = self.slots[slot].take().unwrap();
+        // retiring an already-empty slot is a no-op, not a panic
+        let Some(inf) = self.slots[slot].take() else { return };
         self.backend.retire(slot);
         if let Some(spec) = &mut self.spec {
             spec.draft.retire(slot);
         }
-        let now = Instant::now();
+        let now = clock::now();
         let ttft = inf
             .first_token
             .map(|t| t.duration_since(inf.admitted).as_secs_f64())
@@ -855,7 +868,13 @@ impl ServeEngine {
 }
 
 fn row3<'a>(t: &'a Tensor, i: usize, j: usize, v: usize) -> &'a [f32] {
-    let rows = t.shape()[1];
+    let rows = match t.shape() {
+        [_, rows, _] => *rows,
+        s => {
+            debug_assert!(false, "prefill logits must be rank 3, got {s:?}");
+            j + 1
+        }
+    };
     let base = (i * rows + j) * v;
     &t.data()[base..base + v]
 }
@@ -992,7 +1011,7 @@ mod tests {
         let mut e = engine(1);
         // deadline already in the past
         let mut req = Request::new(0, vec![1, 2]).with_max_new(4);
-        req.deadline = Some(Instant::now() - Duration::from_millis(1));
+        req.deadline = Some(clock::now() - Duration::from_millis(1));
         let (tx, rx) = channel();
         e.submit_streaming(req, tx);
         let evs = e.step().unwrap();

@@ -5,6 +5,7 @@ use std::time::{Duration, Instant};
 
 use super::events::{FinishReason, TokenEvent};
 use super::tokenizer;
+use crate::util::clock;
 
 /// Sampling temperatures are clamped into this range once, at admission
 /// (`ServeEngine::try_submit`/`submit`), never per sample call.
@@ -51,7 +52,7 @@ impl Request {
     }
 
     pub fn with_deadline_in(mut self, d: Duration) -> Request {
-        self.deadline = Some(Instant::now() + d);
+        self.deadline = Some(clock::now() + d);
         self
     }
 

@@ -37,7 +37,7 @@ pub fn run_tradeoff(ctx: &ExpContext) -> Result<Vec<Table>> {
     for (label, method) in &methods {
         let opts = PipelineOptions { method: method.clone(), ..Default::default() };
         // quant time (single run here; Table 7 has the repeated-run version)
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::now();
         let _ = quantize(&cfg, &weights, &calib, &opts)?;
         let qt = t0.elapsed().as_secs_f64();
         let runner = ctx.runner(MODEL, &opts)?;

@@ -41,7 +41,7 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<Table>> {
             let opts = PipelineOptions { method: method.clone(), ..Default::default() };
             let mut total = 0.0f64;
             for _ in 0..n {
-                let t0 = std::time::Instant::now();
+                let t0 = crate::util::clock::now();
                 let qm = quantize(&cfg, &weights, &calib, &opts)?;
                 std::hint::black_box(&qm.rots);
                 total += t0.elapsed().as_secs_f64();

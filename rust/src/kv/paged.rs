@@ -78,6 +78,10 @@ impl PageTable {
         let page = *self
             .pages
             .get(pos / page_tokens)
+            // Internal invariant, never request-shaped input: callers
+            // reserve before touching a position, so a miss is a code
+            // bug in this module and aborting is correct.
+            // sqlint: allow(hotpath) — invariant violation is a code bug
             .expect("kv position outside reserved pages");
         (page, pos % page_tokens)
     }

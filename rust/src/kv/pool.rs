@@ -19,6 +19,11 @@ pub struct BlockPool {
     /// Free page indices; top of the stack is handed out next.
     free: Vec<u32>,
     pages: usize,
+    /// Pages currently handed out; `free.len() + outstanding == pages`
+    /// is the conservation law `audit_conservation` re-checks after
+    /// every wave, retire, truncate, and preemption.
+    #[cfg(feature = "audit")]
+    outstanding: usize,
 }
 
 impl BlockPool {
@@ -38,6 +43,8 @@ impl BlockPool {
             // makes pool traces easy to read)
             free: (0..pages as u32).rev().collect(),
             pages,
+            #[cfg(feature = "audit")]
+            outstanding: 0,
         }
     }
 
@@ -78,8 +85,13 @@ impl BlockPool {
         if self.free.len() < n {
             return Err(KvError::PoolExhausted { needed: n, free: self.free.len() });
         }
-        for _ in 0..n {
-            out.push(self.free.pop().expect("free list length checked above"));
+        // Same hand-out order as n pops off the top of the stack, but
+        // with no panicking path: drain the tail and reverse it.
+        let start = self.free.len() - n;
+        out.extend(self.free.drain(start..).rev());
+        #[cfg(feature = "audit")]
+        {
+            self.outstanding += n;
         }
         Ok(())
     }
@@ -89,6 +101,34 @@ impl BlockPool {
         debug_assert!((page as usize) < self.pages, "release of foreign page");
         debug_assert!(!self.free.contains(&page), "double free of page {page}");
         self.free.push(page);
+        #[cfg(feature = "audit")]
+        {
+            assert!(self.outstanding > 0, "audit: release with no outstanding pages");
+            self.outstanding -= 1;
+        }
+    }
+
+    /// Conservation auditor (audit builds only): every page is either
+    /// free or outstanding, the free list holds no duplicates, and no
+    /// entry points outside the arena. Called by the runtime after
+    /// every decode/spec wave, retire, truncate, and preemption.
+    #[cfg(feature = "audit")]
+    pub fn audit_conservation(&self) {
+        assert_eq!(
+            self.free.len() + self.outstanding,
+            self.pages,
+            "audit: page conservation violated (free {} + outstanding {} != total {})",
+            self.free.len(),
+            self.outstanding,
+            self.pages
+        );
+        let mut seen = vec![false; self.pages];
+        for &p in &self.free {
+            let p = p as usize;
+            assert!(p < self.pages, "audit: free list holds foreign page {p}");
+            assert!(!seen[p], "audit: free list holds page {p} twice");
+            seen[p] = true;
+        }
     }
 
     #[inline]

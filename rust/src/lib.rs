@@ -23,6 +23,14 @@
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `singlequant` binary is self-contained.
+//!
+//! Unsafe discipline: every unsafe operation needs an explicit block
+//! with its own `// SAFETY:` justification even inside `unsafe fn`
+//! (enforced below), and `cargo run -p sqlint` checks the comments —
+//! plus the thread, determinism, and hot-path-panic contracts — as a
+//! blocking CI step. See DESIGN.md "Static analysis & audit".
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod analysis;
 pub mod calib;

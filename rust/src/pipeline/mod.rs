@@ -12,7 +12,6 @@
 pub mod fold;
 
 use std::collections::BTreeMap;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -34,6 +33,7 @@ use crate::rotation::singlequant::{
     build_site_rotation, SingleQuantConfig, SiteProfile, SiteRotation,
 };
 use crate::tensor::Tensor;
+use crate::util::clock;
 
 /// Pre-quantization transform selection (the rows of Tables 1–6).
 #[derive(Clone, Debug)]
@@ -199,7 +199,7 @@ pub fn quantize(
     }
 
     // ---- 1. single calibration pass ---------------------------------------
-    let t0 = Instant::now();
+    let t0 = clock::now();
     let seqs = calib_sequences(calib_tokens, opts.calib_seqs, opts.calib_len, opts.seed);
     let need_hessian = matches!(
         opts.weight_quantizer,
@@ -210,7 +210,7 @@ pub fn quantize(
     let calib_seconds = t0.elapsed().as_secs_f64();
 
     // ---- 2. scale folds (SmoothQuant / AWQ) --------------------------------
-    let t1 = Instant::now();
+    let t1 = clock::now();
     let mut w = weights.clone();
     match &opts.method {
         Method::SmoothQuant { alpha } => {
@@ -268,7 +268,7 @@ pub fn quantize(
     let transform_seconds = t1.elapsed().as_secs_f64();
 
     // ---- 4. rotate + quantize weights; clip search --------------------------
-    let t2 = Instant::now();
+    let t2 = clock::now();
     let mut clips: BTreeMap<String, f32> = BTreeMap::new();
     let mut packed_bytes = 0usize;
     for layer in 0..cfg.n_layers {

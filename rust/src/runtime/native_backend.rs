@@ -136,9 +136,12 @@ impl NativeBackend {
         // serial ascending-slot write-back
         let mut out: Vec<Option<Tensor>> = (0..batch).map(|_| None).collect();
         for &slot in active {
+            // the scan above guarantees Some(Ok); an engine abort is
+            // never the right answer on the serving path, so a broken
+            // invariant surfaces as a wave error instead
             let (rows_t, rows) = match waves[slot].take() {
                 Some(Ok(x)) => x,
-                _ => unreachable!("scanned above"),
+                _ => return Err(anyhow!("decode wave lost slot {slot} after scan")),
             };
             match &mut self.kv {
                 KvSlots::Contig(slots) => rows.commit(&mut slots[slot]),
@@ -157,6 +160,24 @@ impl NativeBackend {
         match &self.kv {
             KvSlots::Contig(slots) => slots[slot].pos,
             KvSlots::Paged { tables, .. } => tables[slot].pos(),
+        }
+    }
+
+    /// Audit builds: page conservation inside the pool, plus the
+    /// backend-level law that the slot tables collectively hold exactly
+    /// the pages the pool says are out. Runs after every prefill,
+    /// decode/spec wave, truncate, and retire.
+    #[cfg(feature = "audit")]
+    fn audit_kv(&self) {
+        if let KvSlots::Paged { pool, tables } = &self.kv {
+            pool.audit_conservation();
+            let held: usize = tables.iter().map(|t| t.n_pages()).sum();
+            assert_eq!(
+                held,
+                pool.pages_used(),
+                "audit: slot tables hold {held} pages but the pool has {} out",
+                pool.pages_used()
+            );
         }
     }
 }
@@ -237,6 +258,8 @@ impl ServeBackend for NativeBackend {
                 logits.data_mut()[base..base + v].copy_from_slice(lg.row(p));
             }
         }
+        #[cfg(feature = "audit")]
+        self.audit_kv();
         Ok(logits)
     }
 
@@ -275,10 +298,16 @@ impl ServeBackend for NativeBackend {
             .collect();
         let rows = self.wave_and_commit(&active, &bursts)?;
         for &slot in &active {
-            let rows_t = rows[slot].as_ref().expect("active slot has rows");
+            // wave_and_commit fills every active slot; treat a hole as
+            // a wave error rather than aborting the engine
+            let Some(rows_t) = rows[slot].as_ref() else {
+                return Err(anyhow!("decode wave returned no rows for slot {slot}"));
+            };
             logits.data_mut()[slot * v..(slot + 1) * v]
                 .copy_from_slice(rows_t.row(0));
         }
+        #[cfg(feature = "audit")]
+        self.audit_kv();
         Ok(logits)
     }
 
@@ -324,7 +353,10 @@ impl ServeBackend for NativeBackend {
                     .map_err(anyhow::Error::new)?;
             }
         }
-        self.wave_and_commit(&active, &clamped)
+        let out = self.wave_and_commit(&active, &clamped);
+        #[cfg(feature = "audit")]
+        self.audit_kv();
+        out
     }
 
     fn kv_truncate(&mut self, slot: usize, n: usize) {
@@ -340,6 +372,8 @@ impl ServeBackend for NativeBackend {
                 }
             }
         }
+        #[cfg(feature = "audit")]
+        self.audit_kv();
     }
 
     fn supports_speculative(&self) -> bool {
@@ -359,6 +393,8 @@ impl ServeBackend for NativeBackend {
                 }
             }
         }
+        #[cfg(feature = "audit")]
+        self.audit_kv();
     }
 
     fn kv_pool(&self) -> Option<KvPoolStatus> {

@@ -59,6 +59,11 @@ struct Job {
     next: AtomicUsize,
     done: AtomicUsize,
     panicked: AtomicBool,
+    /// `--features audit`: exactly-once chunk-claim bitmap. The atomic
+    /// claim cursor makes double-claims impossible by construction;
+    /// this witnesses that construction against future refactors.
+    #[cfg(feature = "audit")]
+    claimed: Vec<AtomicBool>,
 }
 
 // SAFETY: `data` points at a `Sync` closure that outlives every chunk
@@ -69,8 +74,13 @@ unsafe impl Sync for Job {}
 
 /// Monomorphized trampoline erasing the closure type behind a fn
 /// pointer, so `Job` needs no generics or allocation per closure.
+///
+/// SAFETY: `data` must point at a live `F` for the whole call — upheld
+/// because the posting caller blocks in `run` until `done == chunks`.
 unsafe fn shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
-    (*(data as *const F))(i)
+    // SAFETY: `data` was erased from `&F` by `run`, which keeps the
+    // closure alive on its stack until every chunk has finished.
+    unsafe { (*(data as *const F))(i) }
 }
 
 #[derive(Default)]
@@ -170,6 +180,8 @@ impl WorkerPool {
             next: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             panicked: AtomicBool::new(false),
+            #[cfg(feature = "audit")]
+            claimed: (0..chunks).map(|_| AtomicBool::new(false)).collect(),
         });
         self.shared.depth.store(chunks, Ordering::Relaxed);
         self.shared.jobs.fetch_add(1, Ordering::Relaxed);
@@ -192,6 +204,13 @@ impl WorkerPool {
             post.job = None;
         }
         drop(post);
+        #[cfg(feature = "audit")]
+        {
+            assert_eq!(job.done.load(Ordering::SeqCst), job.chunks, "audit: done over-counted");
+            for (i, c) in job.claimed.iter().enumerate() {
+                assert!(c.load(Ordering::SeqCst), "audit: chunk {i} completed but never claimed");
+            }
+        }
         if job.panicked.load(Ordering::SeqCst) {
             panic!("worker pool job panicked");
         }
@@ -218,6 +237,8 @@ fn work_chunks(job: &Job, shared: &Shared) {
         if i >= job.chunks {
             return;
         }
+        #[cfg(feature = "audit")]
+        assert!(!job.claimed[i].swap(true, Ordering::SeqCst), "audit: chunk {i} claimed twice");
         // SAFETY: `data` outlives every chunk execution (see Job docs).
         let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (job.run)(job.data, i) })).is_ok();
         if !ok {
@@ -246,6 +267,10 @@ fn worker(shared: Arc<Shared>) {
                     return;
                 }
                 if post.epoch != seen {
+                    // epochs only ever increment under the post lock; a
+                    // worker observing one go backwards means torn state
+                    #[cfg(feature = "audit")]
+                    assert!(post.epoch > seen, "audit: job epoch went backwards");
                     seen = post.epoch;
                     break post.job.clone();
                 }
@@ -255,6 +280,24 @@ fn worker(shared: Arc<Shared>) {
         if let Some(job) = job {
             work_chunks(&job, &shared);
         }
+    }
+}
+
+/// Deterministic virtual scheduler (tests and `audit` builds): execute
+/// a job's chunks inline in a caller-chosen claim order, with the same
+/// exactly-once accounting as the live dispatcher. Real chunk→worker
+/// assignment is racy, but every interleaving the race can produce is
+/// some permutation of chunk claims — so if every permutation yields
+/// bit-identical output, the computation cannot depend on scheduling.
+#[cfg(any(test, feature = "audit"))]
+pub fn run_virtual<F: Fn(usize) + Sync>(order: &[usize], f: F) {
+    let chunks = order.len();
+    let mut claimed = vec![false; chunks];
+    for &i in order {
+        assert!(i < chunks, "virtual schedule claims out-of-range chunk {i}");
+        assert!(!claimed[i], "virtual schedule claims chunk {i} twice");
+        claimed[i] = true;
+        f(i);
     }
 }
 
@@ -352,6 +395,44 @@ mod tests {
         });
         assert_eq!(a.load(Ordering::SeqCst), 20 * 16);
         assert_eq!(b.load(Ordering::SeqCst), 20 * 16);
+    }
+
+    /// The claim-order invariance contract, checked exhaustively-ish:
+    /// the same disjoint-region job run under several permuted virtual
+    /// schedules and under the live racy pool must produce bit-identical
+    /// buffers. A chunk body that secretly depended on claim order (a
+    /// shared running accumulator, an order-sensitive write) fails here
+    /// deterministically instead of flaking under the real scheduler.
+    #[test]
+    fn virtual_scheduler_permutations_match_live_pool() {
+        use crate::util::rng::Rng;
+        let chunks = 13usize;
+        let per = 7usize;
+        let fill = |buf: SendPtr<f32>, i: usize| {
+            // SAFETY: chunk i writes only its own disjoint `per`-slice,
+            // and the buffer outlives the run call.
+            let dst = unsafe { std::slice::from_raw_parts_mut(buf.get().add(i * per), per) };
+            for (k, d) in dst.iter_mut().enumerate() {
+                *d = ((i * per + k) as f32).sin() * 0.5 + i as f32;
+            }
+        };
+        let mut reference = vec![0.0f32; chunks * per];
+        let ptr = SendPtr::new(reference.as_mut_ptr());
+        let order: Vec<usize> = (0..chunks).collect();
+        run_virtual(&order, |i| fill(ptr, i));
+        let mut rng = Rng::new(42);
+        for _ in 0..8 {
+            let order = rng.permutation(chunks);
+            let mut out = vec![0.0f32; chunks * per];
+            let ptr = SendPtr::new(out.as_mut_ptr());
+            run_virtual(&order, |i| fill(ptr, i));
+            assert_eq!(out, reference, "claim order {order:?} changed the output");
+        }
+        let pool = WorkerPool::new(4);
+        let mut live = vec![0.0f32; chunks * per];
+        let ptr = SendPtr::new(live.as_mut_ptr());
+        pool.run(chunks, |i| fill(ptr, i));
+        assert_eq!(live, reference, "live pool diverged from the virtual schedule");
     }
 
     #[test]

@@ -118,6 +118,10 @@ pub(crate) fn f32_tile(
     j1: usize,
     out: &mut [f32],
 ) {
+    // the dense kernel accumulates into `out`, so the shadow pass must
+    // replay from the same starting contents
+    #[cfg(feature = "audit")]
+    let before: Vec<f32> = if kernel == Kernel::Scalar { Vec::new() } else { out.to_vec() };
     match kernel {
         Kernel::Scalar => scalar::f32_tile(a, b, i0, i1, j0, j1, out),
         #[cfg(target_arch = "x86_64")]
@@ -127,6 +131,8 @@ pub(crate) fn f32_tile(
         // SAFETY: Kernel::Neon is only constructed after runtime detection.
         Kernel::Neon => unsafe { neon::f32_tile(a, b, i0, i1, j0, j1, out) },
     }
+    #[cfg(feature = "audit")]
+    audit::shadow_f32_tile(kernel, a, b, i0, i1, j0, j1, &before, out);
 }
 
 /// Packed tile: rows `i0..i1` × cols `c0..c1` of A·dequant(W) with the
@@ -149,6 +155,80 @@ pub(crate) fn packed_tile(
         #[cfg(target_arch = "aarch64")]
         // SAFETY: Kernel::Neon is only constructed after runtime detection.
         Kernel::Neon => unsafe { neon::packed_tile(a, w, i0, i1, c0, c1, out) },
+    }
+    #[cfg(feature = "audit")]
+    audit::shadow_packed_tile(kernel, a, w, i0, i1, c0, c1, out);
+}
+
+/// Shadow execution (`--features audit`): every vector tile that the
+/// unsafe kernels produce is recomputed with the scalar reference at
+/// call granularity and compared — bit-exact for the dense path (whose
+/// contract *is* bit-equality), within the 1e-4 dequant tolerance for
+/// the packed path (whose fixed hsum tree reassociates the group sum).
+/// A divergence panics with the tile coordinates; the audit build is a
+/// debugging harness, not a serving configuration.
+#[cfg(feature = "audit")]
+pub(crate) mod audit {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::{scalar, Kernel, RepackedWeight, Tensor};
+
+    /// Vector tiles cross-checked so far (tests assert this advances).
+    pub static TILES_CHECKED: AtomicUsize = AtomicUsize::new(0);
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn shadow_f32_tile(
+        kernel: Kernel,
+        a: &Tensor,
+        b: &Tensor,
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        before: &[f32],
+        got: &[f32],
+    ) {
+        if kernel == Kernel::Scalar {
+            return;
+        }
+        let mut want = before.to_vec();
+        scalar::f32_tile(a, b, i0, i1, j0, j1, &mut want);
+        for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                g.to_bits() == w.to_bits(),
+                "audit: dense tile ({}) diverged from scalar at flat {idx} \
+                 (rows {i0}..{i1}, cols {j0}..{j1}): {g:e} vs {w:e}",
+                kernel.label()
+            );
+        }
+        TILES_CHECKED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn shadow_packed_tile(
+        kernel: Kernel,
+        a: &Tensor,
+        w: &RepackedWeight,
+        i0: usize,
+        i1: usize,
+        c0: usize,
+        c1: usize,
+        got: &[f32],
+    ) {
+        if kernel == Kernel::Scalar {
+            return;
+        }
+        let mut want = vec![0.0f32; got.len()];
+        scalar::packed_tile(a, w, i0, i1, c0, c1, &mut want);
+        for (idx, (g, want)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "audit: packed tile ({}) diverged from scalar at flat {idx} \
+                 (rows {i0}..{i1}, cols {c0}..{c1}): {g:e} vs {want:e}",
+                kernel.label()
+            );
+        }
+        TILES_CHECKED.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -254,17 +334,26 @@ mod avx2 {
 
     /// Fixed pairwise reduction tree: (l0+l4)+(l2+l6) + ((l1+l5)+(l3+l7))
     /// — the same order on every call, so group sums are deterministic.
+    ///
+    /// SAFETY: caller must hold the runtime AVX2 witness (`Kernel::Avx2`
+    /// is only constructed after detection).
     #[target_feature(enable = "avx2")]
     unsafe fn hsum8(v: __m256) -> f32 {
-        let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
-        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-        let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
-        _mm_cvtss_f32(s)
+        // SAFETY: pure register ops on the owned vector; no memory access.
+        unsafe {
+            let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+            let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+            let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+            _mm_cvtss_f32(s)
+        }
     }
 
     /// Vectorized across output columns `j` only: each column keeps its
     /// own accumulator performing the identical `mul` then `add` the
     /// scalar loop does (no FMA), so results are bit-equal to scalar.
+    ///
+    /// SAFETY: caller must hold the runtime AVX2 witness (`Kernel::Avx2`
+    /// is only constructed after detection).
     #[target_feature(enable = "avx2")]
     pub unsafe fn f32_tile(
         a: &Tensor,
@@ -275,38 +364,45 @@ mod avx2 {
         j1: usize,
         out: &mut [f32],
     ) {
-        let w = j1 - j0;
-        for i in i0..i1 {
-            let arow = a.row(i);
-            let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
-            let mut t0 = j0;
-            while t0 < j1 {
-                let t1 = (t0 + NC).min(j1);
-                let dst = &mut orow[t0 - j0..t1 - j0];
-                for (kk, &av) in arow.iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
+        // SAFETY: unaligned loads/stores stay inside `dst`/`brow` — the
+        // vector loop runs only while `j + 8 <= dst.len()` and both
+        // slices are `t1 - t0` long; everything else is safe slice code.
+        unsafe {
+            let w = j1 - j0;
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
+                let mut t0 = j0;
+                while t0 < j1 {
+                    let t1 = (t0 + NC).min(j1);
+                    let dst = &mut orow[t0 - j0..t1 - j0];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.row(kk)[t0..t1];
+                        let va = _mm256_set1_ps(av);
+                        let mut j = 0usize;
+                        while j + 8 <= dst.len() {
+                            let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+                            let bb = _mm256_loadu_ps(brow.as_ptr().add(j));
+                            let p = _mm256_mul_ps(va, bb);
+                            _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_add_ps(d, p));
+                            j += 8;
+                        }
+                        while j < dst.len() {
+                            dst[j] += av * brow[j];
+                            j += 1;
+                        }
                     }
-                    let brow = &b.row(kk)[t0..t1];
-                    let va = _mm256_set1_ps(av);
-                    let mut j = 0usize;
-                    while j + 8 <= dst.len() {
-                        let d = _mm256_loadu_ps(dst.as_ptr().add(j));
-                        let bb = _mm256_loadu_ps(brow.as_ptr().add(j));
-                        let p = _mm256_mul_ps(va, bb);
-                        _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_add_ps(d, p));
-                        j += 8;
-                    }
-                    while j < dst.len() {
-                        dst[j] += av * brow[j];
-                        j += 1;
-                    }
+                    t0 = t1;
                 }
-                t0 = t1;
             }
         }
     }
 
+    /// SAFETY: caller must hold the runtime AVX2 witness (`Kernel::Avx2`
+    /// is only constructed after detection).
     #[target_feature(enable = "avx2")]
     pub unsafe fn packed_tile(
         a: &Tensor,
@@ -317,72 +413,80 @@ mod avx2 {
         c1: usize,
         out: &mut [f32],
     ) {
-        let width = c1 - c0;
-        let k = w.rows;
-        let group = w.group;
-        let off = w.nibble_offset();
-        let nibble = w.bits <= 4;
-        let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
-        let mask = _mm256_set1_epi32(0x0F);
-        let voff = _mm256_set1_epi32(off);
-        for i in i0..i1 {
-            let arow = a.row(i);
-            let orow = &mut out[(i - i0) * width..(i - i0 + 1) * width];
-            for c in c0..c1 {
-                let codes = w.col_codes(c);
-                let scales = w.col_scales(c);
-                let mut total = 0.0f32;
-                let mut k0 = 0usize;
-                let mut g = 0usize;
-                while k0 < k {
-                    let k1 = (k0 + group).min(k);
-                    let mut acc = 0.0f32;
-                    let mut vacc = _mm256_setzero_ps();
-                    let mut kk = k0;
-                    if nibble {
-                        if kk % 2 == 1 && kk < k1 {
-                            // align to an even code so u32 loads start on a byte
-                            let u = codes[kk / 2] >> 4;
-                            acc += arow[kk] * (u as i32 - off) as f32;
-                            kk += 1;
+        // SAFETY: vector loads stay in-bounds — activation loads run only
+        // while `kk + 8 <= k1 <= arow.len()`, and `RepackedWeight` pads
+        // every column's code stride to 8 bytes so the 8-byte int8 load
+        // at `kk` is always backed; everything else is safe slice code.
+        unsafe {
+            let width = c1 - c0;
+            let k = w.rows;
+            let group = w.group;
+            let off = w.nibble_offset();
+            let nibble = w.bits <= 4;
+            let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+            let mask = _mm256_set1_epi32(0x0F);
+            let voff = _mm256_set1_epi32(off);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let orow = &mut out[(i - i0) * width..(i - i0 + 1) * width];
+                for c in c0..c1 {
+                    let codes = w.col_codes(c);
+                    let scales = w.col_scales(c);
+                    let mut total = 0.0f32;
+                    let mut k0 = 0usize;
+                    let mut g = 0usize;
+                    while k0 < k {
+                        let k1 = (k0 + group).min(k);
+                        let mut acc = 0.0f32;
+                        let mut vacc = _mm256_setzero_ps();
+                        let mut kk = k0;
+                        if nibble {
+                            if kk % 2 == 1 && kk < k1 {
+                                // align to an even code so u32 loads start on a byte
+                                let u = codes[kk / 2] >> 4;
+                                acc += arow[kk] * (u as i32 - off) as f32;
+                                kk += 1;
+                            }
+                            while kk + 8 <= k1 {
+                                // 4 bytes at code offset kk (even) = 8 nibble lanes
+                                let word = u32::from_le_bytes(
+                                    codes[kk / 2..kk / 2 + 4].try_into().unwrap(),
+                                );
+                                let q = _mm256_and_si256(
+                                    _mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts),
+                                    mask,
+                                );
+                                let qf = _mm256_cvtepi32_ps(_mm256_sub_epi32(q, voff));
+                                let av = _mm256_loadu_ps(arow.as_ptr().add(kk));
+                                vacc = _mm256_add_ps(vacc, _mm256_mul_ps(av, qf));
+                                kk += 8;
+                            }
+                            while kk < k1 {
+                                let byte = codes[kk / 2];
+                                let u = if kk % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                                acc += arow[kk] * (u as i32 - off) as f32;
+                                kk += 1;
+                            }
+                        } else {
+                            while kk + 8 <= k1 {
+                                let bytes =
+                                    _mm_loadl_epi64(codes.as_ptr().add(kk) as *const __m128i);
+                                let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
+                                let av = _mm256_loadu_ps(arow.as_ptr().add(kk));
+                                vacc = _mm256_add_ps(vacc, _mm256_mul_ps(av, qf));
+                                kk += 8;
+                            }
+                            while kk < k1 {
+                                acc += arow[kk] * (codes[kk] as i8 as f32);
+                                kk += 1;
+                            }
                         }
-                        while kk + 8 <= k1 {
-                            // 4 bytes at code offset kk (even) = 8 nibble lanes
-                            let word =
-                                u32::from_le_bytes(codes[kk / 2..kk / 2 + 4].try_into().unwrap());
-                            let q = _mm256_and_si256(
-                                _mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts),
-                                mask,
-                            );
-                            let qf = _mm256_cvtepi32_ps(_mm256_sub_epi32(q, voff));
-                            let av = _mm256_loadu_ps(arow.as_ptr().add(kk));
-                            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(av, qf));
-                            kk += 8;
-                        }
-                        while kk < k1 {
-                            let byte = codes[kk / 2];
-                            let u = if kk % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-                            acc += arow[kk] * (u as i32 - off) as f32;
-                            kk += 1;
-                        }
-                    } else {
-                        while kk + 8 <= k1 {
-                            let bytes = _mm_loadl_epi64(codes.as_ptr().add(kk) as *const __m128i);
-                            let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
-                            let av = _mm256_loadu_ps(arow.as_ptr().add(kk));
-                            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(av, qf));
-                            kk += 8;
-                        }
-                        while kk < k1 {
-                            acc += arow[kk] * (codes[kk] as i8 as f32);
-                            kk += 1;
-                        }
+                        total += (hsum8(vacc) + acc) * scales[g];
+                        g += 1;
+                        k0 = k1;
                     }
-                    total += (hsum8(vacc) + acc) * scales[g];
-                    g += 1;
-                    k0 = k1;
+                    orow[c - c0] = total;
                 }
-                orow[c - c0] = total;
             }
         }
     }
@@ -395,13 +499,21 @@ mod neon {
 
     /// Fixed pairwise tree over two 4-lane accumulators — deterministic
     /// reduction order, mirroring the AVX2 path.
+    ///
+    /// SAFETY: caller must hold the runtime NEON witness (`Kernel::Neon`
+    /// is only constructed after detection).
     #[target_feature(enable = "neon")]
     unsafe fn hsum8(lo: float32x4_t, hi: float32x4_t) -> f32 {
-        let s = vaddq_f32(lo, hi);
-        let p = vadd_f32(vget_low_f32(s), vget_high_f32(s));
-        vget_lane_f32::<0>(vpadd_f32(p, p))
+        // SAFETY: pure register ops on the owned vectors; no memory access.
+        unsafe {
+            let s = vaddq_f32(lo, hi);
+            let p = vadd_f32(vget_low_f32(s), vget_high_f32(s));
+            vget_lane_f32::<0>(vpadd_f32(p, p))
+        }
     }
 
+    /// SAFETY: caller must hold the runtime NEON witness (`Kernel::Neon`
+    /// is only constructed after detection).
     #[target_feature(enable = "neon")]
     pub unsafe fn f32_tile(
         a: &Tensor,
@@ -412,38 +524,45 @@ mod neon {
         j1: usize,
         out: &mut [f32],
     ) {
-        let w = j1 - j0;
-        for i in i0..i1 {
-            let arow = a.row(i);
-            let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
-            let mut t0 = j0;
-            while t0 < j1 {
-                let t1 = (t0 + NC).min(j1);
-                let dst = &mut orow[t0 - j0..t1 - j0];
-                for (kk, &av) in arow.iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
+        // SAFETY: loads/stores stay inside `dst`/`brow` — the vector loop
+        // runs only while `j + 4 <= dst.len()` and both slices are
+        // `t1 - t0` long; everything else is safe slice code.
+        unsafe {
+            let w = j1 - j0;
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
+                let mut t0 = j0;
+                while t0 < j1 {
+                    let t1 = (t0 + NC).min(j1);
+                    let dst = &mut orow[t0 - j0..t1 - j0];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.row(kk)[t0..t1];
+                        let va = vdupq_n_f32(av);
+                        let mut j = 0usize;
+                        while j + 4 <= dst.len() {
+                            let d = vld1q_f32(dst.as_ptr().add(j));
+                            let bb = vld1q_f32(brow.as_ptr().add(j));
+                            // separate mul + add (no vfmaq): bit-equal to scalar
+                            vst1q_f32(dst.as_mut_ptr().add(j), vaddq_f32(d, vmulq_f32(va, bb)));
+                            j += 4;
+                        }
+                        while j < dst.len() {
+                            dst[j] += av * brow[j];
+                            j += 1;
+                        }
                     }
-                    let brow = &b.row(kk)[t0..t1];
-                    let va = vdupq_n_f32(av);
-                    let mut j = 0usize;
-                    while j + 4 <= dst.len() {
-                        let d = vld1q_f32(dst.as_ptr().add(j));
-                        let bb = vld1q_f32(brow.as_ptr().add(j));
-                        // separate mul + add (no vfmaq): bit-equal to scalar
-                        vst1q_f32(dst.as_mut_ptr().add(j), vaddq_f32(d, vmulq_f32(va, bb)));
-                        j += 4;
-                    }
-                    while j < dst.len() {
-                        dst[j] += av * brow[j];
-                        j += 1;
-                    }
+                    t0 = t1;
                 }
-                t0 = t1;
             }
         }
     }
 
+    /// SAFETY: caller must hold the runtime NEON witness (`Kernel::Neon`
+    /// is only constructed after detection).
     #[target_feature(enable = "neon")]
     pub unsafe fn packed_tile(
         a: &Tensor,
@@ -454,79 +573,88 @@ mod neon {
         c1: usize,
         out: &mut [f32],
     ) {
-        let width = c1 - c0;
-        let k = w.rows;
-        let group = w.group;
-        let off = w.nibble_offset();
-        let nibble = w.bits <= 4;
-        // vshlq by a negative count is a right shift
-        let sh_lo = vld1q_s32([0i32, -4, -8, -12].as_ptr());
-        let sh_hi = vld1q_s32([-16i32, -20, -24, -28].as_ptr());
-        let mask = vdupq_n_u32(0x0F);
-        let voff = vdupq_n_s32(off);
-        for i in i0..i1 {
-            let arow = a.row(i);
-            let orow = &mut out[(i - i0) * width..(i - i0 + 1) * width];
-            for c in c0..c1 {
-                let codes = w.col_codes(c);
-                let scales = w.col_scales(c);
-                let mut total = 0.0f32;
-                let mut k0 = 0usize;
-                let mut g = 0usize;
-                while k0 < k {
-                    let k1 = (k0 + group).min(k);
-                    let mut acc = 0.0f32;
-                    let mut acc_lo = vdupq_n_f32(0.0);
-                    let mut acc_hi = vdupq_n_f32(0.0);
-                    let mut kk = k0;
-                    if nibble {
-                        if kk % 2 == 1 && kk < k1 {
-                            let u = codes[kk / 2] >> 4;
-                            acc += arow[kk] * (u as i32 - off) as f32;
-                            kk += 1;
+        // SAFETY: vector loads stay in-bounds — activation loads run only
+        // while `kk + 8 <= k1 <= arow.len()`, and `RepackedWeight` pads
+        // every column's code stride to 8 bytes so the 8-byte int8 load
+        // at `kk` is always backed; everything else is safe slice code.
+        unsafe {
+            let width = c1 - c0;
+            let k = w.rows;
+            let group = w.group;
+            let off = w.nibble_offset();
+            let nibble = w.bits <= 4;
+            // vshlq by a negative count is a right shift
+            let sh_lo = vld1q_s32([0i32, -4, -8, -12].as_ptr());
+            let sh_hi = vld1q_s32([-16i32, -20, -24, -28].as_ptr());
+            let mask = vdupq_n_u32(0x0F);
+            let voff = vdupq_n_s32(off);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let orow = &mut out[(i - i0) * width..(i - i0 + 1) * width];
+                for c in c0..c1 {
+                    let codes = w.col_codes(c);
+                    let scales = w.col_scales(c);
+                    let mut total = 0.0f32;
+                    let mut k0 = 0usize;
+                    let mut g = 0usize;
+                    while k0 < k {
+                        let k1 = (k0 + group).min(k);
+                        let mut acc = 0.0f32;
+                        let mut acc_lo = vdupq_n_f32(0.0);
+                        let mut acc_hi = vdupq_n_f32(0.0);
+                        let mut kk = k0;
+                        if nibble {
+                            if kk % 2 == 1 && kk < k1 {
+                                let u = codes[kk / 2] >> 4;
+                                acc += arow[kk] * (u as i32 - off) as f32;
+                                kk += 1;
+                            }
+                            while kk + 8 <= k1 {
+                                let word = u32::from_le_bytes(
+                                    codes[kk / 2..kk / 2 + 4].try_into().unwrap(),
+                                );
+                                let vw = vdupq_n_u32(word);
+                                let lo = vandq_u32(vshlq_u32(vw, sh_lo), mask);
+                                let hi = vandq_u32(vshlq_u32(vw, sh_hi), mask);
+                                let qlo =
+                                    vcvtq_f32_s32(vsubq_s32(vreinterpretq_s32_u32(lo), voff));
+                                let qhi =
+                                    vcvtq_f32_s32(vsubq_s32(vreinterpretq_s32_u32(hi), voff));
+                                let a_lo = vld1q_f32(arow.as_ptr().add(kk));
+                                let a_hi = vld1q_f32(arow.as_ptr().add(kk + 4));
+                                acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, qlo));
+                                acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, qhi));
+                                kk += 8;
+                            }
+                            while kk < k1 {
+                                let byte = codes[kk / 2];
+                                let u = if kk % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                                acc += arow[kk] * (u as i32 - off) as f32;
+                                kk += 1;
+                            }
+                        } else {
+                            while kk + 8 <= k1 {
+                                let b8 = vld1_s8(codes.as_ptr().add(kk) as *const i8);
+                                let w16 = vmovl_s8(b8);
+                                let qlo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16)));
+                                let qhi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16)));
+                                let a_lo = vld1q_f32(arow.as_ptr().add(kk));
+                                let a_hi = vld1q_f32(arow.as_ptr().add(kk + 4));
+                                acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, qlo));
+                                acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, qhi));
+                                kk += 8;
+                            }
+                            while kk < k1 {
+                                acc += arow[kk] * (codes[kk] as i8 as f32);
+                                kk += 1;
+                            }
                         }
-                        while kk + 8 <= k1 {
-                            let word =
-                                u32::from_le_bytes(codes[kk / 2..kk / 2 + 4].try_into().unwrap());
-                            let vw = vdupq_n_u32(word);
-                            let lo = vandq_u32(vshlq_u32(vw, sh_lo), mask);
-                            let hi = vandq_u32(vshlq_u32(vw, sh_hi), mask);
-                            let qlo = vcvtq_f32_s32(vsubq_s32(vreinterpretq_s32_u32(lo), voff));
-                            let qhi = vcvtq_f32_s32(vsubq_s32(vreinterpretq_s32_u32(hi), voff));
-                            let a_lo = vld1q_f32(arow.as_ptr().add(kk));
-                            let a_hi = vld1q_f32(arow.as_ptr().add(kk + 4));
-                            acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, qlo));
-                            acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, qhi));
-                            kk += 8;
-                        }
-                        while kk < k1 {
-                            let byte = codes[kk / 2];
-                            let u = if kk % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-                            acc += arow[kk] * (u as i32 - off) as f32;
-                            kk += 1;
-                        }
-                    } else {
-                        while kk + 8 <= k1 {
-                            let b8 = vld1_s8(codes.as_ptr().add(kk) as *const i8);
-                            let w16 = vmovl_s8(b8);
-                            let qlo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16)));
-                            let qhi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16)));
-                            let a_lo = vld1q_f32(arow.as_ptr().add(kk));
-                            let a_hi = vld1q_f32(arow.as_ptr().add(kk + 4));
-                            acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, qlo));
-                            acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, qhi));
-                            kk += 8;
-                        }
-                        while kk < k1 {
-                            acc += arow[kk] * (codes[kk] as i8 as f32);
-                            kk += 1;
-                        }
+                        total += (hsum8(acc_lo, acc_hi) + acc) * scales[g];
+                        g += 1;
+                        k0 = k1;
                     }
-                    total += (hsum8(acc_lo, acc_hi) + acc) * scales[g];
-                    g += 1;
-                    k0 = k1;
+                    orow[c - c0] = total;
                 }
-                orow[c - c0] = total;
             }
         }
     }
@@ -599,6 +727,30 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// With `--features audit`, every vector tile above also ran its
+    /// scalar shadow; this pins that the cross-check actually fires
+    /// (on scalar-only hosts the audit is vacuous by design).
+    #[cfg(feature = "audit")]
+    #[test]
+    fn audit_shadow_checks_fire_on_vector_kernels() {
+        use std::sync::atomic::Ordering;
+        let kern = best();
+        let before = audit::TILES_CHECKED.load(Ordering::Relaxed);
+        let mut rng = Rng::new(14);
+        let a = Tensor::randn(&[2, 24], 1.0, &mut rng);
+        let b = Tensor::randn(&[24, 16], 1.0, &mut rng);
+        tile_full_f32(kern, &a, &b);
+        let w = Tensor::randn(&[24, 5], 0.5, &mut rng);
+        let rw = RepackedWeight::pack(&w, 4, 8).unwrap();
+        tile_full_packed(kern, &a, &rw);
+        let after = audit::TILES_CHECKED.load(Ordering::Relaxed);
+        if kern == Kernel::Scalar {
+            assert_eq!(after, before, "scalar tiles need no shadow");
+        } else {
+            assert!(after >= before + 2, "shadow checks did not run");
         }
     }
 

@@ -16,9 +16,12 @@
 //!   (criterion stand-in; used by `cargo bench` targets).
 //! * [`prop`]  — property-testing harness (proptest stand-in) used for the
 //!   invariant suites in `rust/tests/`.
+//! * [`clock`] — the single sanctioned wall-clock read for serving logic
+//!   (everything else is flagged by `sqlint`'s determinism rule).
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod prop;
 pub mod rng;

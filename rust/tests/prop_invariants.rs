@@ -2,6 +2,7 @@
 //! `util::prop`): the mathematical guarantees the paper's constructions
 //! rest on, checked over randomized inputs.
 
+use singlequant::kv::{BlockPool, KvCache, PageTable, PagedSlot};
 use singlequant::model::forward::{forward_score, QuantCtx};
 use singlequant::model::{ModelConfig, NativeModel, Weights};
 use singlequant::quant::pack::PackedWeight;
@@ -486,5 +487,81 @@ fn prop_kv_cached_decode_matches_full_forward_exactly() {
             }
         }
         Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV block pool: exact page conservation under random churn
+// ---------------------------------------------------------------------------
+
+/// Random reserve/advance/truncate/release churn over several slots of
+/// one shared pool: after every operation each page is either on the
+/// free list or held by exactly one slot's table, a failed reserve is
+/// all-or-nothing (no pages move, the table does not grow), and a full
+/// drain returns the pool to pristine. With `--features audit` the
+/// pool's internal conservation auditor re-checks the same law from its
+/// own outstanding-page counter after every step.
+#[test]
+fn prop_block_pool_conserves_pages_under_churn() {
+    forall("block_pool_churn", 60, 29, |rng| {
+        (1 + rng.below(3), 1 + rng.below(5), 2 + rng.below(14), rng.next_u64())
+    }, |&(pt, slots, pages, seed)| {
+        let mut pool = BlockPool::new(1, 4, pt, pages);
+        let mut tables: Vec<PageTable> = (0..slots).map(|_| PageTable::new()).collect();
+        let mut rng = Rng::new(seed);
+        for step in 0..120 {
+            let s = rng.below(slots);
+            match rng.below(4) {
+                0 | 1 => {
+                    // grow + commit; exhaustion must change nothing
+                    let extra = 1 + rng.below(2 * pt);
+                    let free_before = pool.pages_free();
+                    let held_before = tables[s].n_pages();
+                    let grew = {
+                        let mut slot = PagedSlot { pool: &mut pool, table: &mut tables[s] };
+                        let ok = slot.reserve(extra).is_ok();
+                        if ok {
+                            slot.advance(extra);
+                        }
+                        ok
+                    };
+                    if !grew {
+                        ensure(pool.pages_free() == free_before,
+                               format!("step {step}: failed reserve moved pages"))?;
+                        ensure(tables[s].n_pages() == held_before,
+                               format!("step {step}: failed reserve grew the table"))?;
+                    }
+                }
+                2 => {
+                    // speculative-rollback-style truncate to a random prefix
+                    let keep = rng.below(tables[s].pos() + 1);
+                    tables[s].truncate(&mut pool, keep);
+                    ensure(tables[s].pos() == keep,
+                           format!("step {step}: truncate missed the target"))?;
+                }
+                _ => {
+                    // retire/preempt: every page back to the free list
+                    tables[s].release(&mut pool);
+                    ensure(tables[s].n_pages() == 0 && tables[s].pos() == 0,
+                           format!("step {step}: release left slot state behind"))?;
+                }
+            }
+            let held: usize = tables.iter().map(|t| t.n_pages()).sum();
+            ensure(held + pool.pages_free() == pool.pages_total(),
+                   format!("step {step}: {held} held + {} free != {} total",
+                           pool.pages_free(), pool.pages_total()))?;
+            ensure(pool.pages_used() == held,
+                   format!("step {step}: pool used-count disagrees with tables"))?;
+            for (i, t) in tables.iter().enumerate() {
+                ensure(t.pos() <= t.capacity(&pool),
+                       format!("step {step}: slot {i} pos beyond reserved capacity"))?;
+            }
+            #[cfg(feature = "audit")]
+            pool.audit_conservation();
+        }
+        for t in tables.iter_mut() {
+            t.release(&mut pool);
+        }
+        ensure(pool.pages_free() == pool.pages_total(), "drained pool must be pristine")
     });
 }
