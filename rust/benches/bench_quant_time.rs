@@ -1,44 +1,191 @@
 //! `cargo bench --bench bench_quant_time` — Table 7/B.2: quantization
-//! wall-clock per method per model, on the real trained checkpoints.
+//! wall-clock per method, plus the serial-vs-parallel pipeline sweep.
 //! (criterion is unavailable offline; util::bench provides the harness.)
+//!
+//! Runs against the real trained checkpoints when `make artifacts` has
+//! been done; otherwise falls back to the built-in demo model so the
+//! bench (and its `--smoke` CI mode) works on a bare machine. Results
+//! are written to `BENCH_quant.json`: per-method wall-clock entries and
+//! a `serial_vs_parallel` section timing the same quantization at
+//! 1/2/4/8 pipeline lanes (output is bit-identical across the sweep —
+//! pinned by the test suites — so the speedup is free).
 
-use singlequant::model::Weights;
+use singlequant::model::{ModelConfig, Weights};
 use singlequant::pipeline::{quantize, Method, PipelineOptions};
-use singlequant::runtime::Engine;
-use singlequant::util::bench::{bench, header};
+use singlequant::util::bench::{bench, header, BenchStats};
+use singlequant::util::json::Json;
+use singlequant::util::rng::Rng;
 use singlequant::util::sqt::SqtFile;
 
-fn main() {
-    let dir = std::env::var("SQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
-        eprintln!("bench_quant_time: run `make artifacts` first");
-        return;
-    }
-    let engine = Engine::new(&dir).expect("engine");
-    let calib = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))
-        .unwrap()
-        .get("tokens")
-        .unwrap()
-        .as_u16()
-        .unwrap()
-        .to_vec();
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
 
-    println!("{}", header());
-    for model in ["sq-s", "sq-m", "sq-l", "sq-xl", "sq-moe"] {
-        let cfg = engine.config(model).unwrap();
-        let weights = Weights::load(&format!("{dir}/ckpt/{model}.sqt")).unwrap();
-        for (label, method, iters) in [
-            ("singlequant", Method::singlequant(), 5usize),
-            ("duquant", Method::DuQuant { steps: 16 }, 3),
-            ("spinquant-100", Method::SpinQuant { steps: 100 }, 1),
-            ("flatquant-60", Method::FlatQuant { steps: 60 }, 1),
-        ] {
-            let opts = PipelineOptions { method: method.clone(), ..Default::default() };
-            let stats = bench(&format!("{model}/{label}"), 0, iters, || {
-                let qm = quantize(&cfg, &weights, &calib, &opts).unwrap();
-                std::hint::black_box(qm.rots.len());
-            });
-            println!("{}", stats.row());
+fn entry(report: &mut Vec<Json>, s: &BenchStats, extra: Vec<(&str, Json)>) {
+    let mut pairs = vec![
+        ("name", Json::str(s.name.clone())),
+        ("mean_s", Json::num(s.mean_s)),
+        ("p50_s", Json::num(s.p50_s)),
+        ("p95_s", Json::num(s.p95_s)),
+        ("min_s", Json::num(s.min_s)),
+        ("iters", Json::usize(s.iters)),
+    ];
+    pairs.extend(extra);
+    report.push(Json::obj(pairs));
+}
+
+/// The artifact-free fallback: demo config, seeded random weights, a
+/// synthetic byte-level calibration corpus (mirrors serve-http's
+/// no-artifacts path).
+fn demo_inputs() -> (ModelConfig, Weights, Vec<u16>) {
+    let cfg = ModelConfig::demo();
+    let weights = Weights::random_init(&cfg, 1);
+    let mut rng = Rng::new(7);
+    let calib: Vec<u16> = (0..4096).map(|_| rng.below(256) as u16).collect();
+    (cfg, weights, calib)
+}
+
+/// One (model, method) wall-clock row.
+fn method_row(
+    model: &str,
+    label: &str,
+    method: Method,
+    iters: usize,
+    cfg: &ModelConfig,
+    weights: &Weights,
+    calib: &[u16],
+    base: &PipelineOptions,
+    report: &mut Vec<Json>,
+) {
+    let opts = PipelineOptions { method, ..base.clone() };
+    let stats = bench(&format!("{model}/{label}"), 0, iters, || {
+        let qm = quantize(cfg, weights, calib, &opts).expect("quantize");
+        std::hint::black_box(qm.rots.len());
+    });
+    println!("{}", stats.row());
+    entry(report, &stats, vec![
+        ("kind", Json::str("method")),
+        ("model", Json::str(model.to_string())),
+        ("method", Json::str(label.to_string())),
+    ]);
+}
+
+/// Per-method wall-clock on one checkpoint.
+fn method_section(
+    model: &str,
+    cfg: &ModelConfig,
+    weights: &Weights,
+    calib: &[u16],
+    base: &PipelineOptions,
+    smoke: bool,
+    report: &mut Vec<Json>,
+) {
+    let scale = |iters: usize| if smoke { 1 } else { iters };
+    for (label, method, iters) in [
+        ("singlequant", Method::singlequant(), scale(5)),
+        ("duquant", Method::DuQuant { steps: 16 }, scale(3)),
+        ("spinquant-100", Method::SpinQuant { steps: 100 }, 1),
+        ("flatquant-60", Method::FlatQuant { steps: 60 }, 1),
+    ] {
+        method_row(model, label, method, iters, cfg, weights, calib, base, report);
+    }
+}
+
+/// The tentpole measurement: the same singlequant run at 1/2/4/8
+/// pipeline lanes. threads=1 is the serial baseline (single-lane pools
+/// inline their chunks on the caller), so `speedup_vs_serial` is the
+/// direct win of the parallel fan-out.
+fn thread_sweep_section(
+    model: &str,
+    cfg: &ModelConfig,
+    weights: &Weights,
+    calib: &[u16],
+    base: &PipelineOptions,
+    smoke: bool,
+    sweep: &mut Vec<Json>,
+) {
+    let iters = if smoke { 1 } else { 3 };
+    let mut serial_mean = f64::NAN;
+    for t in THREAD_SWEEP {
+        let opts = PipelineOptions {
+            method: Method::singlequant(),
+            threads: t,
+            ..base.clone()
+        };
+        let stats = bench(&format!("{model}/singlequant threads={t}"), 0, iters, || {
+            let qm = quantize(cfg, weights, calib, &opts).expect("quantize");
+            std::hint::black_box(qm.packed_bytes);
+        });
+        if t == 1 {
+            serial_mean = stats.mean_s;
         }
+        let speedup = serial_mean / stats.mean_s;
+        println!("{}  ({speedup:.2}x vs serial)", stats.row());
+        sweep.push(Json::obj(vec![
+            ("name", Json::str(stats.name.clone())),
+            ("model", Json::str(model.to_string())),
+            ("threads", Json::usize(t)),
+            ("mean_s", Json::num(stats.mean_s)),
+            ("min_s", Json::num(stats.min_s)),
+            ("iters", Json::usize(stats.iters)),
+            ("speedup_vs_serial", Json::num(speedup)),
+        ]));
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke" || a == "--test");
+
+    let mut report: Vec<Json> = Vec::new();
+    let mut sweep: Vec<Json> = Vec::new();
+    println!("{}", header());
+
+    let dir = std::env::var("SQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let have_artifacts = std::path::Path::new(&format!("{dir}/manifest.json")).exists();
+    if have_artifacts && !smoke {
+        let manifest = Json::parse_file(&format!("{dir}/manifest.json")).expect("manifest");
+        let calib = SqtFile::load(&format!("{dir}/data/corpus_wiki_train.sqt"))
+            .expect("calibration corpus")
+            .get("tokens")
+            .expect("tokens key")
+            .as_u16()
+            .expect("u16 tokens")
+            .to_vec();
+        let base = PipelineOptions::default();
+        for model in ["sq-s", "sq-m", "sq-l", "sq-xl", "sq-moe"] {
+            let cfg = ModelConfig::from_manifest(&manifest, model).expect("config");
+            let weights =
+                Weights::load(&format!("{dir}/ckpt/{model}.sqt")).expect("checkpoint");
+            method_section(model, &cfg, &weights, &calib, &base, smoke, &mut report);
+        }
+        // the lane sweep runs on one mid-size checkpoint
+        let cfg = ModelConfig::from_manifest(&manifest, "sq-m").expect("config");
+        let weights = Weights::load(&format!("{dir}/ckpt/sq-m.sqt")).expect("checkpoint");
+        thread_sweep_section("sq-m", &cfg, &weights, &calib, &base, smoke, &mut sweep);
+    } else {
+        if !have_artifacts {
+            eprintln!(
+                "bench_quant_time: no artifacts at {dir}; using the built-in \
+                 demo model (run `make artifacts` for checkpoint timings)"
+            );
+        }
+        let (cfg, weights, calib) = demo_inputs();
+        let base = PipelineOptions {
+            calib_seqs: if smoke { 2 } else { 4 },
+            calib_len: if smoke { 24 } else { 64 },
+            ..Default::default()
+        };
+        method_section("demo", &cfg, &weights, &calib, &base, smoke, &mut report);
+        thread_sweep_section("demo", &cfg, &weights, &calib, &base, smoke, &mut sweep);
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("quant_time")),
+        ("smoke", Json::bool(smoke)),
+        ("entries", Json::arr(report)),
+        ("serial_vs_parallel", Json::arr(sweep)),
+    ]);
+    match std::fs::write("BENCH_quant.json", json.to_string()) {
+        Ok(()) => println!("wrote BENCH_quant.json"),
+        Err(e) => eprintln!("bench_quant_time: could not write json: {e}"),
     }
 }

@@ -395,6 +395,8 @@ fn in_hot_scope(path: &str) -> bool {
     HOT_MODULES_EXACT.contains(&path)
         || path.starts_with("src/kv/")
         || path.starts_with("src/spec/")
+        || path.starts_with("src/pipeline/")
+        || path.starts_with("src/calib/")
 }
 
 /// The serving hot path must degrade through typed errors

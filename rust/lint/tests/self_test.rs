@@ -46,8 +46,13 @@ fn hotpath_fixture_fails_with_both_findings() {
     assert_eq!(rules(&f), vec!["hotpath", "hotpath"], "{f:?}");
     assert!(f[0].msg.contains("unwrap"), "{f:?}");
     assert!(f[1].msg.contains("[0]"), "{f:?}");
-    // the same panics are fine outside the hot serving modules
-    assert!(lint_rust_source("src/pipeline/mod.rs", src).is_empty());
+    // the same panics are fine outside the hot modules
+    assert!(lint_rust_source("src/rotation/art.rs", src).is_empty());
+    // the quantization pipeline and calibration joined the panic-free
+    // set alongside kv/ and spec/
+    for hot in ["src/pipeline/mod.rs", "src/pipeline/fold.rs", "src/calib/mod.rs"] {
+        assert_eq!(rules(&lint_rust_source(hot, src)), vec!["hotpath", "hotpath"], "{hot}");
+    }
 }
 
 #[test]

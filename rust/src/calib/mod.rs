@@ -11,13 +11,21 @@
 //! One forward pass feeds every method — closed-form and learned alike — so
 //! the Table-7 quantization-time comparison isolates the *transform
 //! construction* cost, exactly the paper's framing.
+//!
+//! Parallelism: sequences are independent forwards, so they fan out over
+//! the [`WorkerPool`]; everything order-sensitive (signed-absmax merge,
+//! Hessian addition, reservoir RNG draws) happens in a serial reduction
+//! that replays tap events in fixed sequence order. The result is
+//! bit-identical to the old serial loop for every lane count — see
+//! DESIGN.md "Quantization pipeline parallelism".
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::model::forward::{forward_score, Tap};
 use crate::model::{ModelConfig, Weights};
+use crate::tensor::pool::{self, WorkerPool};
 use crate::tensor::{stats, Tensor};
 use crate::util::rng::Rng;
 
@@ -93,12 +101,87 @@ pub fn run_calibration(
 
 /// Calibration with explicit control over Hessian accumulation (the
 /// Xᵀ X products are only consumed by GPTQ and dominate the tap cost).
+/// Fans the sequences out over the process-wide worker pool.
 pub fn run_calibration_opts(
     cfg: &ModelConfig,
     weights: &Weights,
     seqs: &[Vec<u16>],
     seed: u64,
     with_hessian: bool,
+) -> Result<Calibration> {
+    run_calibration_pool(cfg, weights, seqs, seed, with_hessian, pool::global())
+}
+
+/// One tap firing captured during a calibration forward: the site key
+/// plus everything the fixed-order reduction needs — the raw rows (for
+/// the reservoir), the per-sequence Gram partial Xᵀ X, and the
+/// per-sequence signed-absmax partial.
+struct TapEvent {
+    key: String,
+    x: Tensor,
+    gram: Tensor,
+    absmax: Vec<f32>,
+}
+
+/// The ordered tap-event trace of one calibration sequence.
+struct SeqTrace {
+    n_tokens: usize,
+    events: Vec<TapEvent>,
+}
+
+/// Forward one sequence and record its tap events in firing order. Pure
+/// function of its inputs — safe to run on any pool lane.
+fn trace_sequence(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    seq: &[u16],
+    with_hessian: bool,
+) -> Result<SeqTrace> {
+    let mut events: Vec<TapEvent> = Vec::new();
+    let mut tap = |layer: usize, site: &str, x: &Tensor| {
+        let mut absmax = vec![0.0f32; x.cols()];
+        for i in 0..x.rows() {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                if v.abs() > absmax[j].abs() {
+                    absmax[j] = v;
+                }
+            }
+        }
+        let gram = if with_hessian { x.matmul_tn(x) } else { Tensor::zeros(&[0, 0]) };
+        events.push(TapEvent {
+            key: format!("l{layer:02}.{site}"),
+            x: x.clone(),
+            gram,
+            absmax,
+        });
+    };
+    forward_score(cfg, weights, seq, None, Some(&mut tap as Tap))?;
+    Ok(SeqTrace { n_tokens: seq.len(), events })
+}
+
+/// Calibration on an explicit pool. Phase 1 traces every sequence in
+/// parallel (forwards are independent); phase 2 reduces the traces
+/// serially in sequence order, replaying each accumulation in exactly
+/// the order the old serial loop performed it:
+///
+/// * **signed absmax** — the strict-`>` keep-first-max merge of a
+///   per-sequence partial equals the row-by-row serial scan;
+/// * **Hessian** — each site taps exactly once per sequence (the MoE
+///   down-tap is deduplicated in `forward_score`), so adding the
+///   per-sequence Gram partials in sequence order reproduces the serial
+///   f32 association `((H₀+G₁)+G₂)+…` bit-for-bit;
+/// * **reservoir** — the shared RNG's draws interleave across sites in
+///   global tap-event order, so the reduction replays rows through the
+///   same `below(token_count)` stream the serial loop consumed.
+///
+/// Hence the result is bit-identical for every lane count.
+pub fn run_calibration_pool(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    seqs: &[Vec<u16>],
+    seed: u64,
+    with_hessian: bool,
+    pool: &WorkerPool,
 ) -> Result<Calibration> {
     let mut sites: BTreeMap<String, SiteCalib> = BTreeMap::new();
     for layer in 0..cfg.n_layers {
@@ -108,37 +191,41 @@ pub fn run_calibration_opts(
                          SiteCalib::new(n, with_hessian));
         }
     }
+    // ---- parallel phase: independent per-sequence forwards -------------
+    let traces = pool.run_collect(seqs.len(), |i| {
+        trace_sequence(cfg, weights, &seqs[i], with_hessian)
+    });
+    // ---- serial reduction in fixed sequence order ----------------------
     let mut rng = Rng::new(seed);
     let mut n_tokens = 0usize;
-    for seq in seqs {
-        n_tokens += seq.len();
-        let mut tap = |layer: usize, site: &str, x: &Tensor| {
-            let sc = sites.get_mut(&format!("l{layer:02}.{site}")).unwrap();
-            // signed absmax
-            for i in 0..x.rows() {
-                for (j, &v) in x.row(i).iter().enumerate() {
-                    if v.abs() > sc.signed_absmax[j].abs() {
-                        sc.signed_absmax[j] = v;
-                    }
+    for trace in traces {
+        let trace = trace?;
+        n_tokens += trace.n_tokens;
+        for ev in &trace.events {
+            let sc = sites
+                .get_mut(&ev.key)
+                .ok_or_else(|| anyhow!("calibration tap hit unknown site {}", ev.key))?;
+            for (j, &v) in ev.absmax.iter().enumerate() {
+                if v.abs() > sc.signed_absmax[j].abs() {
+                    sc.signed_absmax[j] = v;
                 }
             }
             if with_hessian {
-                sc.hessian = sc.hessian.add(&x.matmul_tn(x));
+                sc.hessian = sc.hessian.add(&ev.gram);
             }
             // reservoir sample over row buffers (materialized at the end)
-            for i in 0..x.rows() {
+            for i in 0..ev.x.rows() {
                 sc.token_count += 1;
                 if sc.rows.len() < MAX_SAMPLE {
-                    sc.rows.push(x.row(i).to_vec());
+                    sc.rows.push(ev.x.row(i).to_vec());
                 } else {
                     let k = rng.below(sc.token_count);
                     if k < MAX_SAMPLE {
-                        sc.rows[k] = x.row(i).to_vec();
+                        sc.rows[k] = ev.x.row(i).to_vec();
                     }
                 }
             }
-        };
-        forward_score(cfg, weights, seq, None, Some(&mut tap as Tap))?;
+        }
     }
     for sc in sites.values_mut() {
         sc.sample = Tensor::from_rows(&sc.rows);
@@ -199,6 +286,44 @@ mod tests {
         let seqs: Vec<Vec<u16>> = (0..20).map(|i| toks(16, i)).collect();
         let cal = run_calibration(&cfg, &w, &seqs, 7).unwrap();
         assert_eq!(cal.site(0, "qkv").sample.rows(), MAX_SAMPLE.min(320));
+    }
+
+    fn assert_calibs_bit_identical(a: &Calibration, b: &Calibration, label: &str) {
+        assert_eq!(a.n_tokens, b.n_tokens, "{label}: n_tokens");
+        assert_eq!(a.sites.len(), b.sites.len(), "{label}: site count");
+        for (key, sa) in &a.sites {
+            let sb = &b.sites[key];
+            assert_eq!(sa.token_count, sb.token_count, "{label}: {key} token_count");
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&sa.signed_absmax), bits(&sb.signed_absmax),
+                       "{label}: {key} signed_absmax");
+            assert_eq!(bits(sa.hessian.data()), bits(sb.hessian.data()),
+                       "{label}: {key} hessian");
+            assert_eq!(bits(sa.sample.data()), bits(sb.sample.data()),
+                       "{label}: {key} sample");
+        }
+    }
+
+    #[test]
+    fn pool_calibration_is_lane_count_invariant() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 2);
+        // 5 sequences over 3 lanes exercises the remainder chunk
+        for n_seqs in [1usize, 2, 5] {
+            let seqs: Vec<Vec<u16>> = (0..n_seqs).map(|i| toks(12, i as u64)).collect();
+            let serial =
+                run_calibration_pool(&cfg, &w, &seqs, 7, true, &crate::tensor::pool::WorkerPool::new(1))
+                    .unwrap();
+            for lanes in [2usize, 3, 8] {
+                let pool = crate::tensor::pool::WorkerPool::new(lanes);
+                let par = run_calibration_pool(&cfg, &w, &seqs, 7, true, &pool).unwrap();
+                assert_calibs_bit_identical(&serial, &par,
+                                            &format!("seqs={n_seqs} lanes={lanes}"));
+            }
+            // and the global-pool entry point agrees too
+            let global = run_calibration_opts(&cfg, &w, &seqs, 7, true).unwrap();
+            assert_calibs_bit_identical(&serial, &global, &format!("seqs={n_seqs} global"));
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@ use singlequant::eval::tasks::zero_shot_suite;
 use singlequant::eval::TaskSuite;
 use singlequant::experiments::{run_experiment, EvalBudget, ExpContext};
 use singlequant::model::{ModelConfig, NativeModel, Weights};
-use singlequant::pipeline::{quantize, Method, PipelineOptions};
+use singlequant::pipeline::{quantize, quantize_with_progress, Method, PipelineOptions};
 use singlequant::quant::WeightQuantizer;
 use singlequant::rotation::singlequant::SingleQuantConfig;
 use singlequant::runtime::{ModelRunner, NativeBackend, RunnerBackend};
@@ -112,6 +112,7 @@ fn opts_from_args(args: &Args) -> Result<PipelineOptions> {
         calib_seqs: args.usize_or("calib-seqs", 8)?,
         calib_len: args.usize_or("calib-len", 96)?,
         seed: args.usize_or("seed", 0x5142)? as u64,
+        threads: args.usize_or("threads", 0)?,
     })
 }
 
@@ -160,9 +161,14 @@ usage: singlequant <info|quantize|eval|serve|serve-http|generate|reproduce|analy
   --wbits N --abits N --lct --fast
   --backend NAME    native (threaded CPU, packed weights; eval + serve-http)
                     | pjrt (AOT graphs) | synthetic (serve-http only)
-  --threads N       native-backend worker threads (0 = all cores)
+  --threads N       worker lanes: native backend + quantize pipeline
+                    (0 = all cores; quantize output is bit-identical
+                    for every thread count)
   --kernel NAME     scalar | simd | auto — pin the CPU microkernel (default:
                     runtime detection; SQ_KERNEL=scalar env does the same)
+  quantize          prints per-stage progress lines and a timing breakdown;
+                    falls back to the built-in demo model when no artifacts
+                    exist (omit --model/--artifacts)
   serve-http        --host IP --port N --batch N --max-new N --queue-cap N
                     --deadline-ms N --backend native|pjrt|synthetic
                     --kv-page-tokens N (native; 0 = contiguous KV, default 16)
@@ -200,20 +206,25 @@ fn info(args: &Args) -> Result<()> {
 }
 
 fn cmd_quantize(args: &Args) -> Result<()> {
-    let ctx = ctx_from_args(args)?;
-    let model = args.get_or("model", "sq-m");
     let opts = opts_from_args(args)?;
-    let qm = ctx.package(model, &opts)?;
+    // artifact checkpoint when available, built-in demo model otherwise —
+    // quantize no longer needs a PJRT engine or lowered graphs at all
+    let (cfg, weights, calib) = native_model_inputs(args)?;
+    let progress = |line: &str| println!("{line}");
+    let qm = quantize_with_progress(&cfg, &weights, &calib, &opts, Some(&progress))?;
     println!(
-        "quantized {model} with {} (wq {}, W{}A{}):",
+        "quantized {} with {} (wq {}, W{}A{}, {} lanes):",
+        cfg.name,
         qm.method_label,
         args.get_or("wq", "rtn"),
         opts.weight_bits,
-        opts.act_bits
+        opts.act_bits,
+        qm.stats.lanes,
     );
-    println!("  calibration : {:.3}s", qm.calib_seconds);
-    println!("  transform   : {:.3}s", qm.transform_seconds);
-    println!("  weight quant: {:.3}s", qm.weight_quant_seconds);
+    println!("  calibration : {:.3}s", qm.stats.calib_seconds);
+    println!("  scale folds : {:.3}s", qm.stats.fold_seconds);
+    println!("  rotations   : {:.3}s", qm.stats.rotation_seconds);
+    println!("  weight quant: {:.3}s", qm.stats.weight_quant_seconds);
     println!("  total       : {:.3}s", qm.total_seconds());
     println!("  packed bytes: {} (+{} fp)", qm.packed_bytes, qm.fp_bytes);
     for (k, r) in qm.rots.iter().take(2) {

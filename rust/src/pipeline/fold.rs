@@ -12,6 +12,7 @@
 
 use anyhow::Result;
 
+use super::PipelineError;
 use crate::calib::{Calibration, SiteCalib};
 use crate::model::{ModelConfig, Weights};
 use crate::quant::awq::awq_search;
@@ -61,7 +62,10 @@ fn scale_cols(w: &mut Tensor, s: &[f32]) {
 fn site_weight_absmax(cfg: &ModelConfig, w: &Weights, layer: usize,
                       site: &str) -> Result<Vec<f32>> {
     let names = cfg.site_weights(layer, site);
-    let n = w.get(&names[0])?.rows();
+    let first = names
+        .first()
+        .ok_or_else(|| PipelineError::UnfoldableSite(format!("l{layer:02}.{site}")))?;
+    let n = w.get(first)?.rows();
     let mut out = vec![0.0f32; n];
     for name in &names {
         let t = w.get(name)?;
@@ -126,7 +130,9 @@ fn apply_site_fold(
                 w.insert(&format!("{p}.wu"), wu);
             }
         }
-        _ => unreachable!(),
+        other => {
+            return Err(PipelineError::UnfoldableSite(other.to_string()).into());
+        }
     }
     // consumers × s
     for name in cfg.site_weights(layer, site) {
@@ -135,7 +141,11 @@ fn apply_site_fold(
         w.insert(&name, t);
     }
     let key = format!("l{layer:02}.{site}");
-    scale_site_calib(calibration.sites.get_mut(&key).unwrap(), s);
+    let sc = calibration
+        .sites
+        .get_mut(&key)
+        .ok_or_else(|| PipelineError::MissingCalibration(key.clone()))?;
+    scale_site_calib(sc, s);
     Ok(())
 }
 

@@ -8,6 +8,15 @@
 //! PJRT graphs are method-agnostic. Scale-fold methods (SmoothQuant, AWQ)
 //! rewrite producer parameters and feed identity rotations — exactly how
 //! they deploy in practice.
+//!
+//! Parallelism: calibration sequences, per-site rotation builds, and
+//! per-site weight quantization all fan out over the worker pool; every
+//! order-sensitive commit happens serially in fixed `BTreeMap` key
+//! order, so the package is **bit-identical across thread counts**
+//! (pinned by `tests/integration_quant.rs`; contract in DESIGN.md
+//! "Quantization pipeline parallelism"). The pipeline is also part of
+//! sqlint's panic-free hotpath set: malformed input surfaces as
+//! [`PipelineError`], never a panic.
 
 pub mod fold;
 
@@ -15,7 +24,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::calib::{calib_sequences, run_calibration_opts};
+use crate::calib::{calib_sequences, run_calibration_pool, Calibration};
 use crate::model::forward::QuantCtx;
 use crate::model::{ModelConfig, Weights};
 use crate::quant::clip::search_act_clip;
@@ -28,12 +37,53 @@ use crate::rotation::baselines::{
     duquant_rotation, learned_kron_rotation, quarot_rotation, quip_rotation,
 };
 use crate::rotation::cayley::{CayleyConfig, CayleyTrace};
-use crate::rotation::kronecker::kron_rotate_weight;
+use crate::rotation::kronecker::{kron_rotate_rows, kron_rotate_weight, kron_sandwich};
 use crate::rotation::singlequant::{
     build_site_rotation, SingleQuantConfig, SiteProfile, SiteRotation,
 };
+use crate::tensor::pool::{self, WorkerPool};
 use crate::tensor::Tensor;
 use crate::util::clock;
+
+/// Typed pipeline failures — the panic-free contract of the hotpath set.
+/// Each variant names a structural precondition the caller (or a
+/// previous stage) violated; none of them should abort the process.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PipelineError {
+    /// A no-quantization method reached a stage that only runs for
+    /// quantizing methods (e.g. FP16 hit the rotation builder).
+    MethodNotQuantized(&'static str),
+    /// A rotation site had no calibration record.
+    MissingCalibration(String),
+    /// Stage 4 found no built rotation for a site.
+    MissingRotation(String),
+    /// GPTQ was requested but the calibration pass skipped the Hessian.
+    MissingHessian(String),
+    /// A scale fold targeted a site without a foldable producer.
+    UnfoldableSite(String),
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::MethodNotQuantized(m) => {
+                write!(f, "method {m} does not quantize; stage not applicable")
+            }
+            PipelineError::MissingCalibration(k) => {
+                write!(f, "no calibration record for site {k}")
+            }
+            PipelineError::MissingRotation(k) => write!(f, "no rotation built for site {k}"),
+            PipelineError::MissingHessian(k) => {
+                write!(f, "GPTQ needs a calibration Hessian for site {k}, none accumulated")
+            }
+            PipelineError::UnfoldableSite(s) => {
+                write!(f, "site {s} has no foldable producer parameter")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
 
 /// Pre-quantization transform selection (the rows of Tables 1–6).
 #[derive(Clone, Debug)]
@@ -111,6 +161,11 @@ pub struct PipelineOptions {
     pub calib_seqs: usize,
     pub calib_len: usize,
     pub seed: u64,
+    /// Pool lanes for the pipeline's parallel stages. 0 = the
+    /// process-wide pool (all cores); any other value runs on a private
+    /// pool of exactly that many lanes. Output is bit-identical either
+    /// way — the knob only trades wall-clock.
+    pub threads: usize,
 }
 
 impl Default for PipelineOptions {
@@ -124,7 +179,30 @@ impl Default for PipelineOptions {
             calib_seqs: 8,
             calib_len: 96,
             seed: 0x5142,
+            threads: 0,
         }
+    }
+}
+
+/// Per-stage wall-clock and run shape, surfaced by the `quantize` CLI
+/// progress lines and `bench_quant_time`'s JSON. Timings are the only
+/// non-deterministic part of a package; everything else is bit-stable.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    pub calib_seconds: f64,
+    pub fold_seconds: f64,
+    pub rotation_seconds: f64,
+    pub weight_quant_seconds: f64,
+    /// Rotation sites processed (layers × sites).
+    pub sites: usize,
+    /// Pool lanes the parallel stages ran on.
+    pub lanes: usize,
+}
+
+impl PipelineStats {
+    pub fn total_seconds(&self) -> f64 {
+        self.calib_seconds + self.fold_seconds + self.rotation_seconds
+            + self.weight_quant_seconds
     }
 }
 
@@ -150,8 +228,12 @@ pub struct QuantizedModel {
     pub packed_bytes: usize,
     pub fp_bytes: usize,
     pub calib_seconds: f64,
+    /// Legacy aggregate (folds + rotation builds); see `stats` for the
+    /// per-stage split.
     pub transform_seconds: f64,
     pub weight_quant_seconds: f64,
+    /// Per-stage timing/shape breakdown of the run that built this.
+    pub stats: PipelineStats,
     /// Optimization traces for learned baselines (Fig. 2 inputs).
     pub traces: BTreeMap<String, CayleyTrace>,
 }
@@ -187,18 +269,46 @@ impl QuantizedModel {
     }
 }
 
-/// Run the full pipeline.
+/// Run the full pipeline on the default (process-wide) pool sizing from
+/// `opts.threads`, without progress reporting.
 pub fn quantize(
     cfg: &ModelConfig,
     weights: &Weights,
     calib_tokens: &[u16],
     opts: &PipelineOptions,
 ) -> Result<QuantizedModel> {
+    quantize_with_progress(cfg, weights, calib_tokens, opts, None)
+}
+
+/// Run the full pipeline, reporting one line per completed stage through
+/// `progress` (the `quantize` CLI prints these live).
+pub fn quantize_with_progress(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    calib_tokens: &[u16],
+    opts: &PipelineOptions,
+    progress: Option<&dyn Fn(&str)>,
+) -> Result<QuantizedModel> {
     if matches!(opts.method, Method::Fp16) {
         return Ok(fp16_package(cfg, weights));
     }
+    let note = |msg: String| {
+        if let Some(p) = progress {
+            p(&msg);
+        }
+    };
+    // 0 lanes = the process-wide pool; otherwise a private pool of the
+    // requested width. Stage outputs are bit-identical either way.
+    let owned_pool;
+    let pool: &WorkerPool = if opts.threads == 0 {
+        pool::global()
+    } else {
+        owned_pool = WorkerPool::new(opts.threads);
+        &owned_pool
+    };
+    let mut stats = PipelineStats { lanes: pool.lanes(), ..Default::default() };
 
-    // ---- 1. single calibration pass ---------------------------------------
+    // ---- 1. single calibration pass (sequences fan out on the pool) --------
     let t0 = clock::now();
     let seqs = calib_sequences(calib_tokens, opts.calib_seqs, opts.calib_len, opts.seed);
     let need_hessian = matches!(
@@ -206,8 +316,13 @@ pub fn quantize(
         WeightQuantizer::Gptq | WeightQuantizer::GptqGrouped(_)
     );
     let mut calibration =
-        run_calibration_opts(cfg, weights, &seqs, opts.seed, need_hessian)?;
-    let calib_seconds = t0.elapsed().as_secs_f64();
+        run_calibration_pool(cfg, weights, &seqs, opts.seed, need_hessian, pool)?;
+    stats.calib_seconds = t0.elapsed().as_secs_f64();
+    note(format!(
+        "[quantize] calibration: {} seqs, {} tokens, {} sites in {:.3}s ({} lanes)",
+        calibration.n_sequences, calibration.n_tokens, calibration.sites.len(),
+        stats.calib_seconds, pool.lanes(),
+    ));
 
     // ---- 2. scale folds (SmoothQuant / AWQ) --------------------------------
     let t1 = clock::now();
@@ -221,127 +336,62 @@ pub fn quantize(
         }
         _ => {}
     }
+    stats.fold_seconds = t1.elapsed().as_secs_f64();
+    note(format!("[quantize] scale folds: {:.3}s", stats.fold_seconds));
 
-    // ---- 3. per-site rotations ----------------------------------------------
+    // Site work-list in BTreeMap key order: `l{layer:02}.{site}` sorts by
+    // layer first, so index order below IS commit order.
+    let site_keys: Vec<(usize, &'static str, String)> = (0..cfg.n_layers)
+        .flat_map(|layer| {
+            crate::model::config::ROT_SITES
+                .iter()
+                .map(move |site| (layer, *site, format!("l{layer:02}.{site}")))
+        })
+        .collect();
+    stats.sites = site_keys.len();
+
+    // ---- 3. per-site rotations (parallel build, ordered commit) ------------
+    let t2 = clock::now();
+    let built = pool.run_collect(site_keys.len(), |i| {
+        let (layer, site, key) = &site_keys[i];
+        build_rotation(cfg, &w, &calibration, *layer, site, key, opts)
+    });
     let mut rots: BTreeMap<String, SiteRotation> = BTreeMap::new();
     let mut traces: BTreeMap<String, CayleyTrace> = BTreeMap::new();
-    for layer in 0..cfg.n_layers {
-        for site in crate::model::config::ROT_SITES {
-            let key = format!("l{layer:02}.{site}");
-            let sc = &calibration.sites[&key];
-            let (n, _, _) = cfg.site_dims(site);
-            let rot = match &opts.method {
-                Method::Fp16 => unreachable!(),
-                Method::Rtn | Method::SmoothQuant { .. } | Method::Awq { .. } => {
-                    SiteRotation::identity(n)
-                }
-                Method::QuaRot => quarot_rotation(n, opts.seed ^ hash_key(&key)),
-                Method::Quip => quip_rotation(n, opts.seed ^ hash_key(&key)),
-                Method::DuQuant { steps } => {
-                    duquant_rotation(&sc.signed_absmax, *steps, opts.seed)
-                }
-                Method::SpinQuant { steps } | Method::FlatQuant { steps } => {
-                    let wcat = site_weight_concat(cfg, &w, layer, site)?;
-                    let ccfg = CayleyConfig {
-                        steps: *steps,
-                        act_bits: opts.act_bits.min(8),
-                        weight_bits: opts.weight_bits,
-                        ..Default::default()
-                    };
-                    let lr = learned_kron_rotation(&sc.sample, &wcat, &ccfg,
-                                                   opts.seed)?;
-                    traces.insert(key.clone(), lr.trace);
-                    lr.rotation
-                }
-                Method::SingleQuant(sq) => {
-                    let profile = SiteProfile {
-                        n,
-                        signed_absmax: sc.signed_absmax.clone(),
-                        median: sc.median(),
-                    };
-                    build_site_rotation(&profile, sq)
-                }
-            };
-            rots.insert(key, rot);
+    for ((_, _, key), b) in site_keys.iter().zip(built) {
+        let (rot, trace) = b?;
+        if let Some(t) = trace {
+            traces.insert(key.clone(), t);
         }
+        rots.insert(key.clone(), rot);
     }
-    let transform_seconds = t1.elapsed().as_secs_f64();
+    stats.rotation_seconds = t2.elapsed().as_secs_f64();
+    note(format!(
+        "[quantize] rotations ({}): {} sites in {:.3}s",
+        opts.method.label(), stats.sites, stats.rotation_seconds,
+    ));
 
-    // ---- 4. rotate + quantize weights; clip search --------------------------
-    let t2 = clock::now();
+    // ---- 4. rotate + quantize weights; clip search (parallel sites) --------
+    let t3 = clock::now();
+    let quants = pool.run_collect(site_keys.len(), |i| {
+        let (layer, site, key) = &site_keys[i];
+        quantize_site(cfg, &w, &calibration, &rots, *layer, site, key, opts)
+    });
     let mut clips: BTreeMap<String, f32> = BTreeMap::new();
     let mut packed_bytes = 0usize;
-    for layer in 0..cfg.n_layers {
-        for site in crate::model::config::ROT_SITES {
-            let key = format!("l{layer:02}.{site}");
-            let rot = rots[&key].clone();
-            let sc = &calibration.sites[&key];
-
-            // rotated Hessian for GPTQ: H_r = Rᵀ H R with R = r1 ⊗ r2
-            let rotated_hessian = |h: &Tensor| -> Tensor {
-                let r = rot.r1.kron(&rot.r2);
-                r.matmul_tn(&h.matmul(&r))
-            };
-            let hess_rot = match opts.weight_quantizer {
-                WeightQuantizer::Gptq | WeightQuantizer::GptqGrouped(_) => {
-                    Some(Hessian {
-                        h: rotated_hessian(&sc.hessian),
-                        count: sc.token_count,
-                    })
-                }
-                _ => None,
-            };
-
-            for wname in cfg.site_weights(layer, site) {
-                let orig = w.get(&wname)?.clone();
-                let rotated = kron_rotate_weight(&orig, &rot.r1, &rot.r2);
-                let q = match opts.weight_quantizer {
-                    WeightQuantizer::Rtn => {
-                        fake_quant_per_channel(&rotated, opts.weight_bits, 1.0)
-                    }
-                    WeightQuantizer::RtnGrouped(g) => {
-                        fake_quant_grouped(&rotated, opts.weight_bits, g, 1.0)
-                    }
-                    WeightQuantizer::Gptq => gptq_quantize(
-                        &rotated,
-                        hess_rot.as_ref().unwrap(),
-                        &GptqConfig { bits: opts.weight_bits, ..Default::default() },
-                    )?,
-                    WeightQuantizer::GptqGrouped(g) => gptq_quantize(
-                        &rotated,
-                        hess_rot.as_ref().unwrap(),
-                        &GptqConfig {
-                            bits: opts.weight_bits,
-                            group: Some(g),
-                            ..Default::default()
-                        },
-                    )?,
-                };
-                packed_bytes += PackedWeight::pack(&q, opts.weight_bits)?.nbytes();
-                w.insert(&wname, q);
-            }
-
-            // activation clip (LCT) or SmoothQuant's static scale
-            let clip = if matches!(opts.method, Method::SmoothQuant { .. }) {
-                // static per-tensor scale Delta = absmax/qmax over the
-                // (folded) calibration activations at this site
-                let absmax = sc
-                    .signed_absmax
-                    .iter()
-                    .fold(0.0f32, |m, &v| m.max(v.abs()));
-                (absmax / 7.0).max(1e-8)
-            } else if opts.lct && opts.act_bits < 16 && sc.sample.rows() > 0 {
-                let sample_rot = crate::rotation::kronecker::kron_rotate_rows(
-                    &sc.sample, &rot.r1, &rot.r2);
-                let wcat = site_weight_concat(cfg, &w, layer, site)?;
-                search_act_clip(&sample_rot, &wcat, opts.act_bits, 12, 0.4)
-            } else {
-                1.0
-            };
-            clips.insert(key, clip);
+    for ((_, _, key), q) in site_keys.iter().zip(quants) {
+        let sq = q?;
+        for (wname, qt) in sq.weights {
+            w.insert(&wname, qt);
         }
+        packed_bytes += sq.packed_bytes;
+        clips.insert(key.clone(), sq.clip);
     }
-    let weight_quant_seconds = t2.elapsed().as_secs_f64();
+    stats.weight_quant_seconds = t3.elapsed().as_secs_f64();
+    note(format!(
+        "[quantize] weight quant ({}): {} packed bytes in {:.3}s",
+        opts.weight_quantizer.label(), packed_bytes, stats.weight_quant_seconds,
+    ));
 
     // fp bytes: everything not site-quantized (embeddings, norms, head, router)
     let quantized: std::collections::BTreeSet<String> = (0..cfg.n_layers)
@@ -370,11 +420,158 @@ pub fn quantize(
         weight_group: opts.weight_quantizer.group(),
         packed_bytes,
         fp_bytes,
-        calib_seconds,
-        transform_seconds,
-        weight_quant_seconds,
+        calib_seconds: stats.calib_seconds,
+        transform_seconds: stats.fold_seconds + stats.rotation_seconds,
+        weight_quant_seconds: stats.weight_quant_seconds,
+        stats,
         traces,
     })
+}
+
+/// Stage-3 worker: build the rotation for one site. Pure function of
+/// (post-fold weights, calibration, site, opts) — every method's
+/// randomness is keyed off `opts.seed` and the site, never off shared
+/// mutable state, so the build is safe to run on any pool lane.
+#[allow(clippy::too_many_arguments)]
+fn build_rotation(
+    cfg: &ModelConfig,
+    w: &Weights,
+    calibration: &Calibration,
+    layer: usize,
+    site: &str,
+    key: &str,
+    opts: &PipelineOptions,
+) -> Result<(SiteRotation, Option<CayleyTrace>)> {
+    let sc = calibration
+        .sites
+        .get(key)
+        .ok_or_else(|| PipelineError::MissingCalibration(key.to_string()))?;
+    let (n, _, _) = cfg.site_dims(site);
+    let rot = match &opts.method {
+        Method::Fp16 => {
+            return Err(PipelineError::MethodNotQuantized("FP16").into());
+        }
+        Method::Rtn | Method::SmoothQuant { .. } | Method::Awq { .. } => {
+            SiteRotation::identity(n)
+        }
+        Method::QuaRot => quarot_rotation(n, opts.seed ^ hash_key(key)),
+        Method::Quip => quip_rotation(n, opts.seed ^ hash_key(key)),
+        Method::DuQuant { steps } => duquant_rotation(&sc.signed_absmax, *steps, opts.seed),
+        Method::SpinQuant { steps } | Method::FlatQuant { steps } => {
+            let wcat = site_weight_concat(cfg, w, layer, site)?;
+            let ccfg = CayleyConfig {
+                steps: *steps,
+                act_bits: opts.act_bits.min(8),
+                weight_bits: opts.weight_bits,
+                ..Default::default()
+            };
+            let lr = learned_kron_rotation(&sc.sample, &wcat, &ccfg, opts.seed)?;
+            return Ok((lr.rotation, Some(lr.trace)));
+        }
+        Method::SingleQuant(sq) => {
+            let profile = SiteProfile {
+                n,
+                signed_absmax: sc.signed_absmax.clone(),
+                median: sc.median(),
+            };
+            build_site_rotation(&profile, sq)
+        }
+    };
+    Ok((rot, None))
+}
+
+/// Stage-4 output for one site, committed serially in key order.
+struct SiteQuant {
+    /// (weight name, fake-quantized tensor) in `site_weights` order.
+    weights: Vec<(String, Tensor)>,
+    packed_bytes: usize,
+    clip: f32,
+}
+
+/// Stage-4 worker: rotate, quantize, and clip-search one site. Reads the
+/// *pre-quantization* (post-fold) weights — sites never read each
+/// other's quantized outputs (the serial loop never did either: a site's
+/// clip search only concatenates that site's own freshly quantized
+/// tensors), so fan-out order cannot change the numbers.
+#[allow(clippy::too_many_arguments)]
+fn quantize_site(
+    cfg: &ModelConfig,
+    w: &Weights,
+    calibration: &Calibration,
+    rots: &BTreeMap<String, SiteRotation>,
+    layer: usize,
+    site: &str,
+    key: &str,
+    opts: &PipelineOptions,
+) -> Result<SiteQuant> {
+    let rot = rots
+        .get(key)
+        .ok_or_else(|| PipelineError::MissingRotation(key.to_string()))?;
+    let sc = calibration
+        .sites
+        .get(key)
+        .ok_or_else(|| PipelineError::MissingCalibration(key.to_string()))?;
+
+    // rotated Hessian for GPTQ: H_r = Rᵀ H R with R = r1 ⊗ r2, computed
+    // without materializing the kron (see `kron_sandwich`)
+    let hess_rot = match opts.weight_quantizer {
+        WeightQuantizer::Gptq | WeightQuantizer::GptqGrouped(_) => {
+            if sc.hessian.rows() != sc.n {
+                return Err(PipelineError::MissingHessian(key.to_string()).into());
+            }
+            Some(Hessian {
+                h: kron_sandwich(&sc.hessian, &rot.r1, &rot.r2),
+                count: sc.token_count,
+            })
+        }
+        _ => None,
+    };
+
+    let mut out: Vec<(String, Tensor)> = Vec::new();
+    let mut packed_bytes = 0usize;
+    for wname in cfg.site_weights(layer, site) {
+        let rotated = kron_rotate_weight(w.get(&wname)?, &rot.r1, &rot.r2);
+        let q = match opts.weight_quantizer {
+            WeightQuantizer::Rtn => fake_quant_per_channel(&rotated, opts.weight_bits, 1.0),
+            WeightQuantizer::RtnGrouped(g) => {
+                fake_quant_grouped(&rotated, opts.weight_bits, g, 1.0)
+            }
+            WeightQuantizer::Gptq | WeightQuantizer::GptqGrouped(_) => {
+                let hess = hess_rot
+                    .as_ref()
+                    .ok_or_else(|| PipelineError::MissingHessian(key.to_string()))?;
+                gptq_quantize(
+                    &rotated,
+                    hess,
+                    &GptqConfig {
+                        bits: opts.weight_bits,
+                        group: opts.weight_quantizer.group(),
+                        ..Default::default()
+                    },
+                )?
+            }
+        };
+        packed_bytes += PackedWeight::pack(&q, opts.weight_bits)?.nbytes();
+        out.push((wname, q));
+    }
+
+    // activation clip (LCT) or SmoothQuant's static scale
+    let clip = if matches!(opts.method, Method::SmoothQuant { .. }) {
+        // static per-tensor scale Delta = absmax/qmax over the (folded)
+        // calibration activations at this site
+        let absmax = sc.signed_absmax.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        (absmax / 7.0).max(1e-8)
+    } else if opts.lct && opts.act_bits < 16 && sc.sample.rows() > 0 {
+        let sample_rot = kron_rotate_rows(&sc.sample, &rot.r1, &rot.r2);
+        // concat of this site's just-quantized weights, in site_weights
+        // order — exactly what the serial loop read back out of `w`
+        let parts: Vec<&Tensor> = out.iter().map(|(_, t)| t).collect();
+        let wcat = Tensor::hcat(&parts)?;
+        search_act_clip(&sample_rot, &wcat, opts.act_bits, 12, 0.4)
+    } else {
+        1.0
+    };
+    Ok(SiteQuant { weights: out, packed_bytes, clip })
 }
 
 fn fp16_package(cfg: &ModelConfig, weights: &Weights) -> QuantizedModel {
@@ -393,6 +590,7 @@ fn fp16_package(cfg: &ModelConfig, weights: &Weights) -> QuantizedModel {
         calib_seconds: 0.0,
         transform_seconds: 0.0,
         weight_quant_seconds: 0.0,
+        stats: PipelineStats::default(),
         traces: BTreeMap::new(),
     }
 }
@@ -530,6 +728,55 @@ mod tests {
         }
         assert!(errs["sq"] < errs["rtn"],
                 "singlequant {} !< rtn {}", errs["sq"], errs["rtn"]);
+    }
+
+    #[test]
+    fn stats_cover_all_stages_and_lanes() {
+        let qm = run(Method::singlequant(), WeightQuantizer::Rtn);
+        assert_eq!(qm.stats.sites, 8);
+        assert!(qm.stats.lanes >= 1);
+        assert!((qm.total_seconds() - qm.stats.total_seconds()).abs() < 1e-9);
+        assert!((qm.transform_seconds
+                 - (qm.stats.fold_seconds + qm.stats.rotation_seconds)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn packages_are_bit_identical_across_thread_counts() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let calib = toks(600, 9);
+        let base = PipelineOptions {
+            method: Method::singlequant(),
+            lct: true,
+            calib_seqs: 3,
+            calib_len: 32,
+            threads: 1,
+            ..Default::default()
+        };
+        let reference = quantize(&cfg, &w, &calib, &base).unwrap();
+        for threads in [2usize, 5] {
+            let opts = PipelineOptions { threads, ..base.clone() };
+            let qm = quantize(&cfg, &w, &calib, &opts).unwrap();
+            for (name, t) in &reference.weights.map {
+                let bits = |x: &Tensor| x.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(t), bits(&qm.weights.map[name]), "threads={threads} {name}");
+            }
+            assert_eq!(reference.clips, qm.clips, "threads={threads}");
+            assert_eq!(reference.packed_bytes, qm.packed_bytes, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn rotation_builder_rejects_fp16_with_typed_error() {
+        let cfg = test_config();
+        let w = Weights::random_init(&cfg, 1);
+        let cal = crate::calib::run_calibration(&cfg, &w, &[toks(8, 1)], 7).unwrap();
+        let opts = PipelineOptions { method: Method::Fp16, ..Default::default() };
+        let err = build_rotation(&cfg, &w, &cal, 0, "qkv", "l00.qkv", &opts).unwrap_err();
+        assert!(err.to_string().contains("does not quantize"), "{err}");
+        let miss = build_rotation(&cfg, &w, &cal, 0, "qkv", "l99.nope",
+                                  &PipelineOptions::default()).unwrap_err();
+        assert!(miss.to_string().contains("no calibration record"), "{miss}");
     }
 
     #[test]

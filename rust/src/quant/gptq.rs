@@ -8,7 +8,7 @@
 //! SingleQuant rows use plain RTN, and the ablation shows RTN+rotations is
 //! competitive with GPTQ-based baselines.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use super::qlevels;
 use crate::tensor::{decomp, Tensor};
@@ -49,11 +49,17 @@ impl Hessian {
 }
 
 /// Quantize `w` ([in, out]) with GPTQ against Hessian `hess` (in-dim sized).
-/// Returns the fake-quantized (dequantized f32) weight.
+/// Returns the fake-quantized (dequantized f32) weight. In the rotated
+/// pipeline, `hess.h` is the sandwiched Rᵀ H R from `kron_sandwich` — the
+/// same in-dim basis the rotated weight lives in.
 pub fn gptq_quantize(w: &Tensor, hess: &Hessian, cfg: &GptqConfig) -> Result<Tensor> {
     let n = w.rows(); // input dim
     let c = w.cols(); // output dim
-    assert_eq!(hess.h.rows(), n);
+    ensure!(
+        hess.h.rows() == n && hess.h.cols() == n,
+        "GPTQ Hessian shape {:?} does not match the weight input dim {n}",
+        hess.h.shape()
+    );
     let (qmin, qmax) = qlevels(cfg.bits);
 
     // Damped Hessian -> inverse -> upper Cholesky (the GPTQ "Hinv" factor).

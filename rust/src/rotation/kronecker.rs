@@ -73,6 +73,19 @@ pub fn kron_rotate_weight(w: &Tensor, r1: &Tensor, r2: &Tensor) -> Tensor {
     kron_rotate_rows(&w.transpose(), r1, r2).transpose()
 }
 
+/// Two-sided Hessian sandwich (R1 ⊗ R2)ᵀ H (R1 ⊗ R2) without ever
+/// materializing the n×n Kronecker product. The left factor is exactly
+/// the weight transform ((R1⊗R2)ᵀ H, via [`kron_rotate_weight`]) and the
+/// right factor is the row transform (· (R1⊗R2), via
+/// [`kron_rotate_rows`]), so the whole sandwich costs
+/// O(n²·(n1 + n2)) — versus O(n³) for the two dense products plus O(n²)
+/// transient storage for the kron matrix itself. This is what the
+/// pipeline feeds GPTQ when quantizing in the rotated basis.
+pub fn kron_sandwich(h: &Tensor, r1: &Tensor, r2: &Tensor) -> Tensor {
+    assert_eq!(h.rows(), h.cols(), "kron_sandwich needs square H, got {:?}", h.shape());
+    kron_rotate_rows(&kron_rotate_weight(h, r1, r2), r1, r2)
+}
+
 /// FLOP count of the Kronecker application per token (the O(n^{3/2}) claim).
 pub fn kron_flops(n1: usize, n2: usize) -> usize {
     2 * (n1 * n1 * n2 + n1 * n2 * n2)
@@ -134,6 +147,42 @@ mod tests {
         let y = xr.matmul(&wr);
         assert!(y.sub(&y_ref).max_abs() < 1e-3,
                 "defect {}", y.sub(&y_ref).max_abs());
+    }
+
+    #[test]
+    fn sandwich_matches_dense_reference() {
+        // odd n1, non-square factors, and the degenerate 1-sized axes —
+        // every case must agree with the materialized kron sandwich
+        let mut rng = Rng::new(4);
+        for (n1, n2) in [(3usize, 4usize), (5, 2), (7, 8), (1, 8), (5, 1), (4, 4)] {
+            let n = n1 * n2;
+            let r1 = random_orthogonal(n1, &mut rng);
+            let r2 = random_orthogonal(n2, &mut rng);
+            let x = Tensor::randn(&[3 * n + 5, n], 0.6, &mut rng);
+            let h = x.matmul_tn(&x); // SPD, like a real calibration Hessian
+            let fast = kron_sandwich(&h, &r1, &r2);
+            let r = r1.kron(&r2);
+            let dense = r.transpose().matmul(&h.matmul(&r));
+            let tol = 1e-5 * dense.max_abs().max(1.0);
+            assert!(fast.sub(&dense).max_abs() < tol,
+                    "n1={n1} n2={n2}: defect {} tol {tol}", fast.sub(&dense).max_abs());
+        }
+    }
+
+    #[test]
+    fn sandwich_preserves_symmetry_and_trace() {
+        let mut rng = Rng::new(5);
+        let (n1, n2) = (3, 8);
+        let n = n1 * n2;
+        let r1 = random_orthogonal(n1, &mut rng);
+        let r2 = random_orthogonal(n2, &mut rng);
+        let x = Tensor::randn(&[64, n], 1.0, &mut rng);
+        let h = x.matmul_tn(&x);
+        let s = kron_sandwich(&h, &r1, &r2);
+        let tr_h: f32 = (0..n).map(|i| h.at(i, i)).sum();
+        let tr_s: f32 = (0..n).map(|i| s.at(i, i)).sum();
+        assert!((tr_h - tr_s).abs() < 1e-2 * tr_h.abs().max(1.0), "{tr_h} vs {tr_s}");
+        assert!(s.sub(&s.transpose()).max_abs() < 1e-4 * s.max_abs().max(1.0));
     }
 
     #[test]

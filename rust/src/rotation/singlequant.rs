@@ -21,7 +21,7 @@
 use crate::rotation::art::{art_rotation, art_rotation_pure};
 use crate::rotation::hadamard::hadamard_matrix;
 use crate::rotation::kronecker::kron_factor;
-use crate::rotation::urt::urt_rotation;
+use crate::rotation::urt::{urt_chains, urt_chains_rotate_rows};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -134,7 +134,11 @@ pub fn build_site_rotation(profile: &SiteProfile, cfg: &SingleQuantConfig) -> Si
     let r1 = if cfg.use_urt && n1 >= 2 {
         let no1 = axis_profile(&profile.median, n1, n2, true);
         let no1_rot = rotate_profile(&no1, &r_a);
-        r_a.matmul(&urt_rotation(&no1_rot).rotation)
+        // Givens fast path: Rᴬ·Rᵁ row-by-row through the URT chains —
+        // O(n1²) instead of the O(n1³) dense matmul against a dense Rᵁ.
+        let mut r1 = r_a;
+        urt_chains_rotate_rows(&mut r1, &urt_chains(&no1_rot), 0);
+        r1
     } else {
         r_a
     };
@@ -148,7 +152,10 @@ pub fn build_site_rotation(profile: &SiteProfile, cfg: &SingleQuantConfig) -> Si
     let r2 = if cfg.use_urt && cfg.urt_axis2 && n2 >= 2 {
         let no2 = axis_profile(&profile.median, n1, n2, false);
         let no2_rot = rotate_profile(&no2, &h);
-        h.matmul(&urt_rotation(&no2_rot).rotation)
+        // Same chain fast path as the n1 axis: H·Rᵁ without a dense Rᵁ.
+        let mut r2 = h;
+        urt_chains_rotate_rows(&mut r2, &urt_chains(&no2_rot), 0);
+        r2
     } else {
         h
     };

@@ -7,7 +7,7 @@
 //! O(n) construction, O(n log n) total via the chain representation.
 
 use crate::rotation::givens::{map_to_e1, GivensChain};
-use crate::tensor::kernels::givens_rotate_rows;
+use crate::tensor::kernels::{givens_rotate_rows, givens_rotate_rows_inv};
 use crate::tensor::{stats, Tensor};
 
 pub struct UrtResult {
@@ -18,6 +18,34 @@ pub struct UrtResult {
     /// Chains, kept for O(n)-per-vector application in analyses.
     pub v_chain: GivensChain,
     pub u_chain: GivensChain,
+}
+
+/// Chain-only form of Rᵁ = R_map · R'_mapᵀ — the Givens fast path. Both
+/// factors are (n−1)-rotation chains, so applying Rᵁ to T rows costs
+/// O(T·n) instead of the O(T·n²) dense matmul (or O(n³) to compose Rᵁ
+/// into another dense rotation).
+pub struct UrtChains {
+    /// V·v_chain = ‖V‖e₁ᵀ.
+    pub v_chain: GivensChain,
+    /// U·u_chain = ‖U‖e₁ᵀ; applied inverted to come back off the axis.
+    pub u_chain: GivensChain,
+    /// The uniform target the profile is rotated onto.
+    pub target: Vec<f32>,
+}
+
+/// Build the chain form of Rᵁ for profile `v` (Eq. 43–44, no dense n×n).
+pub fn urt_chains(v: &[f32]) -> UrtChains {
+    let u = uniform_target(v);
+    UrtChains { v_chain: map_to_e1(v), u_chain: map_to_e1(&u), target: u }
+}
+
+/// x ← x·Rᵁ for every row of `x`, via the chains: forward chain, then
+/// inverse chain, each fanned over the worker pool. Row results are
+/// independent of the partitioning, so this is bit-identical across
+/// thread counts (same contract as [`givens_rotate_rows`]).
+pub fn urt_chains_rotate_rows(x: &mut Tensor, ch: &UrtChains, threads: usize) {
+    givens_rotate_rows(x, &ch.v_chain, threads);
+    givens_rotate_rows_inv(x, &ch.u_chain, threads);
 }
 
 /// The centered uniform template q_k = (2k − n − 1)/n, k = 1..n (Eq. 41).
@@ -47,18 +75,13 @@ pub fn uniform_target(v: &[f32]) -> Vec<f32> {
 /// V·R_map·R'_mapᵀ = U (Eq. 43–44).
 pub fn urt_rotation(v: &[f32]) -> UrtResult {
     let n = v.len();
-    let u = uniform_target(v);
-    let v_chain = map_to_e1(v);
-    let u_chain = map_to_e1(&u);
-    // Dense form: rows of Rᵁ are e_r -> apply v_chain -> apply u_chain⁻¹.
-    // The forward chain fans out across cores (O(n−1) per row); the
-    // inverse has no bulk kernel yet, so it stays a per-row loop.
+    let UrtChains { v_chain, u_chain, target } = urt_chains(v);
+    // Dense form: rows of Rᵁ are e_r -> apply v_chain -> apply u_chain⁻¹,
+    // both directions through the bulk row kernels.
     let mut rot = Tensor::eye(n);
     givens_rotate_rows(&mut rot, &v_chain, 0);
-    for r in 0..n {
-        u_chain.apply_row_inverse(rot.row_mut(r));
-    }
-    UrtResult { rotation: rot, target: u, v_chain, u_chain }
+    givens_rotate_rows_inv(&mut rot, &u_chain, 0);
+    UrtResult { rotation: rot, target, v_chain, u_chain }
 }
 
 /// Apply Rᵁ to a row vector in O(n) via the chains (no dense matmul).
@@ -135,6 +158,26 @@ mod tests {
         for i in 0..16 {
             assert!((fast[i] - dense[i]).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn bulk_chain_rows_match_dense_rotation() {
+        let mut rng = Rng::new(5);
+        let v = rng.normal_vec(24, 1.5);
+        let res = urt_rotation(&v);
+        let ch = urt_chains(&v);
+        let x = Tensor::randn(&[7, 24], 1.0, &mut rng);
+        let dense = x.matmul(&res.rotation);
+        let mut fast = x.clone();
+        urt_chains_rotate_rows(&mut fast, &ch, 0);
+        assert!(fast.sub(&dense).max_abs() < 1e-3,
+                "defect {}", fast.sub(&dense).max_abs());
+        // and per-row chain application agrees bit-for-bit with the bulk
+        let mut rows = x.clone();
+        for r in 0..rows.rows() {
+            urt_apply_row(&res, rows.row_mut(r));
+        }
+        assert_eq!(rows.data(), fast.data());
     }
 
     #[test]

@@ -164,6 +164,26 @@ pub fn matmul_packed_with(
 /// Apply a Givens chain to every row of `x` in place: O(len(chain)) per
 /// row instead of the O(n²) dense-rotation matmul.
 pub fn givens_rotate_rows(x: &mut Tensor, chain: &GivensChain, threads: usize) {
+    givens_rows_dispatch(x, chain, threads, |ch, row| ch.apply_row(row));
+}
+
+/// Inverse-chain companion to [`givens_rotate_rows`]: applies
+/// `chain.apply_row_inverse` to every row, i.e. multiplies each row by
+/// the transpose of the chain's rotation. Same partitioning, same
+/// bit-identical-across-thread-counts contract (rows are independent).
+pub fn givens_rotate_rows_inv(x: &mut Tensor, chain: &GivensChain, threads: usize) {
+    givens_rows_dispatch(x, chain, threads, |ch, row| ch.apply_row_inverse(row));
+}
+
+/// Shared row-partitioned dispatcher for the two chain directions. Each
+/// row's result depends only on that row and the chain, so the chunk
+/// boundaries chosen here can never change the numbers.
+fn givens_rows_dispatch(
+    x: &mut Tensor,
+    chain: &GivensChain,
+    threads: usize,
+    apply: impl Fn(&GivensChain, &mut [f32]) + Sync,
+) {
     let t = x.rows();
     let n = x.cols();
     if t == 0 || n == 0 {
@@ -173,7 +193,7 @@ pub fn givens_rotate_rows(x: &mut Tensor, chain: &GivensChain, threads: usize) {
     // ~6 flops per rotation; below the parallel threshold dispatch wins
     if threads <= 1 || t * chain.len() * 6 < PAR_THRESHOLD_FLOPS {
         for i in 0..t {
-            chain.apply_row(x.row_mut(i));
+            apply(chain, x.row_mut(i));
         }
         return;
     }
@@ -189,7 +209,7 @@ pub fn givens_rotate_rows(x: &mut Tensor, chain: &GivensChain, threads: usize) {
         let rows =
             unsafe { std::slice::from_raw_parts_mut(base.get().add(lo * n), (hi - lo) * n) };
         for row in rows.chunks_mut(n) {
-            chain.apply_row(row);
+            apply(chain, row);
         }
     });
 }
@@ -292,5 +312,37 @@ mod tests {
         let mut par = x.clone();
         givens_rotate_rows(&mut par, &chain, 8);
         assert_eq!(par.data(), serial.data());
+    }
+
+    #[test]
+    fn givens_inverse_rows_match_dense_transpose() {
+        let mut rng = Rng::new(6);
+        let chain = map_to_e1(&rng.normal_vec(16, 1.0));
+        let x = Tensor::randn(&[9, 16], 1.0, &mut rng);
+        let dense = x.matmul(&chain.to_matrix(16).transpose());
+        for threads in [1usize, 3] {
+            let mut got = x.clone();
+            givens_rotate_rows_inv(&mut got, &chain, threads);
+            assert!(got.sub(&dense).max_abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn givens_inverse_undoes_forward_bit_for_bit_across_threads() {
+        // forward then inverse is the identity up to fp rounding, and the
+        // parallel path must agree with serial exactly
+        let mut rng = Rng::new(8);
+        let chain = map_to_e1(&rng.normal_vec(64, 1.0));
+        let x = Tensor::randn(&[128, 64], 1.0, &mut rng);
+        let mut serial = x.clone();
+        givens_rotate_rows(&mut serial, &chain, 1);
+        givens_rotate_rows_inv(&mut serial, &chain, 1);
+        assert!(serial.sub(&x).max_abs() < 1e-4);
+        for threads in [2usize, 8] {
+            let mut par = x.clone();
+            givens_rotate_rows(&mut par, &chain, threads);
+            givens_rotate_rows_inv(&mut par, &chain, threads);
+            assert_eq!(par.data(), serial.data(), "threads={threads}");
+        }
     }
 }

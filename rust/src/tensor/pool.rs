@@ -215,6 +215,33 @@ impl WorkerPool {
             panic!("worker pool job panicked");
         }
     }
+
+    /// Like [`WorkerPool::run`], but each chunk produces a value and the
+    /// results come back in chunk-index order regardless of which worker
+    /// ran what. This is the fan-out/ordered-commit primitive the
+    /// quantization pipeline builds its determinism contract on: chunk
+    /// bodies are pure functions of their index, so the returned `Vec`
+    /// is bit-identical for any lane count or claim interleaving.
+    pub fn run_collect<T, F>(&self, chunks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(chunks);
+        slots.resize_with(chunks, || None);
+        let ptr = SendPtr::new(slots.as_mut_ptr());
+        self.run(chunks, |i| {
+            let v = f(i);
+            // SAFETY: chunk i writes only slot i (disjoint per chunk) and
+            // `slots` outlives the run call, which blocks until every
+            // chunk finishes.
+            unsafe { *ptr.get().add(i) = Some(v) };
+        });
+        slots
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| unreachable!("pool chunk left its result slot empty")))
+            .collect()
+    }
 }
 
 impl Drop for WorkerPool {
@@ -433,6 +460,26 @@ mod tests {
         let ptr = SendPtr::new(live.as_mut_ptr());
         pool.run(chunks, |i| fill(ptr, i));
         assert_eq!(live, reference, "live pool diverged from the virtual schedule");
+    }
+
+    #[test]
+    fn run_collect_returns_in_index_order() {
+        let pool = WorkerPool::new(4);
+        let out = pool.run_collect(23, |i| i * i);
+        assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
+        // result order must be index order even when claim order is not
+        let serial = WorkerPool::new(1).run_collect(23, |i| i * i);
+        assert_eq!(out, serial);
+    }
+
+    #[test]
+    fn run_collect_handles_results_and_empty_jobs() {
+        let pool = WorkerPool::new(3);
+        let out: Vec<Result<usize, String>> =
+            pool.run_collect(5, |i| if i == 3 { Err(format!("chunk {i}")) } else { Ok(i) });
+        assert_eq!(out.iter().filter(|r| r.is_err()).count(), 1);
+        let none: Vec<usize> = pool.run_collect(0, |i| i);
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Golden end-to-end quantization: every method quantizes the built-in
+//! demo checkpoint, loads through the native engine, and greedily
+//! decodes a fixed prompt — twice. Both the produced artifacts (weights,
+//! rotations, clips, packed bytes) and the decoded tokens must be
+//! bit-identical between runs, and the whole pipeline must produce
+//! bit-identical packages at every `--threads` setting (the determinism
+//! contract of the parallel fan-out / ordered-commit pipeline).
+//!
+//! No artifacts, no PJRT — runs in plain `cargo test` on a bare machine.
+
+use singlequant::model::{ModelConfig, NativeModel, Weights};
+use singlequant::pipeline::{quantize, Method, PipelineOptions, QuantizedModel};
+use singlequant::quant::WeightQuantizer;
+use singlequant::util::rng::Rng;
+
+/// Small-but-real pipeline budget on the demo config.
+fn opts(method: Method) -> PipelineOptions {
+    PipelineOptions {
+        method,
+        calib_seqs: 3,
+        calib_len: 24,
+        ..Default::default()
+    }
+}
+
+fn demo_inputs() -> (ModelConfig, Weights, Vec<u16>) {
+    let cfg = ModelConfig::demo();
+    let weights = Weights::random_init(&cfg, 0x5142);
+    let mut rng = Rng::new(7);
+    let calib: Vec<u16> = (0..2048).map(|_| rng.below(256) as u16).collect();
+    (cfg, weights, calib)
+}
+
+/// Bit-level equality of two quantized packages. f32 payloads are
+/// compared through `to_bits` so -0.0 vs 0.0 or NaN drift cannot hide.
+fn assert_identical(a: &QuantizedModel, b: &QuantizedModel, what: &str) {
+    assert_eq!(a.method_label, b.method_label, "{what}: method label");
+    assert_eq!(a.packed_bytes, b.packed_bytes, "{what}: packed bytes");
+    assert_eq!(a.fp_bytes, b.fp_bytes, "{what}: fp bytes");
+
+    let akeys: Vec<&String> = a.weights.map.keys().collect();
+    let bkeys: Vec<&String> = b.weights.map.keys().collect();
+    assert_eq!(akeys, bkeys, "{what}: weight key sets");
+    for (name, ta) in &a.weights.map {
+        let tb = &b.weights.map[name];
+        assert_eq!(ta.shape(), tb.shape(), "{what}: shape of {name}");
+        let same = ta
+            .data()
+            .iter()
+            .zip(tb.data())
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "{what}: weight {name} differs at the bit level");
+    }
+
+    assert_eq!(
+        a.rots.keys().collect::<Vec<_>>(),
+        b.rots.keys().collect::<Vec<_>>(),
+        "{what}: rotation key sets"
+    );
+    for (key, ra) in &a.rots {
+        let rb = &b.rots[key];
+        for (fa, fb, which) in [(&ra.r1, &rb.r1, "r1"), (&ra.r2, &rb.r2, "r2")] {
+            assert_eq!(fa.shape(), fb.shape(), "{what}: {key}.{which} shape");
+            let same = fa
+                .data()
+                .iter()
+                .zip(fb.data())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "{what}: rotation {key}.{which} differs");
+        }
+    }
+
+    assert_eq!(
+        a.clips.keys().collect::<Vec<_>>(),
+        b.clips.keys().collect::<Vec<_>>(),
+        "{what}: clip key sets"
+    );
+    for (key, ca) in &a.clips {
+        assert_eq!(
+            ca.to_bits(),
+            b.clips[key].to_bits(),
+            "{what}: clip {key} differs"
+        );
+    }
+}
+
+fn argmax(row: &[f32]) -> u16 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as u16
+}
+
+/// Load the package into the native engine and greedily decode a fixed
+/// prompt: prefill, then `steps` argmax continuations.
+fn greedy_decode(qm: &QuantizedModel, weight_bits: u32, steps: usize) -> Vec<u16> {
+    let prompt: Vec<u16> = vec![72, 101, 108, 108, 111, 32, 119, 111];
+    let model = NativeModel::from_quantized(qm, weight_bits, 2).expect("native model");
+    let mut kv = model.new_kv();
+    let logits = model.prefill(&mut kv, &prompt).expect("prefill");
+    let mut tok = argmax(logits.row(logits.rows() - 1));
+    let mut out = vec![tok];
+    for _ in 1..steps {
+        let next = model.decode(&mut kv, tok).expect("decode");
+        tok = argmax(&next);
+        out.push(tok);
+    }
+    out
+}
+
+#[test]
+fn every_method_quantizes_and_decodes_reproducibly() {
+    let (cfg, weights, calib) = demo_inputs();
+    for (label, method) in [
+        ("rtn", Method::Rtn),
+        ("smoothquant", Method::SmoothQuant { alpha: 0.5 }),
+        ("awq", Method::Awq { grid: 4 }),
+        ("quarot", Method::QuaRot),
+        ("duquant", Method::DuQuant { steps: 4 }),
+        ("singlequant", Method::singlequant()),
+    ] {
+        let o = opts(method);
+        let qm1 = quantize(&cfg, &weights, &calib, &o).expect(label);
+        let qm2 = quantize(&cfg, &weights, &calib, &o).expect(label);
+        assert_identical(&qm1, &qm2, label);
+
+        let t1 = greedy_decode(&qm1, o.weight_bits, 8);
+        let t2 = greedy_decode(&qm2, o.weight_bits, 8);
+        assert_eq!(t1.len(), 8, "{label}: decode length");
+        assert_eq!(t1, t2, "{label}: greedy decode diverged between runs");
+    }
+}
+
+#[test]
+fn thread_counts_produce_bit_identical_packages() {
+    let (cfg, weights, calib) = demo_inputs();
+    let variants: [(&str, PipelineOptions); 2] = [
+        (
+            "singlequant+lct",
+            PipelineOptions { lct: true, ..opts(Method::singlequant()) },
+        ),
+        (
+            "rtn+gptq",
+            PipelineOptions {
+                weight_quantizer: WeightQuantizer::Gptq,
+                ..opts(Method::Rtn)
+            },
+        ),
+    ];
+    for (label, base) in variants {
+        let serial = quantize(&cfg, &weights, &calib, &PipelineOptions {
+            threads: 1,
+            ..base.clone()
+        })
+        .expect(label);
+        let tokens_serial = greedy_decode(&serial, base.weight_bits, 8);
+        for t in [2usize, 4] {
+            let par = quantize(&cfg, &weights, &calib, &PipelineOptions {
+                threads: t,
+                ..base.clone()
+            })
+            .expect(label);
+            assert_identical(&serial, &par, &format!("{label} threads={t}"));
+            assert_eq!(
+                tokens_serial,
+                greedy_decode(&par, base.weight_bits, 8),
+                "{label} threads={t}: decode diverged"
+            );
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! `util::prop`): the mathematical guarantees the paper's constructions
 //! rest on, checked over randomized inputs.
 
+use singlequant::calib::run_calibration_pool;
 use singlequant::kv::{BlockPool, KvCache, PageTable, PagedSlot};
 use singlequant::model::forward::{forward_score, QuantCtx};
 use singlequant::model::{ModelConfig, NativeModel, Weights};
@@ -12,13 +13,16 @@ use singlequant::rotation::art::{art_rotation, art_rotation_pure};
 use singlequant::rotation::baselines::{duquant_rotation, quarot_rotation};
 use singlequant::rotation::givens::{lemma1_givens, map_to_e1};
 use singlequant::rotation::hadamard::{fwht_row, hadamard_matrix};
-use singlequant::rotation::kronecker::{kron_factor, kron_rotate_rows, kron_rotate_weight};
+use singlequant::rotation::kronecker::{
+    kron_factor, kron_rotate_rows, kron_rotate_weight, kron_sandwich,
+};
 use singlequant::rotation::singlequant::{build_site_rotation, SingleQuantConfig, SiteProfile};
 use singlequant::rotation::urt::{uniform_target, urt_rotation};
 use singlequant::tensor::kernels::{
-    givens_rotate_rows, matmul_packed, matmul_packed_with, matmul_threaded,
-    matmul_threaded_with,
+    givens_rotate_rows, givens_rotate_rows_inv, matmul_packed, matmul_packed_with,
+    matmul_threaded, matmul_threaded_with,
 };
+use singlequant::tensor::pool::WorkerPool;
 use singlequant::tensor::{decomp, simd, stats, Tensor};
 use singlequant::util::prop::{close, ensure, forall};
 use singlequant::util::rng::Rng;
@@ -201,6 +205,30 @@ fn prop_kron_rotation_preserves_product() {
         let scale = y_ref.max_abs().max(1.0);
         ensure(y.sub(&y_ref).max_abs() / scale < 5e-3,
                format!("Eq.1 violated by {}", y.sub(&y_ref).max_abs()))
+    });
+}
+
+#[test]
+fn prop_kron_sandwich_matches_dense_sandwich() {
+    // (r1 ⊗ r2)ᵀ H (r1 ⊗ r2) via the reshaped two-sided small matmuls must
+    // agree with the materialized kron — odd factors, non-square splits,
+    // and the degenerate 1-sized axes included.
+    forall("kron-sandwich", 30, 0x5179, |rng| {
+        let n1 = 1 + rng.below(7);
+        let n2 = 1 + rng.below(7);
+        let n = n1 * n2;
+        let r1 = decomp::random_orthogonal(n1, rng);
+        let r2 = decomp::random_orthogonal(n2, rng);
+        // SPD Hessian shape, like the calibration Gram it stands in for
+        let x = Tensor::randn(&[n + 3, n], 1.0, rng);
+        (r1, r2, x.matmul_tn(&x))
+    }, |(r1, r2, h)| {
+        let fast = kron_sandwich(h, r1, r2);
+        let r = r1.kron(r2);
+        let dense = r.transpose().matmul(&h.matmul(&r));
+        let tol = 1e-5 * dense.max_abs().max(1.0);
+        ensure(fast.sub(&dense).max_abs() <= tol,
+               format!("sandwich off by {} (tol {tol})", fast.sub(&dense).max_abs()))
     });
 }
 
@@ -404,6 +432,41 @@ fn prop_givens_chain_rows_match_dense_rotation() {
 }
 
 #[test]
+fn prop_givens_inverse_rows_match_transpose_and_are_lane_invariant() {
+    // The URT fast path's second half: applying a chain's inverse
+    // (reversed transposed plane rotations) equals the dense Rᵀ matmul,
+    // forward-then-inverse is the identity, and — the determinism
+    // contract — the thread count never changes a single bit.
+    forall("givens-inv-rows", 40, 0x5177, |rng| {
+        let n = 2 + rng.below(30);
+        let chain = map_to_e1(&rng.normal_vec(n, 1.0));
+        let x = Tensor::randn(&[1 + rng.below(8), n], 1.0, rng);
+        (chain, x, 1 + rng.below(6))
+    }, |(chain, x, threads)| {
+        let dense = x.matmul(&chain.to_matrix(x.cols()).transpose());
+        let mut inv = x.clone();
+        givens_rotate_rows_inv(&mut inv, chain, *threads);
+        close(inv.data(), dense.data(), 1e-3)?;
+
+        let mut rt = x.clone();
+        givens_rotate_rows(&mut rt, chain, *threads);
+        givens_rotate_rows_inv(&mut rt, chain, *threads);
+        close(rt.data(), x.data(), 1e-3)?;
+
+        let mut serial_inv = x.clone();
+        givens_rotate_rows_inv(&mut serial_inv, chain, 1);
+        ensure(serial_inv.data() == inv.data(),
+               format!("inverse rows diverged at {threads} threads"))?;
+        let mut serial_fwd = x.clone();
+        givens_rotate_rows(&mut serial_fwd, chain, 1);
+        let mut fwd = x.clone();
+        givens_rotate_rows(&mut fwd, chain, *threads);
+        ensure(serial_fwd.data() == fwd.data(),
+               format!("forward rows diverged at {threads} threads"))
+    });
+}
+
+#[test]
 fn prop_simd_packed_matmul_matches_scalar_kernel() {
     // The ISSUE-7 microkernel contract: the best SIMD kernel agrees with
     // the scalar kernel within the 1e-4 dequant tolerance on every packed
@@ -452,6 +515,47 @@ fn prop_simd_dense_matmul_is_bit_identical_to_scalar() {
         let vector = matmul_threaded_with(simd::best(), a, b, *threads);
         ensure(scalar.data() == vector.data(),
                "dense matmul bits differ between kernels")
+    });
+}
+
+#[test]
+fn prop_pool_calibration_is_bit_identical_across_lanes() {
+    // The stage-1 determinism contract: per-sequence traces fan out over
+    // any number of pool lanes, but the fixed-order reduction makes the
+    // statistics (absmax, Hessian, reservoir, counters) bit-equal to the
+    // single-lane run — including 1-sequence and remainder-chunk shapes.
+    let cfg = ModelConfig::demo();
+    let w = Weights::random_init(&cfg, 3);
+    forall("calib-lanes", 6, 0x5178, |rng| {
+        let n_seqs = 1 + rng.below(5);
+        let seqs: Vec<Vec<u16>> = (0..n_seqs)
+            .map(|_| (0..8 + rng.below(16)).map(|_| rng.below(260) as u16).collect())
+            .collect();
+        (seqs, 2 + rng.below(7), rng.next_u64())
+    }, |(seqs, lanes, seed)| {
+        let serial = run_calibration_pool(&cfg, &w, seqs, *seed, true, &WorkerPool::new(1))
+            .map_err(|e| e.to_string())?;
+        let par = run_calibration_pool(&cfg, &w, seqs, *seed, true, &WorkerPool::new(*lanes))
+            .map_err(|e| e.to_string())?;
+        ensure(serial.n_tokens == par.n_tokens && serial.n_sequences == par.n_sequences,
+               "corpus counters diverge")?;
+        for (key, a) in &serial.sites {
+            let b = &par.sites[key];
+            ensure(a.token_count == b.token_count, format!("{key}: token_count"))?;
+            ensure(a.signed_absmax.len() == b.signed_absmax.len()
+                       && a.signed_absmax.iter().zip(&b.signed_absmax)
+                              .all(|(x, y)| x.to_bits() == y.to_bits()),
+                   format!("{key}: absmax bits diverge at {lanes} lanes"))?;
+            ensure(a.hessian.shape() == b.hessian.shape()
+                       && a.hessian.data().iter().zip(b.hessian.data())
+                              .all(|(x, y)| x.to_bits() == y.to_bits()),
+                   format!("{key}: hessian bits diverge at {lanes} lanes"))?;
+            ensure(a.sample.shape() == b.sample.shape()
+                       && a.sample.data().iter().zip(b.sample.data())
+                              .all(|(x, y)| x.to_bits() == y.to_bits()),
+                   format!("{key}: reservoir bits diverge at {lanes} lanes"))?;
+        }
+        Ok(())
     });
 }
 
